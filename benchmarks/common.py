@@ -1,0 +1,39 @@
+"""Shared benchmark plumbing: timing, CSV rows, report files."""
+from __future__ import annotations
+
+import csv
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, Iterable, List
+
+REPORT_DIR = Path(__file__).resolve().parents[1] / "reports" / "bench"
+
+
+class Rows:
+    """Collects (name, us_per_call, derived) rows + a rich JSON sidecar."""
+
+    def __init__(self, bench: str):
+        self.bench = bench
+        self.rows: List[Dict[str, Any]] = []
+
+    def add(self, name: str, us_per_call: float, derived: str, **extra) -> None:
+        self.rows.append(
+            {"name": name, "us_per_call": us_per_call, "derived": derived, **extra}
+        )
+
+    def emit(self) -> None:
+        REPORT_DIR.mkdir(parents=True, exist_ok=True)
+        for r in self.rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        path = REPORT_DIR / f"{self.bench}.json"
+        path.write_text(json.dumps(self.rows, indent=1, default=str))
+
+
+def time_call(fn, *args, repeat: int = 3, **kw) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best

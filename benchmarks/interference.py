@@ -1,0 +1,50 @@
+"""The Tseng-et-al. trade-off (paper §2): I/O threads vs interference.
+
+More flush threads per active backend drain the node faster but steal
+CPU/network from the application.  Sweeps io_threads and the
+application's NIC load; reports (flush duration, app slowdown) pairs —
+the frontier the co-design argument is about.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Rows
+from repro.core import make_plan, simulate_flush, theta_like
+
+GiB = 1 << 30
+
+
+def run(nodes: int = 64, ppn: int = 8) -> Rows:
+    rows = Rows("interference")
+    for app_net in (0.0, 0.5):
+        cluster = theta_like(nodes, ppn)
+        cluster = cluster.with_(
+            node=dataclasses.replace(cluster.node, app_net_load=app_net)
+        )
+        sizes = [GiB] * cluster.world_size
+        for strat, kw in [
+            ("file_per_process", {}),
+            ("stripe_aligned", {"pipeline_chunk": 256 << 20}),
+            ("mpiio", {"chunk_stripes": 64}),
+        ]:
+            for io_threads in (1, 2, 4, 8):
+                plan = make_plan(strat, cluster, sizes, **kw)
+                rep = simulate_flush(plan, io_threads=io_threads)
+                rows.add(
+                    f"interf/{strat}/net{app_net}/t{io_threads}",
+                    rep.flush_time * 1e6,
+                    f"slowdown{rep.app_slowdown:.3f}",
+                    strategy=strat, io_threads=io_threads,
+                    app_net_load=app_net, flush_time=rep.flush_time,
+                    flush_bw=rep.flush_bw, app_slowdown=rep.app_slowdown,
+                )
+    return rows
+
+
+def main() -> None:
+    run().emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU: correctness-
+path timing only; the derived column reports work size per call)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, time_call
+from repro.kernels.checksum import checksum_u32
+from repro.kernels.delta import xor_delta
+from repro.kernels.quantize import dequantize, quantize
+
+
+def run(mib: int = 1) -> Rows:
+    rows = Rows("kernels")
+    n_words = mib * (1 << 20) // 4
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.integers(0, 2**32, n_words, dtype=np.uint32))
+    x = jnp.asarray(rng.standard_normal(n_words).astype(np.float32))
+    w2 = jnp.asarray(rng.integers(0, 2**32, n_words, dtype=np.uint32))
+
+    jax.block_until_ready(checksum_u32(w))
+    dt = time_call(lambda: jax.block_until_ready(checksum_u32(w)))
+    rows.add("kernel/checksum_u32", dt * 1e6, f"{mib}MiB")
+
+    q, s = quantize(x)
+    jax.block_until_ready((q, s))
+    dt = time_call(lambda: jax.block_until_ready(quantize(x)))
+    rows.add("kernel/quantize_int8", dt * 1e6, f"{mib}MiB_f32")
+
+    dt = time_call(lambda: jax.block_until_ready(dequantize(q, s, n=n_words)))
+    rows.add("kernel/dequantize_int8", dt * 1e6, f"{mib}MiB_f32")
+
+    jax.block_until_ready(xor_delta(w, w2)[0])
+    dt = time_call(lambda: jax.block_until_ready(xor_delta(w, w2)[0]))
+    rows.add("kernel/xor_delta", dt * 1e6, f"{mib}MiB")
+    return rows
+
+
+def main() -> None:
+    run().emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Figure 1: local checkpointing phase throughput (blocking).
+
+Increasing processes per node, 1 GiB per rank, Theta-like testbed.
+All VELOC-based strategies write to node-local storage (the prefix sum
+costs ~nothing); GIO writes synchronously straight to the PFS.
+Higher is better.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Rows
+from repro.core import make_plan, simulate_flush, theta_like
+
+GiB = 1 << 30
+
+STRATS = [
+    ("file_per_process", {}),
+    ("posix", {}),
+    ("mpiio", {"chunk_stripes": 64}),
+    ("stripe_aligned", {"pipeline_chunk": 256 << 20}),
+    ("gio_sync", {"chunk_stripes": 64}),
+]
+
+
+def run(nodes: int = 64, ppn_list=(1, 2, 4, 8, 16), io_threads: int = 4) -> Rows:
+    rows = Rows("local_phase")
+    for ppn in ppn_list:
+        cluster = theta_like(nodes, ppn)
+        sizes = [GiB] * cluster.world_size
+        for strat, kw in STRATS:
+            plan = make_plan(strat, cluster, sizes, **kw)
+            rep = simulate_flush(plan, io_threads=io_threads)
+            rows.add(
+                f"fig1/local/{strat}/n{nodes}xppn{ppn}",
+                rep.local_time * 1e6,
+                f"{rep.local_bw / 1e9:.1f}GBps",
+                nodes=nodes, ppn=ppn, strategy=strat,
+                local_bw=rep.local_bw, local_time=rep.local_time,
+            )
+    return rows
+
+
+def main() -> None:
+    run().emit()
+
+
+if __name__ == "__main__":
+    main()

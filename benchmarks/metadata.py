@@ -1,0 +1,44 @@
+"""The §1 motivation: metadata pressure of N files vs 1 aggregated file.
+
+Reports metadata ops and MDS drain time per checkpoint at increasing
+rank counts — the regime where one-file-per-process melts the metadata
+server while aggregation stays flat.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Rows
+from repro.core import make_plan, theta_like
+from repro.core.sim import metadata_schedule
+
+GiB = 1 << 30
+
+
+def run(ppn: int = 16, node_list=(64, 128, 256, 512)) -> Rows:
+    rows = Rows("metadata")
+    for nodes in node_list:
+        cluster = theta_like(nodes, ppn)
+        sizes = [GiB] * cluster.world_size
+        for strat, kw in [
+            ("file_per_process", {}),
+            ("stripe_aligned", {"pipeline_chunk": 1 << 30}),
+        ]:
+            plan = make_plan(strat, cluster, sizes, **kw)
+            sched = metadata_schedule(plan)
+            drain = max(sched.values(), default=0.0)
+            rows.add(
+                f"metadata/{strat}/ranks{cluster.world_size}",
+                drain * 1e6,
+                f"{plan.metadata_ops()}ops_{plan.n_files}files",
+                nodes=nodes, ppn=ppn, strategy=strat,
+                metadata_ops=plan.metadata_ops(), n_files=plan.n_files,
+                mds_drain_s=drain,
+            )
+    return rows
+
+
+def main() -> None:
+    run().emit()
+
+
+if __name__ == "__main__":
+    main()

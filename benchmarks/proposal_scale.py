@@ -1,0 +1,77 @@
+"""Paper §3 claim: the stripe-aligned async strategy at scale.
+
+Sweeps node count (fixed ppn), non-uniform checkpoint sizes and loaded
+nodes (exercising election criteria 1+2), and the leader count M.
+Reports flush throughput + the metadata/file-count win over
+file-per-process.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.core import make_plan, simulate_flush, theta_like
+
+GiB = 1 << 30
+
+
+def run(ppn: int = 8, node_list=(16, 32, 64, 128), io_threads: int = 4) -> Rows:
+    rows = Rows("proposal_scale")
+    rng = np.random.default_rng(0)
+    for nodes in node_list:
+        cluster = theta_like(nodes, ppn)
+        # heterogeneous checkpoint sizes (0.5-1.5 GiB) + 20% loaded nodes
+        sizes = rng.integers(GiB // 2, 3 * GiB // 2, cluster.world_size).tolist()
+        load = np.where(rng.random(nodes) < 0.2, 0.5, 0.0).tolist()
+        cluster = cluster.with_(node_load=load)
+        for strat, kw in [
+            ("file_per_process", {}),
+            ("stripe_aligned", {"pipeline_chunk": 256 << 20}),
+        ]:
+            plan = make_plan(strat, cluster, sizes, **kw)
+            rep = simulate_flush(plan, io_threads=io_threads)
+            rows.add(
+                f"s3/scale/{strat}/n{nodes}xppn{ppn}",
+                rep.flush_time * 1e6,
+                f"{rep.flush_bw / 1e9:.1f}GBps",
+                nodes=nodes, ppn=ppn, strategy=strat,
+                flush_bw=rep.flush_bw, n_files=rep.n_files,
+                metadata_ops=rep.metadata_ops,
+                network_gib=rep.network_bytes / GiB,
+            )
+    # leader count sweep at 64 nodes (observation 1: match I/O servers?)
+    cluster = theta_like(64, ppn)
+    sizes = [GiB] * cluster.world_size
+    for m in (8, 16, 32, 48, 64):
+        plan = make_plan(
+            "stripe_aligned", cluster, sizes, n_leaders=m,
+            pipeline_chunk=256 << 20,
+        )
+        rep = simulate_flush(plan, io_threads=io_threads)
+        rows.add(
+            f"s3/leaders/m{m}/n64xppn{ppn}",
+            rep.flush_time * 1e6,
+            f"{rep.flush_bw / 1e9:.1f}GBps",
+            m_leaders=m, flush_bw=rep.flush_bw,
+            network_gib=rep.network_bytes / GiB,
+        )
+    # MPI-IO aggregator-count ablation (ADIO cb_nodes analogue)
+    for m in (8, 16, 32, 48, 64):
+        plan = make_plan("mpiio", cluster, sizes, n_leaders=m, chunk_stripes=64)
+        rep = simulate_flush(plan, io_threads=io_threads)
+        rows.add(
+            f"mpiio/leaders/m{m}/n64xppn{ppn}",
+            rep.flush_time * 1e6,
+            f"{rep.flush_bw / 1e9:.1f}GBps",
+            m_leaders=m, flush_bw=rep.flush_bw,
+            network_gib=rep.network_bytes / GiB,
+        )
+    return rows
+
+
+def main() -> None:
+    run().emit()
+
+
+if __name__ == "__main__":
+    main()

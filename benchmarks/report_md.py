@@ -1,0 +1,428 @@
+"""Generate EXPERIMENTS.md from the report JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report_md > EXPERIMENTS.md
+
+Narrative sections are embedded here; tables regenerate from
+reports/dryrun*/ and reports/bench/.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = ROOT / "reports" / "dryrun"
+DRY_BASE = ROOT / "reports" / "dryrun_baseline"
+BENCH = ROOT / "reports" / "bench"
+
+ARCH_ORDER = [
+    "xlstm-350m", "qwen2-72b", "llama3-405b", "qwen1.5-0.5b", "tinyllama-1.1b",
+    "llava-next-mistral-7b", "qwen2-moe-a2.7b", "llama4-scout-17b-a16e",
+    "recurrentgemma-2b", "whisper-small",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(d: Path):
+    out = {}
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def _g(x, *keys, default=None):
+    for k in keys:
+        if x is None:
+            return default
+        x = x.get(k)
+    return x if x is not None else default
+
+
+def dryrun_table(recs, mesh):
+    lines = [
+        "| arch | shape | status | compile (s) | bytes/device | HLO flops/dev | collectives/dev |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skip":
+                lines.append(f"| {a} | {s} | SKIP (full attention @500k) | — | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {a} | {s} | **ERROR** | — | — | — | — |")
+                continue
+            mem = r["memory"]["per_device_bytes"] / 2**30
+            fl = _g(r, "roofline", "flops_per_dev", default=0) / 1e12
+            co = _g(r, "roofline", "coll_bytes_per_dev", default=0) / 2**30
+            lines.append(
+                f"| {a} | {s} | OK | {r['compile_s']:.1f} | {mem:.2f} GiB "
+                f"| {fl:.1f} T | {co:.1f} GiB |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="pod16x16"):
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant "
+        "| MODEL_FLOPS/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None or r["status"] != "ok":
+                continue
+            rf = r["roofline"]
+            lines.append(
+                f"| {a} | {s} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} "
+                f"| {rf['collective_s']:.3f} | {rf['dominant']} "
+                f"| {rf['useful_flops_ratio']:.2f} | {rf['roofline_fraction']:.3f} |"
+            )
+    return "\n".join(lines)
+
+
+def bench_table(name, key_metric, fmt, group=None):
+    p = BENCH / f"{name}.json"
+    if not p.exists():
+        return f"*(run `python -m benchmarks.run --only {name}` to regenerate)*"
+    rows = json.loads(p.read_text())
+    lines = ["| case | " + key_metric + " |", "|---|---|"]
+    for r in rows:
+        if group and group not in r["name"]:
+            continue
+        lines.append(f"| {r['name']} | {fmt(r)} |")
+    return "\n".join(lines)
+
+
+def fig_tables():
+    out = []
+    for fname, metric in [("local_phase", "local_bw"), ("flush_phase", "flush_bw")]:
+        p = BENCH / f"{fname}.json"
+        if not p.exists():
+            out.append(f"*(run `python -m benchmarks.run` to regenerate {fname})*")
+            continue
+        rows = json.loads(p.read_text())
+        ppns = sorted({r["ppn"] for r in rows})
+        strats = []
+        for r in rows:
+            if r["strategy"] not in strats:
+                strats.append(r["strategy"])
+        head = "| strategy | " + " | ".join(f"ppn={p_}" for p_ in ppns) + " |"
+        sep = "|---" * (len(ppns) + 1) + "|"
+        lines = [head, sep]
+        for st in strats:
+            vals = []
+            for p_ in ppns:
+                v = next(
+                    (r[metric] for r in rows if r["strategy"] == st and r["ppn"] == p_),
+                    None,
+                )
+                vals.append(f"{v/1e9:.1f}" if v else "—")
+            lines.append(f"| {st} | " + " | ".join(vals) + " |")
+        title = (
+            "**Figure 1 — local phase throughput (GB/s), 64 nodes, 1 GiB/rank**"
+            if fname == "local_phase"
+            else "**Figure 2 — async flush throughput (GB/s), 64 nodes, 1 GiB/rank**"
+        )
+        out.append(title + "\n\n" + "\n".join(lines))
+    return "\n\n".join(out)
+
+
+def perf_delta_table():
+    base = _load(DRY_BASE) if DRY_BASE.exists() else {}
+    opt = _load(DRY)
+    cells = [
+        ("recurrentgemma-2b", "prefill_32k"),
+        ("llama4-scout-17b-a16e", "train_4k"),
+        ("llama3-405b", "train_4k"),
+        ("xlstm-350m", "prefill_32k"),
+        ("whisper-small", "prefill_32k"),
+        ("qwen2-72b", "train_4k"),
+    ]
+    lines = [
+        "| cell | metric | baseline | optimized | delta |",
+        "|---|---|---|---|---|",
+    ]
+    for a, s in cells:
+        b = base.get((a, s, "pod16x16"))
+        o = opt.get((a, s, "pod16x16"))
+        if not (b and o and b["status"] == "ok" and o["status"] == "ok"):
+            continue
+        for metric, get, unit in [
+            ("collective term", lambda r: r["roofline"]["collective_s"], "s"),
+            ("compute term", lambda r: r["roofline"]["compute_s"], "s"),
+            ("bytes/device", lambda r: r["memory"]["per_device_bytes"] / 2**30, "GiB"),
+            ("roofline frac", lambda r: r["roofline"]["roofline_fraction"], ""),
+        ]:
+            vb, vo = get(b), get(o)
+            if vb == 0:
+                continue
+            lines.append(
+                f"| {a} / {s} | {metric} | {vb:.3f}{unit} | {vo:.3f}{unit} "
+                f"| {vo/vb:.2f}x |"
+            )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    sp = _load(DRY)
+    n_ok_sp = sum(1 for r in sp.values() if r["mesh"] == "pod16x16" and r["status"] == "ok")
+    n_ok_mp = sum(1 for r in sp.values() if r["mesh"] == "pod2x16x16" and r["status"] == "ok")
+    n_skip = sum(1 for r in sp.values() if r["status"] == "skip") // 2
+
+    print(TEMPLATE_HEAD.format(n_ok_sp=n_ok_sp, n_ok_mp=n_ok_mp, n_skip=n_skip))
+    print(fig_tables())
+    print(TEMPLATE_CKPT_PERF)
+    print("## §Dry-run — single pod 16x16 (256 chips)\n")
+    print(dryrun_table(sp, "pod16x16"))
+    print("\n## §Dry-run — multi-pod 2x16x16 (512 chips)\n")
+    print(dryrun_table(sp, "pod2x16x16"))
+    print(TEMPLATE_ROOFLINE_INTRO)
+    print(roofline_table(sp))
+    print(TEMPLATE_PERF_HEAD)
+    print(perf_delta_table())
+    print(TEMPLATE_PERF_LOG)
+
+
+TEMPLATE_HEAD = """# EXPERIMENTS
+
+Reproduction + extension of *Towards Aggregated Asynchronous
+Checkpointing* (SuperCheck-SC21) as a production-grade JAX framework.
+All numbers regenerate via:
+
+    PYTHONPATH=src python -m pytest tests/            # correctness
+    PYTHONPATH=src python -m benchmarks.run           # paper figures
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+    PYTHONPATH=src python -m benchmarks.report_md > EXPERIMENTS.md
+
+**Dry-run status: {n_ok_sp}/32 single-pod cells compile OK, {n_ok_mp}/32
+multi-pod cells compile OK, {n_skip} cells skipped by design
+(`long_500k` on quadratic-attention archs) — 80/80 accounted for.**
+
+## §Calibration — the simulated testbed
+
+The discrete-event simulator (`repro.core.sim`) models Theta-like
+hardware: 48 Lustre OSTs x 4.5 GB/s (216 GB/s aggregate PFS), 1 MiB
+stripes, one bounded-throughput metadata server (12k ops/s, 0.8 ms
+latency), 8 GB/s/node NIC, 16 GB/s node-local in-memory tier, 3 GB/s
+single-client stream ceiling, 0.5 ms extent-lock revocation penalty.
+Constants were fixed once against the paper's *qualitative* results and
+never tuned per-strategy:
+
+* Fig. 1 — VELOC local phase is ~10x GIO-direct (paper: "orders of magnitude");
+* Fig. 2 — POSIX aggregation lands ~3x below file-per-process (false
+  sharing), MPI-IO ~1.6x below (barrier rounds + gather), both matching
+  the paper's ordering;
+* the §3 proposal then lands within ~5% of file-per-process *without*
+  per-strategy retuning — i.e. the win is structural, not fitted.
+
+## §Paper-claims validation
+"""
+
+TEMPLATE_CKPT_PERF = """
+Claims checklist (asserted in `tests/test_sim.py`):
+
+| paper claim | result |
+|---|---|
+| Fig 1: aggregation leaves the local phase unchanged (prefix sum ~free) | local bw within 5% across VELOC strategies |
+| Fig 1: GIO writes directly to PFS, orders of magnitude slower locally | ~10-15x slower local phase |
+| Fig 2: POSIX aggregation collapses from false sharing | ~3.1x below file-per-process; modeled lock efficiency 0.32 |
+| Fig 2: MPI-IO collective rounds underperform | ~1.6x below file-per-process |
+| §3: dedicated strategy can reach/surpass file-per-process | within 5% at 64 nodes; **surpasses** at 128 nodes (metadata gate) |
+| §1: file-per-process melts the metadata server | 16k md ops vs 129 at 8k ranks (see `benchmarks/metadata.py`) |
+| §2/Tseng: io_threads trade flush speed vs app slowdown | monotone trade-off reproduced (`benchmarks/interference.py`) |
+
+## §Checkpoint-Perf — hillclimbing the paper's own technique
+
+Setup: 128 nodes x 16 ppn (2048 ranks), 1 GiB/rank, io_threads=4.
+Sequence: paper-faithful baseline first, then beyond-paper steps.
+
+| iteration | hypothesis | result | verdict |
+|---|---|---|---|
+| baseline `file_per_process` | — | 212.0 GB/s flush, 2048 files, 4096 md ops | reference |
+| paper-faithful §3 (M=48=#OSTs) | leaders matched to I/O servers suffice | 215.9 GB/s, 1 file, 49 md ops, but 1.28 TB gather traffic | **confirmed** (claim: reach/surpass fpp) |
+| iter1: M = #nodes (128) | with uniform sizes, leader regions align with node boundaries => zero gather | 215.9 GB/s, gather 1280 GiB -> 0 | **confirmed** — beyond-paper: M should track #backends, not #OSTs, when PFS-bound |
+| iter2: pipeline chunk 256 MiB -> 1 GiB | coarser chunks, same fluid bw | no change (PFS-bound) | confirmed (chunking matters for stealing granularity, not steady-state bw) |
+| iter3: 25% nodes at 0.6 load, ragged sizes, election OFF (w=0) | stragglers drag leaders | 164.5 GB/s | baseline for criterion test |
+| iter3b: election ON (paper criteria 1+2) | big holders + unloaded nodes lead | **193.3 GB/s (+17.5%)** | **confirmed** — quantifies §3's dynamic election |
+| iter3c: fpp under same jitter | no mitigation possible | 205.4 GB/s | finding: under heavy jitter fpp still edges S3 — slow leaders throttle the pipeline |
+| iter4: capacity-weighted leader regions (beyond-paper) | loaded leaders should own fewer stripes — zero-communication work-stealing analogue | 196.1 GB/s (+1.4% over iter3b, more gather traffic offsets the relief) | partially confirmed — the residual gap vs fpp is sender-side derating that no aggregation layout removes |
+| beyond: zstd flush codec | PFS-bound => volume is the only lever | same bw, **1.7x less volume => 1.7x shorter flush window** | confirmed (real-engine codec, `benchmarks/overhead.py`) |
+| beyond: int8+zstd (Pallas kernel) | 4-5x volume cut, bounded error | same bw, **5x shorter flush window**, lossy tier | confirmed |
+
+The engine-level (real files, real threads) counterpart in
+`benchmarks/overhead.py` shows blocking cost per save = local phase only
+(~10 ms for smoke states), with the flush fully overlapped.
+"""
+
+TEMPLATE_ROOFLINE_INTRO = """
+## §Roofline — single-pod (256 x v5e), per (arch x shape)
+
+Hardware model: 197 bf16 TFLOP/s, 819 GB/s HBM, 50 GB/s/link ICI.
+Sources: trip-count-corrected HLO analysis (`repro.launch.hlo_analysis`)
+for FLOPs + collective bytes (XLA's `cost_analysis` counts scan bodies
+once — corrected by recovered while-loop trip counts; validated against
+nested-scan ground truth in `tests/test_hlo_analysis.py`); the memory
+term uses the analytic HBM floor (`analytic_hbm_bytes`) because the
+CPU-backend fusion granularity makes measured traffic pessimistic.
+`MODEL_FLOPS/HLO` = 6·N·D (train) or 2·N·D (inference) over measured
+HLO flops — the remat/redundancy waste factor.  `roofline frac` =
+(MODEL_FLOPS/peak) / max(term): useful-compute fraction of the machine
+at the modeled bound, assuming perfect compute/collective overlap.
+
+Notes on structural bottlenecks (see §Perf for what was done):
+
+* every train cell is **collective-dominated**: FSDP weight all-gathers
+  repeat per microbatch x per pass; the knob is microbatch count (bounded
+  by activation memory, which sequence-parallel residuals relax);
+* decode cells show frac ~0 by construction (2·N·B useful flops against
+  weight gathers) — serving wants dp-replicated weights, which don't fit
+  405B on 256 v5e; the (2,128) serve-mesh experiment made it *worse*
+  (refuted hypothesis, logged below);
+* llama3-405b / llama4 / recurrentgemma train exceed 16 GB/device on the
+  single pod — documented deficits: 405B at 256 chips is a deliberate
+  stress cell (production would use 4-16x more chips; the multi-pod mesh
+  already halves per-device state to 24.4 GiB), and recurrentgemma's
+  python-loop layer structure (mixed block kinds prevent layer-stacking)
+  defeats cross-layer buffer reuse in the CPU backend's assignment —
+  chunking the RG-LRU associative scan did *not* move it (refuted,
+  §Perf);
+* the collective term prices every byte at the 50 GB/s ICI link rate;
+  on the 2x16x16 mesh the FSDP gathers also span the `pod` axis, whose
+  DCN links are ~8x slower — multi-pod fractions are therefore
+  optimistic upper bounds for pod-crossing traffic (the fix at scale is
+  pod-local FSDP + cross-pod gradient all-reduce only, which the mesh
+  layout supports by moving weight sharding off the `pod` axis).
+"""
+
+TEMPLATE_PERF_HEAD = """
+## §Perf — model-cell hillclimbing (baseline -> optimized)
+
+Three cells selected per the rules: worst roofline fraction
+(recurrentgemma-2b prefill_32k, 0.003), most collective-bound
+(llama4-scout train_4k, 25.8s collective vs 10.6s compute), most
+representative of where the paper's checkpointing matters
+(llama3-405b train_4k).  Fixes that generalized were applied to the
+whole zoo (xlstm/whisper prefill, qwen2-72b).
+"""
+
+TEMPLATE_PERF_LOG = """
+### Iteration log (hypothesis -> change -> before -> after -> verdict)
+
+1. **Activation sharding through remat+scan** — *hypothesis*: GSPMD drops
+   batch sharding across `jax.checkpoint` + `lax.scan` boundaries,
+   replicating compute.  *Change*: `shard_act` constraints at every
+   block boundary (batch over dp, wide dims over tp).  tinyllama train:
+   flops/dev 225T -> 43T (ideal 27T), temp 57 -> 10 GiB. **Confirmed.**
+2. **Vocab-sharded embedding gather** — *hypothesis*: gather output
+   resharding miscompiles / bloats (XLA CPU partitioner bug: "slice dim
+   size > dynamic slice dimension").  *Change*: embedding table vocab
+   over TP, d replicated (gather lowers to mask+all-reduce). Compile
+   succeeds everywhere. **Confirmed** (workaround documented in
+   `sharding.py`).
+3. **Sequence-parallel residual stream** — *hypothesis*: the scan-saved
+   per-layer activation stack ((126,1,4096,16384) bf16 = 15.75 GiB at
+   405B) dominates train memory.  *Change*: carry constrained to
+   P(dp, tp, None).  llama3-405b temp 62 -> 21 GiB. **Confirmed.**
+4. **MoE dispatch scatter replicates batch** — *hypothesis*: flat
+   advanced-indexing scatter loses the batch dim (llama4 prefill 63 GiB
+   temps, 2.2 TB collectives).  *Change*: vmapped per-sequence
+   scatter/gather (iota batch dims partition as parallel dims).
+   llama4 prefill temp 63 -> 9.4 GiB, collectives 2166 -> 245 GiB.
+   **Confirmed.**
+5. **Head padding for TP** — *hypothesis*: 40 heads on 16-way TP
+   replicate all attention compute (5x flop inflation).  *Change*: pad
+   heads to the next TP multiple, slice padded outputs. llama4 train
+   compute 10.6 -> 3.25s. **Confirmed** (also applied to gemma-10H,
+   whisper-12H).
+6. **Parallel prefill for recurrent archs** — *hypothesis*: token-scan
+   prefill issues per-token weight gathers (recurrentgemma prefill:
+   47.4s collective term, the worst cell).  *Change*: single forward
+   pass + closed-form/chunkwise state extraction (RG-LRU associative
+   scan; chunkwise mLSTM whose carry IS the decode state; teacher-forced
+   whisper prefill).  recurrentgemma collective 47.4 -> 1.3s; whisper
+   prefill mem 135 -> 1.2 GiB. **Confirmed.**
+7. **Banded window attention** — *hypothesis*: dense 32k x 32k scores
+   with a 2048 mask waste ~10x compute/collectives.  *Change*: per-chunk
+   dynamic K/V band slice.  recurrentgemma train collective 6.3 -> 1.6s,
+   frac 0.058 -> 0.221. **Confirmed.**
+8. **Fewer microbatches = fewer FSDP re-gathers** — *hypothesis*:
+   all-gather bytes scale ~linearly with microbatch count; memory rises
+   (bounded thanks to #3).  llama3-405b k=16 -> 4: collective 284 ->
+   148s, frac 0.178 -> 0.342.  llama4 k=8 -> 2: 26.2 -> 17.5s, frac
+   0.083 -> 0.123. **Confirmed** (k=4/k=2 chosen; memory documented).
+9. **(2,128) serve mesh for 405B decode** — *hypothesis*: more TP +
+   dp-replication kills decode weight gathers.  *Result*: collective
+   6.7 -> 43s (tiny-dim TP all-reduces dominate). **Refuted** — kept the
+   (16,16) mesh; 405B decode on 256 v5e stays weight-gather-bound, noted
+   as a machine-size constraint rather than a sharding fix.
+10. **hd-sharded attention for indivisible heads** — *hypothesis*:
+    sharding head_dim recovers TP for 10/12-head archs.  *Result*:
+    psum of every score chunk (~2.4 TB/step at 32k). **Refuted** —
+    superseded by head padding (#5).
+11. **Gold-logit gather in the loss** — *hypothesis*: `take_along_axis`
+    over the TP-sharded vocab all-gathers the logits every microbatch
+    (suspected dominant for small-model/big-vocab train cells).
+    *Change*: mask+reduce gold logit.  *Result*: collective bytes
+    unchanged to 3 decimals — GSPMD already lowered the gather without
+    an all-gather. **Refuted** (kept the mask form: it is no worse and
+    removes the risk on other backends).
+12a. **Chunked RG-LRU scan for train memory** — *hypothesis*: the
+    full-sequence f32 gate tensors (~10 x (B,S,dr) live per layer, per
+    the buffer dump) drive recurrentgemma train's 39 GiB temps.
+    Three variants measured: (i) chunking only the associative scan —
+    no change (coeffs still full-sequence); (ii) fusing coefficient
+    computation into the chunk scan — memory 39.6 -> 34.2 GiB but
+    collectives 1.72 -> 2.21s (frac 0.209 -> 0.164: per-chunk boundary
+    re-gathers); (iii) hoisting the gate-weight gathers out of the scan
+    — no further change.  **Net: refuted as a frac improvement** — the
+    full parallel scan stays default for seq <= 8k (best frac), the
+    fused-chunk form engages beyond 8k where its O(chunk) memory is the
+    only viable shape; the residual 39 GiB is the python-loop block
+    structure (26 distinct HLO bodies defeat cross-layer buffer reuse).
+12. **Sequence-parallel carry hurts narrow models** — *hypothesis*:
+    after #11's refutation, the per-layer seq re-gathers implied by the
+    SP carry (134 MB x L x 3 passes x k) are themselves the dominant
+    collective for d_model < 4096 — their activation stacks were small
+    anyway.  *Change*: SP carry only when d_model >= 4096.  qwen1.5-0.5b
+    collective 1.24 -> 0.43s (frac 0.062 -> **0.180**), tinyllama 2.47
+    -> 1.00s (0.056 -> **0.137**), qwen2-moe 11.2 -> 6.8s; big models
+    untouched; memory grows but stays under HBM (tinyllama 4.7 -> 10.2
+    GiB). **Confirmed.**
+
+Stopping criterion: the last three candidate changes on the three target
+cells each projected <5% on the dominant term (further microbatch
+reduction OOMs; collective overlap is already granted by the max-term
+bound; remaining all-gathers are the irreducible FSDP weight traffic at
+this chip count).
+
+## §Beyond-paper extensions (summary)
+
+* Full working implementation of the paper's §3 *proposal* (it was a
+  sketch), incl. deterministic piggy-backed leader election with all
+  three criteria, validated by property tests and priced at scale.
+* M=#backends leader rule (beats the paper's implied M=#OSTs when
+  PFS-bound: zero gather traffic at uniform sizes).
+* Lossless (zstd) + lossy (Pallas int8) + incremental (XOR-delta) flush
+  codecs: 1.7-5x flush-window reduction on top of any strategy.
+* Multi-level redundancy: L0 twin, L1 + partner replication, L2
+  aggregated; crash/corruption fallback chain tested end-to-end.
+* Elastic restart: checkpoints are mesh/geometry-agnostic (save on 4x2,
+  restore on 3x1 — bit-exact, tested).
+* Device-side integrity checksums (TPU-adapted two-track Fletcher via
+  Pallas) over every rank blob.
+* Bounded flush pipeline (`max_pending_flushes` backpressure) +
+  `validate(step)` cold-checkpoint scrubbing (per-rank CRC audit on every
+  level).
+* Model-side: sequence-parallel residuals, chunkwise mLSTM, banded local
+  attention, TP head padding, vmapped MoE dispatch — none of which the
+  paper needed, all of which the 40-cell matrix did.
+"""
+
+
+if __name__ == "__main__":
+    main()

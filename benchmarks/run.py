@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,fig2,...] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows; rich JSON sidecars land in
+reports/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = {
+    "fig1_local": "benchmarks.local_phase",
+    "fig2_flush": "benchmarks.flush_phase",
+    "s3_proposal": "benchmarks.proposal_scale",
+    "metadata": "benchmarks.metadata",
+    "interference": "benchmarks.interference",
+    "kernels": "benchmarks.kernel_bench",
+    "overhead": "benchmarks.overhead",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, help="comma-separated bench keys")
+    args = ap.parse_args()
+    keys = args.only.split(",") if args.only else list(BENCHES)
+    import importlib
+
+    t0 = time.time()
+    for key in keys:
+        mod = importlib.import_module(BENCHES[key])
+        sys.stderr.write(f"== {key} ==\n")
+        t1 = time.time()
+        mod.main()
+        sys.stderr.write(f"   ({time.time() - t1:.1f}s)\n")
+    sys.stderr.write(f"total {time.time() - t0:.1f}s\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Batched serving with live-state snapshots through the checkpoint engine.
+
+A recurrent-family model (RecurrentGemma smoke config) serves a batch;
+mid-generation, the full serving state (params + per-request recurrent
+state + ring KV caches) is checkpointed asynchronously; a second server
+restores it and continues — emitting exactly the tokens the first one
+would have.
+
+    PYTHONPATH=src python examples/serve_with_snapshots.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import CheckpointConfig, CheckpointManager, theta_like
+from repro.models import get_model
+
+cfg = get_smoke_config("recurrentgemma-2b")
+model = get_model(cfg)
+params = model.init(jax.random.PRNGKey(7))
+prompts = jnp.asarray(np.tile(np.arange(8, dtype=np.int32)[None], (4, 1)))
+
+# serve 3 tokens, snapshot, then 3 more
+cache, logits = model.prefill(params, {"tokens": prompts}, s_max=32)
+decode = jax.jit(lambda p, c, t: model.decode_step(p, c, t))
+tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+first, snap_cache, snap_tok = [], None, None
+for i in range(6):
+    first.append(np.asarray(tok)[:, 0])
+    logits, cache = decode(params, cache, tok)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    if i == 2:
+        snap_cache, snap_tok = cache, tok
+print("continuous generation :", np.stack(first, 1)[0])
+
+with tempfile.TemporaryDirectory() as root:
+    mgr = CheckpointManager(
+        CheckpointConfig(root=root, cluster=theta_like(2, 2),
+                         strategy="stripe_aligned")
+    )
+    mgr.save(1, {"params": params, "cache": snap_cache, "tok": snap_tok})
+    mgr.wait()
+    assert not mgr.flush_errors
+    target = jax.tree_util.tree_map(
+        np.asarray, {"params": params, "cache": snap_cache, "tok": snap_tok}
+    )
+    mgr._l0 = None
+    _, restored = mgr.restore(target)
+    mgr.close()
+
+r_cache = jax.tree_util.tree_map(jnp.asarray, restored["cache"])
+r_tok = jnp.asarray(restored["tok"])
+resumed = list(np.stack(first[:3], 1).T)
+for _ in range(3):
+    resumed.append(np.asarray(r_tok)[:, 0])
+    logits, r_cache = decode(params, r_cache, r_tok)
+    r_tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+resumed = np.stack(resumed, 1)
+print("resumed-from-snapshot  :", resumed[0])
+np.testing.assert_array_equal(np.stack(first, 1), resumed)
+print("snapshot resume emits identical tokens")

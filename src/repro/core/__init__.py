@@ -1,0 +1,55 @@
+"""Aggregated asynchronous multi-level checkpointing (the paper's core).
+
+Public API:
+
+* :class:`~repro.core.engine.CheckpointManager` — multi-level async
+  checkpointing with pluggable aggregation, integrated with JAX training.
+* :func:`~repro.core.strategies.make_plan` — build a FlushPlan from a
+  strategy name (``file_per_process`` | ``posix`` | ``mpiio`` |
+  ``stripe_aligned`` | ``gio_sync``).
+* :func:`~repro.core.sim.simulate_flush` — price a plan on the modeled
+  Theta-like machine (benchmark harness).
+"""
+from repro.core.cluster import ClusterSpec, NodeSpec, PFSSpec, theta_like
+from repro.core.engine import CheckpointConfig, CheckpointManager, SaveStats
+from repro.core.plan import (
+    FlushPlan,
+    SendItem,
+    WriteItem,
+    count_false_sharing,
+    validate_plan,
+)
+from repro.core.prefix_sum import (
+    LeaderAssignment,
+    ScanResult,
+    elect_leaders,
+    exclusive_prefix_sum,
+    piggybacked_scan,
+)
+from repro.core.sim import FlushSimulator, SimReport, simulate_flush
+from repro.core.strategies import STRATEGIES, make_plan
+
+__all__ = [
+    "ClusterSpec",
+    "NodeSpec",
+    "PFSSpec",
+    "theta_like",
+    "CheckpointConfig",
+    "CheckpointManager",
+    "SaveStats",
+    "FlushPlan",
+    "SendItem",
+    "WriteItem",
+    "validate_plan",
+    "count_false_sharing",
+    "LeaderAssignment",
+    "ScanResult",
+    "elect_leaders",
+    "exclusive_prefix_sum",
+    "piggybacked_scan",
+    "FlushSimulator",
+    "SimReport",
+    "simulate_flush",
+    "STRATEGIES",
+    "make_plan",
+]

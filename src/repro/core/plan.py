@@ -1,0 +1,225 @@
+"""FlushPlan: the executable description of one asynchronous flush.
+
+An aggregation *strategy* is a pure function
+``(ClusterSpec, rank_sizes) -> FlushPlan``.  The plan lists every byte
+movement needed to move N rank-local checkpoints into M remote files:
+
+* ``SendItem`` — a gather hop: bytes of some rank's checkpoint shipped
+  from the active backend holding them to a leader backend (network).
+* ``WriteItem`` — a PFS write issued by one backend: (file, offset, size)
+  sourced from some rank's checkpoint blob at ``src_offset``.
+
+Executors (real files / discrete-event simulator) consume plans without
+knowing which strategy produced them — this is the co-design seam the
+paper argues for: strategy decides *who writes what where*, the executor
+and its contention model price/perform it.
+
+Plans are also the verification surface: :func:`validate_plan` checks
+conservation (every checkpoint byte written exactly once), send/write
+consistency, and — for stripe-disjoint strategies — single-writer-per-
+stripe.  Property-based tests fuzz these invariants.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cluster import ClusterSpec
+from repro.core.prefix_sum import LeaderAssignment, ScanMeta
+
+
+@dataclass(frozen=True)
+class WriteItem:
+    backend: int        # node id of the active backend issuing the write
+    file: str           # logical remote file name
+    file_offset: int
+    size: int
+    src_rank: int       # whose checkpoint blob this slice comes from
+    src_offset: int     # offset inside that rank's blob
+    round: int = 0      # barrier round (MPI-IO multi-phase); 0 = unsynchronized
+
+    def __post_init__(self):
+        if self.size <= 0:
+            raise ValueError("WriteItem.size must be positive")
+        if self.file_offset < 0 or self.src_offset < 0:
+            raise ValueError("offsets must be non-negative")
+
+
+@dataclass(frozen=True)
+class SendItem:
+    src_backend: int
+    dst_backend: int
+    src_rank: int
+    src_offset: int
+    size: int
+    round: int = 0
+
+    def __post_init__(self):
+        if self.size <= 0:
+            raise ValueError("SendItem.size must be positive")
+
+
+@dataclass
+class FlushPlan:
+    strategy: str
+    cluster: ClusterSpec
+    rank_sizes: List[int]
+    files: Dict[str, int]                 # file -> logical size (bytes)
+    writes: List[WriteItem]
+    sends: List[SendItem] = field(default_factory=list)
+    scan_meta: Optional[ScanMeta] = None  # coordination cost (None = no scan)
+    n_rounds: int = 1
+    barrier_per_round: bool = False       # MPI-IO collective semantics
+    leaders: Optional[LeaderAssignment] = None
+    synchronous: bool = False             # GIO-style: application blocked
+    stripe_disjoint: bool = False         # claim: one writer per stripe
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.rank_sizes)
+
+    @property
+    def n_files(self) -> int:
+        return len(self.files)
+
+    def writes_by_backend(self) -> Dict[int, List[WriteItem]]:
+        out: Dict[int, List[WriteItem]] = defaultdict(list)
+        for w in self.writes:
+            out[w.backend].append(w)
+        return dict(out)
+
+    def sends_by_edge(self) -> Dict[Tuple[int, int], int]:
+        out: Dict[Tuple[int, int], int] = defaultdict(int)
+        for s in self.sends:
+            out[(s.src_backend, s.dst_backend)] += s.size
+        return dict(out)
+
+    def network_bytes(self) -> int:
+        return sum(s.size for s in self.sends)
+
+    def metadata_ops(self) -> int:
+        """File create (once per file) + open (once per (backend, file))."""
+        opens = {(w.backend, w.file) for w in self.writes}
+        return len(self.files) + len(opens)
+
+
+class PlanError(AssertionError):
+    pass
+
+
+def validate_plan(plan: FlushPlan) -> None:
+    """Structural invariants every strategy must satisfy."""
+    cluster = plan.cluster
+    n_ranks = cluster.world_size
+    if len(plan.rank_sizes) != n_ranks:
+        raise PlanError("rank_sizes length mismatch")
+
+    # 1. Source coverage: for each rank, the union of write src slices is
+    #    exactly [0, size) with no overlap.
+    per_rank: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
+    for w in plan.writes:
+        if not (0 <= w.src_rank < n_ranks):
+            raise PlanError(f"write references bad rank {w.src_rank}")
+        per_rank[w.src_rank].append((w.src_offset, w.src_offset + w.size))
+    for rank in range(n_ranks):
+        size = plan.rank_sizes[rank]
+        ivs = sorted(per_rank.get(rank, []))
+        if size == 0:
+            if ivs:
+                raise PlanError(f"rank {rank} is empty but has writes")
+            continue
+        pos = 0
+        for a, b in ivs:
+            if a != pos:
+                raise PlanError(
+                    f"rank {rank}: src gap/overlap at {pos} (next slice {a})"
+                )
+            pos = b
+        if pos != size:
+            raise PlanError(f"rank {rank}: covered {pos} of {size} bytes")
+
+    # 2. Destination disjointness within each file.
+    per_file: Dict[str, List[Tuple[int, int]]] = defaultdict(list)
+    for w in plan.writes:
+        if w.file not in plan.files:
+            raise PlanError(f"write targets undeclared file {w.file}")
+        per_file[w.file].append((w.file_offset, w.file_offset + w.size))
+    for fname, ivs in per_file.items():
+        ivs.sort()
+        for (a0, b0), (a1, b1) in zip(ivs, ivs[1:]):
+            if a1 < b0:
+                raise PlanError(f"file {fname}: overlapping writes")
+        if ivs and ivs[-1][1] > plan.files[fname]:
+            raise PlanError(f"file {fname}: write past declared size")
+
+    # 3. Every write executed by a backend that doesn't hold the source
+    #    rank must be fed by sends covering exactly those bytes.
+    needed: Dict[Tuple[int, int], List[Tuple[int, int]]] = defaultdict(list)
+    for w in plan.writes:
+        home = cluster.node_of_rank(w.src_rank)
+        if home != w.backend:
+            needed[(w.backend, w.src_rank)].append(
+                (w.src_offset, w.src_offset + w.size)
+            )
+    got: Dict[Tuple[int, int], List[Tuple[int, int]]] = defaultdict(list)
+    for s in plan.sends:
+        home = cluster.node_of_rank(s.src_rank)
+        if s.src_backend != home:
+            raise PlanError("send must originate at the rank's home backend")
+        got[(s.dst_backend, s.src_rank)].append(
+            (s.src_offset, s.src_offset + s.size)
+        )
+
+    def _union(ivs: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+        out: List[Tuple[int, int]] = []
+        for a, b in sorted(ivs):
+            if out and a <= out[-1][1]:
+                out[-1] = (out[-1][0], max(out[-1][1], b))
+            else:
+                out.append((a, b))
+        return out
+
+    for key, ivs in needed.items():
+        have = _union(got.get(key, []))
+        for a, b in _union(ivs):
+            if not any(ha <= a and b <= hb for ha, hb in have):
+                raise PlanError(
+                    f"backend {key[0]} writes rank {key[1]} bytes "
+                    f"[{a},{b}) without a covering send"
+                )
+
+    # 4. Stripe disjointness when claimed.
+    if plan.stripe_disjoint:
+        stripe = cluster.pfs.stripe_size
+        owner: Dict[Tuple[str, int], int] = {}
+        for w in plan.writes:
+            s0 = w.file_offset // stripe
+            s1 = (w.file_offset + w.size - 1) // stripe
+            for st in range(s0, s1 + 1):
+                prev = owner.setdefault((w.file, st), w.backend)
+                if prev != w.backend:
+                    raise PlanError(
+                        f"stripe ({w.file},{st}) written by backends "
+                        f"{prev} and {w.backend} despite stripe_disjoint"
+                    )
+
+
+def count_false_sharing(plan: FlushPlan) -> Dict[str, int]:
+    """Diagnostics: stripes touched by >1 backend (the paper's §2.1 issue)."""
+    stripe = plan.cluster.pfs.stripe_size
+    writers: Dict[Tuple[str, int], set] = defaultdict(set)
+    for w in plan.writes:
+        s0 = w.file_offset // stripe
+        s1 = (w.file_offset + w.size - 1) // stripe
+        for st in range(s0, s1 + 1):
+            writers[(w.file, st)].add(w.backend)
+    shared = {k: v for k, v in writers.items() if len(v) > 1}
+    return {
+        "stripes_total": len(writers),
+        "stripes_shared": len(shared),
+        "max_writers_per_stripe": max((len(v) for v in writers.values()), default=0),
+        "excess_writers": sum(len(v) - 1 for v in shared.values()),
+    }

@@ -1,0 +1,83 @@
+"""Device-side pre-codecs applied to the state *before* serialization.
+
+``int8`` — blockwise int8 quantization via the Pallas kernel
+(:mod:`repro.kernels.quantize`): every float leaf is replaced by
+``{"q": int8 blocks, "s": f32 scales}`` computed on-device, shrinking
+flush volume ~4x (bf16: ~2x) at <1% relative error per block.  Lossy —
+intended for high-frequency checkpoint tiers where the paper's concern
+(PFS pressure) dominates, with periodic lossless checkpoints alongside.
+
+Transform + inverse are structure-deterministic so saved and restoring
+processes independently agree on the manifest leaf table.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.quantize import dequantize, quantize
+from repro.kernels.quantize.ops import TILE, quantize_blocks_needed
+
+_FLOATS = {jnp.dtype(d) for d in (jnp.float32, jnp.float64, jnp.bfloat16, jnp.float16)}
+# leaves smaller than one kernel tile stay raw: the (32, 128) tile pad
+# would inflate them, and tiny tensors (norm scales, biases) are exactly
+# where int8 noise hurts most.
+MIN_QUANT_ELEMS = 4096
+
+
+def _is_float_leaf(x: Any) -> bool:
+    try:
+        if jnp.dtype(getattr(x, "dtype", None)) not in _FLOATS:
+            return False
+    except TypeError:
+        return False
+    size = int(np.prod(np.shape(x))) if np.shape(x) else 1
+    return size >= MIN_QUANT_ELEMS
+
+
+def quantize_tree(state: Any) -> Any:
+    def f(leaf):
+        if not _is_float_leaf(leaf):
+            return leaf
+        q, s = quantize(jnp.asarray(leaf))
+        return {"q": q, "s": s}
+
+    return jax.tree_util.tree_map(f, state)
+
+
+def quant_target_like(target: Any) -> Any:
+    """The structure ``quantize_tree`` would produce, as ShapeDtypeStructs."""
+
+    def f(leaf):
+        if not _is_float_leaf(leaf):
+            return leaf
+        n = int(np.prod(np.shape(leaf))) if np.shape(leaf) else 1
+        blocks = quantize_blocks_needed(n)
+        return {
+            "q": jax.ShapeDtypeStruct((blocks, 128), jnp.int8),
+            "s": jax.ShapeDtypeStruct((blocks,), jnp.float32),
+        }
+
+    return jax.tree_util.tree_map(f, target)
+
+
+def dequantize_tree(qtree: Any, target: Any) -> Any:
+    """Invert ``quantize_tree`` into ``target``'s shapes/dtypes."""
+    tleaves, tdef = jax.tree_util.tree_flatten(target)
+    qleaves = jax.tree_util.tree_leaves(
+        qtree, is_leaf=lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+    )
+    if len(tleaves) != len(qleaves):
+        raise ValueError("quantized tree does not match target structure")
+    out = []
+    for t, q in zip(tleaves, qleaves):
+        if isinstance(q, dict):
+            n = int(np.prod(np.shape(t))) if np.shape(t) else 1
+            x = dequantize(jnp.asarray(q["q"]), jnp.asarray(q["s"]), n=n)
+            out.append(np.asarray(x).reshape(np.shape(t)).astype(t.dtype))
+        else:
+            out.append(q)
+    return jax.tree_util.tree_unflatten(tdef, out)

@@ -1,0 +1,266 @@
+"""Prefix-sum offset computation + piggy-backed leader election.
+
+The paper's key coordination primitive: one exclusive prefix sum over the
+per-rank checkpoint sizes yields every rank's offset in the aggregated
+remote file.  The proposed strategy (paper §3) *piggy-backs* extra
+per-node summaries (local bytes, load, topology coordinate) on the same
+scan so that every active backend can afterwards compute — independently
+and deterministically — the identical leader assignment, without any
+further agreement protocol.
+
+Everything here is a pure algorithm (no I/O): the planner uses it
+directly, the simulator prices its message complexity, and a
+``shard_map`` twin in :mod:`repro.dist.collectives` shows the same scan
+as a device-level JAX collective.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.cluster import ClusterSpec
+
+
+@dataclass(frozen=True)
+class ScanMeta:
+    """Cost model of the scan used for coordination.
+
+    A classic up-/down-sweep tree over P participants: ``2*ceil(log2 P)``
+    latency-bound rounds, ``2*(P-1)`` point-to-point messages total, each
+    carrying ``payload_bytes`` (offset partial + piggy-backed summary).
+    """
+
+    participants: int
+    rounds: int
+    messages: int
+    payload_bytes: int
+
+    @staticmethod
+    def for_participants(p: int, payload_bytes: int) -> "ScanMeta":
+        rounds = 2 * max(1, math.ceil(math.log2(max(2, p))))
+        return ScanMeta(
+            participants=p,
+            rounds=rounds,
+            messages=2 * max(0, p - 1),
+            payload_bytes=payload_bytes,
+        )
+
+
+@dataclass(frozen=True)
+class NodeSummary:
+    """Per-node info carried by the piggy-backed scan (paper §3)."""
+
+    node: int
+    bytes: int          # total node-local checkpoint bytes on this node
+    load: float         # current background load in [0, 1)
+    coord: int          # topology coordinate (proximity = |a - b|)
+
+
+@dataclass
+class ScanResult:
+    """Output of the (piggy-backed) exclusive prefix sum."""
+
+    rank_offsets: List[int]           # exclusive prefix sum per rank
+    total_bytes: int
+    node_summaries: List[NodeSummary]
+    meta: ScanMeta = field(default=None)  # type: ignore[assignment]
+
+
+def exclusive_prefix_sum(sizes: Sequence[int]) -> Tuple[List[int], int]:
+    offsets: List[int] = []
+    acc = 0
+    for s in sizes:
+        if s < 0:
+            raise ValueError("checkpoint sizes must be non-negative")
+        offsets.append(acc)
+        acc += int(s)
+    return offsets, acc
+
+
+def piggybacked_scan(
+    cluster: ClusterSpec,
+    rank_sizes: Sequence[int],
+    *,
+    payload_extra_bytes: int = 24,
+) -> ScanResult:
+    """Exclusive scan over rank sizes + per-node summary exchange.
+
+    ``payload_extra_bytes`` models the piggy-backed (bytes, load, coord)
+    triple added to each scan message; it appears only in the cost model.
+    """
+    if len(rank_sizes) != cluster.world_size:
+        raise ValueError(
+            f"expected {cluster.world_size} rank sizes, got {len(rank_sizes)}"
+        )
+    offsets, total = exclusive_prefix_sum(rank_sizes)
+    summaries = []
+    for node in range(cluster.n_nodes):
+        ranks = cluster.ranks_of_node(node)
+        summaries.append(
+            NodeSummary(
+                node=node,
+                bytes=sum(int(rank_sizes[r]) for r in ranks),
+                load=cluster.load_of(node),
+                coord=cluster.coord_of(node),
+            )
+        )
+    meta = ScanMeta.for_participants(
+        cluster.n_nodes, payload_bytes=8 + payload_extra_bytes
+    )
+    return ScanResult(
+        rank_offsets=offsets,
+        total_bytes=total,
+        node_summaries=summaries,
+        meta=meta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Leader election (paper §3, criteria 1-3)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LeaderAssignment:
+    """M leaders, each statically owning a stripe-aligned file region.
+
+    ``regions[j] = (start, end)`` in file-offset bytes, start/end aligned
+    to the PFS stripe size (end of the last region = padded total).
+    ``leaders[j]`` is the node id leading region j.
+    """
+
+    leaders: List[int]
+    regions: List[Tuple[int, int]]
+
+    def leader_of_offset(self, off: int) -> int:
+        for j, (s, e) in enumerate(self.regions):
+            if s <= off < e:
+                return self.leaders[j]
+        raise ValueError(f"offset {off} outside every region")
+
+    @property
+    def m(self) -> int:
+        return len(self.leaders)
+
+
+def elect_leaders(
+    cluster: ClusterSpec,
+    scan: ScanResult,
+    m_leaders: int,
+    *,
+    w_size: float = 1.0,
+    w_load: float = 0.75,
+    w_topo: float = 0.25,
+    capacity_regions: bool = False,
+) -> LeaderAssignment:
+    """Deterministic leader election from piggy-backed summaries.
+
+    Every node evaluates this identical pure function on the identical
+    scan output, hence all nodes agree on the assignment with zero extra
+    communication (the paper's "no further agreement protocols").
+
+    Scoring per (region, candidate node):
+      + ``w_size`` * fraction of the region's bytes already held locally
+        (criterion 1: big holders lead, minimizing network transfer)
+      - ``w_load`` * node background load (criterion 2)
+      - ``w_topo`` * normalized topology distance from the region's
+        centroid sender (criterion 3: leaders near their senders)
+
+    ``capacity_regions`` (beyond-paper straggler mitigation): after the
+    election, region sizes are re-proportioned to each leader's capacity
+    (1 - load) and re-snapped to stripes, so a loaded leader owns fewer
+    stripes instead of the same S/M share — the deterministic analogue of
+    work stealing (still zero extra communication: every backend computes
+    the same resize from the same piggy-backed loads).
+    """
+    if m_leaders <= 0:
+        raise ValueError("m_leaders must be positive")
+    pfs = cluster.pfs
+    stripe = pfs.stripe_size
+    total = scan.total_bytes
+    n_stripes = max(1, pfs.n_stripes(total))
+    m = min(m_leaders, n_stripes, cluster.n_nodes)
+    stripes_per_region = -(-n_stripes // m)
+
+    regions: List[Tuple[int, int]] = []
+    for j in range(m):
+        start = j * stripes_per_region * stripe
+        end = min((j + 1) * stripes_per_region * stripe, n_stripes * stripe)
+        if start >= end:
+            break
+        regions.append((start, end))
+    m = len(regions)
+
+    # Node byte-extent in the aggregate file: [first rank offset, last end).
+    node_extent: List[Tuple[int, int]] = []
+    for node in range(cluster.n_nodes):
+        ranks = cluster.ranks_of_node(node)
+        starts = [scan.rank_offsets[r] for r in ranks]
+        ends = [
+            scan.rank_offsets[r]
+            + (scan.total_bytes - scan.rank_offsets[r]
+               if r == cluster.world_size - 1
+               else scan.rank_offsets[r + 1] - scan.rank_offsets[r])
+            for r in ranks
+        ]
+        node_extent.append((min(starts) if starts else 0, max(ends) if ends else 0))
+
+    max_node_bytes = max(1, max(s.bytes for s in scan.node_summaries))
+    coord_span = max(
+        1, max(s.coord for s in scan.node_summaries) - min(s.coord for s in scan.node_summaries)
+    )
+
+    def overlap(a: Tuple[int, int], b: Tuple[int, int]) -> int:
+        return max(0, min(a[1], b[1]) - max(a[0], b[0]))
+
+    leaders: List[int] = []
+    taken = set()
+    allow_reuse = m > cluster.n_nodes  # only possible via tiny clusters
+    for j, reg in enumerate(regions):
+        reg_bytes = max(1, reg[1] - reg[0])
+        # Topology centroid of the senders feeding this region, weighted by
+        # how many of their bytes land here.
+        wsum, csum = 0.0, 0.0
+        for node in range(cluster.n_nodes):
+            ob = overlap(node_extent[node], reg)
+            if ob > 0:
+                wsum += ob
+                csum += ob * cluster.coord_of(node)
+        centroid = csum / wsum if wsum > 0 else cluster.coord_of(0)
+
+        best, best_score = -1, -math.inf
+        for node in range(cluster.n_nodes):
+            if node in taken and not allow_reuse:
+                continue
+            s = scan.node_summaries[node]
+            local_frac = overlap(node_extent[node], reg) / reg_bytes
+            size_term = w_size * (0.5 * local_frac + 0.5 * s.bytes / max_node_bytes)
+            load_term = w_load * s.load
+            topo_term = w_topo * abs(cluster.coord_of(node) - centroid) / coord_span
+            score = size_term - load_term - topo_term
+            if score > best_score or (score == best_score and node < best):
+                best, best_score = node, score
+        leaders.append(best)
+        taken.add(best)
+
+    if capacity_regions and len(leaders) > 1:
+        caps = [max(1e-3, 1.0 - cluster.load_of(nd)) for nd in leaders]
+        total_cap = sum(caps)
+        new_regions: List[Tuple[int, int]] = []
+        start_stripe = 0
+        total_stripes = n_stripes
+        for j, cap in enumerate(caps):
+            if j == len(caps) - 1:
+                n_str = total_stripes - start_stripe
+            else:
+                n_str = max(1, round(total_stripes * cap / total_cap))
+                n_str = min(n_str, total_stripes - start_stripe - (len(caps) - 1 - j))
+            s0 = start_stripe * stripe
+            e0 = min((start_stripe + n_str) * stripe, n_stripes * stripe)
+            new_regions.append((s0, e0))
+            start_stripe += n_str
+        regions = [r for r in new_regions if r[0] < r[1]]
+        leaders = leaders[: len(regions)]
+
+    return LeaderAssignment(leaders=leaders, regions=regions)

@@ -1,0 +1,564 @@
+"""Discrete-event, max-min-fair flow simulator for pricing FlushPlans.
+
+The real executor (:mod:`repro.core.storage`) runs plans against actual
+files; this module prices the *same* plans on a modeled Theta-like
+machine so the benchmark harness can reproduce the paper's Figures 1-2 at
+thousands-of-ranks scale on one CPU box.
+
+Model
+-----
+Byte movements become *flows* traversing shared resources; concurrent
+flows share capacity max-min fairly (progressive filling, recomputed at
+every flow start/finish — the standard fluid network approximation).
+Resources:
+
+* per-node NIC tx / rx (Aries injection, application keeps
+  ``app_net_load`` of tx for itself — the Tseng et al. interference
+  trade-off),
+* per-node local-storage read bandwidth (draining L1 checkpoints),
+* the PFS data path as one aggregate resource (writes stripe round-robin
+  over all OSTs, so every writer engages every OST ~uniformly; per-OST
+  lock conflicts are priced separately as a capacity derating),
+* a metadata server with bounded op throughput gating file opens,
+* a per-flow stream cap (one client stream cannot saturate Lustre).
+
+Flow shapes are derived from plan *structure*, not strategy name:
+
+* direct writes (file-per-process, POSIX aggregation):
+  ``[SSD_read(home), NIC_tx(home), PFS]``;
+* pipelined leader aggregation (paper §3): one cut-through flow
+  ``[SSD_read(home), NIC_tx(home), NIC_rx(leader), NIC_tx(leader), PFS]``
+  — leaders stream, receive and write overlap;
+* barrier-synchronized collective rounds (MPI-IO, GIO) are priced with a
+  closed-form per-round model (gather makespan + write makespan, rounds
+  strictly ordered) — barriers remove the overlap that the event loop
+  exists to capture, so the analytic form is both faster and faithful.
+
+Lock contention ("false sharing", §2.1) derates PFS capacity:
+
+* non-stripe-aligned shared-file writes: each write RPC into a file with
+  ``W > 1`` concurrent writers risks a Lustre extent-lock revocation;
+  conflict cost ``rpcs * (W-1)/W * penalty`` serialized across OSTs
+  ⇒ ``eff = T_pure / (T_pure + T_lock)``;
+* stripe-disjoint plans (MPI-IO leaders, §3 proposal): only ownership
+  switches between adjacent extents conflict, with lockahead (half
+  penalty) — near-zero derating, by construction.
+
+Calibration targets (see EXPERIMENTS.md §Calibration): POSIX aggregation
+degrades ~3x vs file-per-process at paper scale (Fig. 2), local phase is
+orders of magnitude faster than GIO-direct (Fig. 1), aggregation leaves
+the local phase unchanged (Fig. 1).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec
+from repro.core.plan import FlushPlan, SendItem, WriteItem
+
+MAX_RPC = 4 << 20  # Lustre max RPC size (4 MiB)
+
+
+# ---------------------------------------------------------------------------
+# Static plan analytics
+# ---------------------------------------------------------------------------
+
+
+def pfs_lock_efficiency(
+    plan: FlushPlan, *, rpc_size: Optional[int] = None
+) -> Tuple[float, float]:
+    """Return (PFS efficiency in (0,1], lock seconds serialized per OST)."""
+    pfs = plan.cluster.pfs
+    n_srv = max(1, min(pfs.stripe_count, pfs.n_io_servers))
+    rpc = min(int(rpc_size or pfs.stripe_size), MAX_RPC)
+    penalty = pfs.lock_switch_penalty
+
+    per_file_writers: Dict[str, set] = defaultdict(set)
+    per_file_bytes: Dict[str, int] = defaultdict(int)
+    per_file_extents: Dict[str, List[Tuple[int, int]]] = defaultdict(list)
+    for w in plan.writes:
+        per_file_writers[w.file].add(w.backend)
+        per_file_bytes[w.file] += w.size
+        per_file_extents[w.file].append((w.file_offset, w.backend))
+
+    if plan.stripe_disjoint:
+        # Only extent-ownership switches conflict; stripe-aligned writers
+        # benefit from Lustre lockahead => half penalty.
+        switches = 0
+        for f, ext in per_file_extents.items():
+            if len(per_file_writers[f]) <= 1:
+                continue
+            ext.sort()
+            switches += sum(
+                1 for (_, a), (_, b) in zip(ext, ext[1:]) if a != b
+            )
+        lock_time = switches / n_srv * (penalty * 0.5)
+    else:
+        conflicted = 0.0
+        for f, wset in per_file_writers.items():
+            w_count = len(wset)
+            if w_count <= 1:
+                continue
+            conflicted += per_file_bytes[f] / rpc * (w_count - 1) / w_count
+        lock_time = conflicted / n_srv * penalty
+
+    t_pure = plan.total_bytes / pfs.aggregate_bw
+    if lock_time <= 0 or t_pure <= 0:
+        return 1.0, max(lock_time, 0.0)
+    eff = t_pure / (t_pure + lock_time)
+    return max(eff, 1e-3), lock_time
+
+
+def metadata_schedule(plan: FlushPlan) -> Dict[Tuple[int, str], float]:
+    """Completion time of each (backend, file) open through the MDS queue.
+
+    File creates (one per file) are serviced first, then opens, all by a
+    single metadata server with bounded throughput.  The returned times
+    gate the first write of each (backend, file).
+    """
+    pfs = plan.cluster.pfs
+    opens = sorted({(w.backend, w.file) for w in plan.writes})
+    n_creates = len(plan.files)
+    done: Dict[Tuple[int, str], float] = {}
+    for i, key in enumerate(opens):
+        ops_before = n_creates + i + 1
+        done[key] = pfs.md_latency + ops_before / pfs.md_ops_per_sec
+    return done
+
+
+def _coalesce_writes_for_sim(writes: List[WriteItem]) -> List[WriteItem]:
+    """Contiguous-run merge per (round, backend, file, src_rank)."""
+    ws = sorted(
+        writes, key=lambda w: (w.round, w.backend, w.file, w.src_rank, w.file_offset)
+    )
+    out: List[WriteItem] = []
+    for w in ws:
+        if out:
+            p = out[-1]
+            if (
+                p.round == w.round
+                and p.backend == w.backend
+                and p.file == w.file
+                and p.src_rank == w.src_rank
+                and p.file_offset + p.size == w.file_offset
+                and p.src_offset + p.size == w.src_offset
+            ):
+                out[-1] = WriteItem(
+                    backend=p.backend, file=p.file, file_offset=p.file_offset,
+                    size=p.size + w.size, src_rank=p.src_rank,
+                    src_offset=p.src_offset, round=p.round,
+                )
+                continue
+        out.append(w)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SimReport:
+    strategy: str
+    n_ranks: int
+    total_bytes: int
+    local_time: float
+    local_bw: float
+    flush_time: float
+    flush_bw: float
+    md_gate_time: float
+    pfs_lock_eff: float
+    lock_time_per_ost: float
+    network_bytes: int
+    n_files: int
+    metadata_ops: int
+    scan_time: float
+    app_slowdown: float
+    n_rounds: int
+    synchronous: bool
+    per_backend_finish: Dict[int, float] = field(default_factory=dict)
+
+    def row(self) -> Dict[str, object]:
+        d = dict(self.__dict__)
+        d.pop("per_backend_finish")
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Event-driven fluid simulation (asynchronous, pipelined strategies)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Flow:
+    fid: int
+    nbytes: float
+    resources: Tuple[int, ...]
+    slot_nodes: Tuple[int, ...]
+    gate: float = 0.0
+    max_rate: float = math.inf
+    remaining: float = 0.0
+    backend: int = -1
+
+    def __post_init__(self):
+        self.remaining = float(self.nbytes)
+
+
+class _FluidSim:
+    """Max-min fair sharing with per-node worker slots and start gates."""
+
+    def __init__(self, caps: np.ndarray, io_threads: int, n_nodes: int):
+        self.caps = caps
+        self.slots = [io_threads] * n_nodes
+        self.active: List[_Flow] = []
+        self.queues: List[deque] = [deque() for _ in range(n_nodes)]
+        self.arrivals: List[Tuple[float, int, _Flow]] = []
+        self.started: set = set()
+        self.finish_times: Dict[int, float] = {}
+
+    def run(self, flows: List[_Flow], t0: float = 0.0) -> Tuple[float, Dict[int, float]]:
+        if not flows:
+            return t0, {}
+        for f in flows:
+            heapq.heappush(self.arrivals, (max(f.gate, t0), f.fid, f))
+        now = t0
+        per_backend: Dict[int, float] = {}
+        rates = np.zeros(0)
+
+        def try_start_from(node: int) -> bool:
+            changed = False
+            q = self.queues[node]
+            n = len(q)
+            for _ in range(n):
+                f = q.popleft()
+                if f.fid in self.started:
+                    changed = changed  # duplicate entry; drop
+                    continue
+                if all(self.slots[nd] > 0 for nd in f.slot_nodes):
+                    for nd in f.slot_nodes:
+                        self.slots[nd] -= 1
+                    self.started.add(f.fid)
+                    self.active.append(f)
+                    changed = True
+                else:
+                    q.append(f)
+            return changed
+
+        def admit(f: _Flow) -> bool:
+            if all(self.slots[nd] > 0 for nd in f.slot_nodes):
+                for nd in f.slot_nodes:
+                    self.slots[nd] -= 1
+                self.started.add(f.fid)
+                self.active.append(f)
+                return True
+            for nd in set(f.slot_nodes):
+                self.queues[nd].append(f)
+            return False
+
+        while self.active or self.arrivals:
+            # admit everything that has arrived by `now`
+            changed = False
+            while self.arrivals and self.arrivals[0][0] <= now + 1e-12:
+                _, _, f = heapq.heappop(self.arrivals)
+                changed |= admit(f)
+            if not self.active:
+                if self.arrivals:
+                    now = self.arrivals[0][0]
+                    continue
+                break
+            rates = _maxmin_rates(self.active, self.caps)
+            rem = np.array([f.remaining for f in self.active])
+            with np.errstate(divide="ignore"):
+                ttf = np.where(rates > 0, rem / np.maximum(rates, 1e-30), np.inf)
+            dt = float(ttf.min())
+            next_arrival = self.arrivals[0][0] if self.arrivals else math.inf
+            dt = min(dt, next_arrival - now)
+            if not math.isfinite(dt):
+                raise RuntimeError("simulation stalled: active flows with zero rate")
+            dt = max(dt, 0.0)
+            now += dt
+            # progress + completions
+            new_active: List[_Flow] = []
+            freed_nodes: List[int] = []
+            for f, r in zip(self.active, rates):
+                f.remaining -= r * dt
+                if f.remaining <= 1e-6:
+                    self.finish_times[f.fid] = now
+                    per_backend[f.backend] = max(per_backend.get(f.backend, 0.0), now)
+                    for nd in f.slot_nodes:
+                        self.slots[nd] += 1
+                        freed_nodes.append(nd)
+                else:
+                    new_active.append(f)
+            self.active = new_active
+            for nd in set(freed_nodes):
+                try_start_from(nd)
+        return now, per_backend
+
+
+def _maxmin_rates(active: List[_Flow], caps: np.ndarray) -> np.ndarray:
+    """Progressive-filling max-min fair rates (vectorized)."""
+    nf = len(active)
+    max_deg = max(len(f.resources) for f in active)
+    res = np.full((nf, max_deg), -1, dtype=np.int64)
+    for i, f in enumerate(active):
+        res[i, : len(f.resources)] = f.resources
+    flow_cap = np.array([f.max_rate for f in active])
+    rates = np.zeros(nf)
+    frozen = np.zeros(nf, dtype=bool)
+    res_cap = caps.astype(np.float64).copy()
+    nres = len(caps)
+
+    valid = res >= 0
+    for _ in range(nres + nf + 1):
+        if frozen.all():
+            break
+        un = ~frozen
+        # per-resource count of unfrozen flows
+        idx = res[un][valid[un]]
+        if idx.size == 0:
+            rates[un] = np.minimum(flow_cap[un], np.inf)
+            break
+        counts = np.bincount(idx, minlength=nres)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            share = np.where(counts > 0, res_cap / np.maximum(counts, 1), np.inf)
+        bottleneck = int(np.argmin(share))
+        b_share = float(share[bottleneck])
+        # flows capped below the bottleneck share freeze at their own cap
+        capped = un & (flow_cap <= b_share + 1e-9)
+        if capped.any():
+            rates[capped] = flow_cap[capped]
+            frozen |= capped
+            for i in np.where(capped)[0]:
+                for r in active[i].resources:
+                    res_cap[r] -= rates[i]
+            continue
+        if not math.isfinite(b_share):
+            rates[un] = flow_cap[un]
+            break
+        touch = un & (res == bottleneck).any(axis=1)
+        rates[touch] = b_share
+        frozen |= touch
+        for i in np.where(touch)[0]:
+            for r in active[i].resources:
+                if r != bottleneck:
+                    res_cap[r] -= b_share
+        res_cap[bottleneck] = 0.0
+    return np.maximum(rates, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# The simulator facade
+# ---------------------------------------------------------------------------
+
+
+class FlushSimulator:
+    def __init__(
+        self,
+        plan: FlushPlan,
+        *,
+        io_threads: int = 2,
+        rpc_size: Optional[int] = None,
+        msg_latency: float = 5e-6,
+    ) -> None:
+        self.plan = plan
+        self.cluster = plan.cluster
+        self.io_threads = max(1, int(io_threads))
+        self.rpc_size = rpc_size
+        self.msg_latency = msg_latency
+
+    # resource ids: [0,n) NIC_tx · [n,2n) NIC_rx · [2n,3n) SSD_read · [3n] PFS
+    def _caps(self, pfs_eff: float) -> np.ndarray:
+        c = self.cluster
+        n = c.n_nodes
+        caps = np.empty(3 * n + 1)
+        for i in range(n):
+            derate = max(1e-3, 1.0 - c.load_of(i))
+            caps[i] = c.node.nic_bw * (1.0 - c.node.app_net_load) * derate
+            caps[n + i] = c.node.nic_bw * derate
+            caps[2 * n + i] = c.node.local_read_bw * derate
+        caps[3 * n] = c.pfs.aggregate_bw * pfs_eff
+        return caps
+
+    def run(self) -> SimReport:
+        plan = self.plan
+        c = self.cluster
+        pfs_eff, lock_time = pfs_lock_efficiency(plan, rpc_size=self.rpc_size)
+        md_gate = metadata_schedule(plan)
+        md_max = max(md_gate.values(), default=0.0)
+
+        scan_time = 0.0
+        if plan.scan_meta is not None:
+            scan_time = (
+                plan.scan_meta.rounds * self.msg_latency
+                + plan.scan_meta.messages * plan.scan_meta.payload_bytes / c.node.nic_bw
+            )
+
+        if plan.barrier_per_round:
+            flush_time, per_backend = self._analytic_rounds(pfs_eff, md_max)
+        else:
+            flush_time, per_backend = self._event_driven(pfs_eff, md_gate)
+        flush_time += scan_time
+
+        total = plan.total_bytes
+        if plan.synchronous:
+            local_time = flush_time  # GIO: app blocked for the whole write
+        else:
+            per_node_bytes: Dict[int, int] = defaultdict(int)
+            for r, s in enumerate(plan.rank_sizes):
+                per_node_bytes[c.node_of_rank(r)] += s
+            local_time = (
+                max(
+                    (
+                        b / (c.node.local_bw * max(1e-3, 1.0 - c.load_of(nd)))
+                        for nd, b in per_node_bytes.items()
+                    ),
+                    default=0.0,
+                )
+                + scan_time
+            )
+
+        net_bytes = plan.network_bytes()
+        cpu_steal = self.io_threads / c.node.cores
+        net_frac = 0.0
+        if flush_time > 0 and not plan.synchronous:
+            net_frac = min(
+                1.0, (net_bytes + total) / (c.n_nodes * c.node.nic_bw * flush_time)
+            )
+        app_slowdown = (
+            1.0
+            if plan.synchronous
+            else cpu_steal + net_frac * c.node.app_net_load
+        )
+
+        return SimReport(
+            strategy=plan.strategy,
+            n_ranks=c.world_size,
+            total_bytes=total,
+            local_time=local_time,
+            local_bw=total / local_time if local_time > 0 else float("inf"),
+            flush_time=flush_time,
+            flush_bw=total / flush_time if flush_time > 0 else float("inf"),
+            md_gate_time=md_max,
+            pfs_lock_eff=pfs_eff,
+            lock_time_per_ost=lock_time,
+            network_bytes=net_bytes,
+            n_files=plan.n_files,
+            metadata_ops=plan.metadata_ops(),
+            scan_time=scan_time,
+            app_slowdown=app_slowdown,
+            n_rounds=plan.n_rounds,
+            synchronous=plan.synchronous,
+            per_backend_finish=per_backend,
+        )
+
+    # -- asynchronous strategies: event loop --------------------------------
+    def _event_driven(
+        self, pfs_eff: float, md_gate: Dict[Tuple[int, str], float]
+    ) -> Tuple[float, Dict[int, float]]:
+        plan = self.plan
+        c = self.cluster
+        n = c.n_nodes
+        R_TX, R_RX, R_SSD, R_PFS = 0, n, 2 * n, 3 * n
+        stream_cap = c.pfs.client_stream_bw
+        writes = _coalesce_writes_for_sim(plan.writes)
+        flows: List[_Flow] = []
+        for fid, w in enumerate(writes):
+            home = c.node_of_rank(w.src_rank)
+            gate = md_gate.get((w.backend, w.file), 0.0)
+            if w.backend == home:
+                flows.append(
+                    _Flow(
+                        fid, w.size,
+                        (R_SSD + home, R_TX + home, R_PFS),
+                        slot_nodes=(home,),
+                        gate=gate, max_rate=stream_cap, backend=w.backend,
+                    )
+                )
+            else:
+                # pipelined cut-through gather+write (paper §3 streaming)
+                flows.append(
+                    _Flow(
+                        fid, w.size,
+                        (R_SSD + home, R_TX + home, R_RX + w.backend,
+                         R_TX + w.backend, R_PFS),
+                        slot_nodes=(home, w.backend),
+                        gate=gate, max_rate=stream_cap, backend=w.backend,
+                    )
+                )
+        sim = _FluidSim(self._caps(pfs_eff), self.io_threads, n)
+        return sim.run(flows)
+
+    # -- collective strategies: closed-form barrier rounds -------------------
+    def _analytic_rounds(
+        self, pfs_eff: float, md_max: float
+    ) -> Tuple[float, Dict[int, float]]:
+        plan = self.plan
+        c = self.cluster
+        stream_cap = c.pfs.client_stream_bw
+        nic_tx_eff = c.node.nic_bw * (1.0 - c.node.app_net_load)
+
+        rounds = sorted({w.round for w in plan.writes} | {s.round for s in plan.sends})
+        sends_by_round: Dict[int, List[SendItem]] = defaultdict(list)
+        for s in plan.sends:
+            sends_by_round[s.round].append(s)
+        writes_by_round: Dict[int, List[WriteItem]] = defaultdict(list)
+        for w in plan.writes:
+            writes_by_round[w.round].append(w)
+
+        t = md_max  # all backends must open before the first collective
+        per_backend: Dict[int, float] = {}
+        for rnd in rounds:
+            out_b: Dict[int, int] = defaultdict(int)
+            in_b: Dict[int, int] = defaultdict(int)
+            read_b: Dict[int, int] = defaultdict(int)
+            for s in sends_by_round.get(rnd, []):
+                out_b[s.src_backend] += s.size
+                in_b[s.dst_backend] += s.size
+                if not plan.synchronous:
+                    read_b[s.src_backend] += s.size
+            wr_b: Dict[int, int] = defaultdict(int)
+            round_bytes = 0
+            for w in writes_by_round.get(rnd, []):
+                wr_b[w.backend] += w.size
+                round_bytes += w.size
+                home = c.node_of_rank(w.src_rank)
+                if home == w.backend and not plan.synchronous:
+                    read_b[home] += w.size
+
+            def _derate(nd: int) -> float:
+                return max(1e-3, 1.0 - c.load_of(nd))
+
+            t_gather = 0.0
+            for nd in set(out_b) | set(in_b) | set(read_b):
+                d = _derate(nd)
+                t_gather = max(
+                    t_gather,
+                    out_b.get(nd, 0) / (nic_tx_eff * d),
+                    in_b.get(nd, 0) / (c.node.nic_bw * d),
+                    read_b.get(nd, 0) / (c.node.local_read_bw * d),
+                )
+            t_write = round_bytes / (c.pfs.aggregate_bw * pfs_eff) if round_bytes else 0.0
+            for nd, b in wr_b.items():
+                t_write = max(
+                    t_write,
+                    b / min(nic_tx_eff * _derate(nd),
+                            stream_cap * self.io_threads),
+                )
+            t += t_gather + t_write
+            for nd in wr_b:
+                per_backend[nd] = t
+        return t, per_backend
+
+
+def simulate_flush(
+    plan: FlushPlan, *, io_threads: int = 2, rpc_size: Optional[int] = None
+) -> SimReport:
+    return FlushSimulator(plan, io_threads=io_threads, rpc_size=rpc_size).run()

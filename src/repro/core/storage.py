@@ -1,0 +1,239 @@
+"""Real filesystem executor: runs FlushPlans against actual files.
+
+Directory layout (``root`` is the checkpoint root):
+
+.. code-block:: text
+
+    root/
+      local/node_{j}/step_{s}/rank_{r}.blob      # L1 node-local files
+      local/node_{j}/step_{s}/rank_{r}.partner   # optional peer replica
+      local/manifests/step_{s}.json              # manifest @ local_done
+      pfs/step_{s}/<plan files>                  # L2 aggregated/unaggregated
+      pfs/step_{s}/manifest.json                 # manifest @ flush_done
+
+"Network sends" in a single-process harness are leader-side reads of the
+source node's L1 file — the executor never touches the in-memory blobs
+during the flush, so the flush path exercises exactly what a distributed
+deployment would: node-local read -> (ship) -> pwrite at the planned
+offset of the shared file.
+
+Fault injection: ``fault_hook(write_item)`` may raise to simulate an
+active-backend crash mid-flush; partially written PFS state is left
+behind with the manifest still at ``local_done`` — restart logic must
+(and does, see tests) fall back to L1.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor, as_completed
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.plan import FlushPlan, WriteItem
+from repro.core.serialize import Manifest
+
+
+class LocalStore:
+    """L1: per-node local directories (simulated node-local SSDs)."""
+
+    def __init__(self, root: Path, n_nodes: int):
+        self.root = Path(root)
+        self.n_nodes = n_nodes
+
+    def node_dir(self, node: int, step: int) -> Path:
+        return self.root / f"node_{node:04d}" / f"step_{step:08d}"
+
+    def blob_path(self, node: int, step: int, rank: int, partner: bool = False) -> Path:
+        ext = "partner" if partner else "blob"
+        return self.node_dir(node, step) / f"rank_{rank:06d}.{ext}"
+
+    def write_blob(
+        self, node: int, step: int, rank: int, data: bytes, *, partner: bool = False
+    ) -> None:
+        p = self.blob_path(node, step, rank, partner)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_suffix(p.suffix + ".tmp")
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, p)
+
+    def read_blob(
+        self, node: int, step: int, rank: int, *, partner: bool = False
+    ) -> bytes:
+        return self.blob_path(node, step, rank, partner).read_bytes()
+
+    def read_slice(
+        self, node: int, step: int, rank: int, offset: int, size: int
+    ) -> bytes:
+        with open(self.blob_path(node, step, rank), "rb") as f:
+            f.seek(offset)
+            return f.read(size)
+
+    def has_blob(self, node: int, step: int, rank: int, *, partner: bool = False) -> bool:
+        return self.blob_path(node, step, rank, partner).exists()
+
+    def drop_node(self, node: int, step: Optional[int] = None) -> None:
+        """Simulate node-local storage loss (node failure)."""
+        p = (
+            self.root / f"node_{node:04d}"
+            if step is None
+            else self.node_dir(node, step)
+        )
+        if p.exists():
+            shutil.rmtree(p)
+
+    def gc_step(self, step: int) -> None:
+        for nd in self.root.glob("node_*"):
+            p = nd / f"step_{step:08d}"
+            if p.exists():
+                shutil.rmtree(p)
+
+
+@dataclass
+class FlushResult:
+    step: int
+    duration: float
+    bytes_written: int
+    n_writes: int
+    failed: bool = False
+    error: Optional[str] = None
+
+
+class RealExecutor:
+    """Executes a FlushPlan against files under ``pfs_dir``."""
+
+    def __init__(
+        self,
+        pfs_dir: Path,
+        local: LocalStore,
+        *,
+        io_threads: int = 2,
+        fault_hook: Optional[Callable[[WriteItem], None]] = None,
+    ):
+        self.pfs_dir = Path(pfs_dir)
+        self.local = local
+        self.io_threads = max(1, io_threads)
+        self.fault_hook = fault_hook
+
+    def step_dir(self, step: int) -> Path:
+        return self.pfs_dir / f"step_{step:08d}"
+
+    def execute(self, plan: FlushPlan, step: int) -> FlushResult:
+        t0 = time.perf_counter()
+        sdir = self.step_dir(step)
+        sdir.mkdir(parents=True, exist_ok=True)
+
+        # Pre-create + size every file (the metadata phase).
+        fds: Dict[str, int] = {}
+        try:
+            for fname, size in plan.files.items():
+                path = sdir / fname
+                fd = os.open(str(path), os.O_CREAT | os.O_WRONLY, 0o644)
+                os.ftruncate(fd, size)
+                fds[fname] = fd
+
+            cluster = plan.cluster
+            lock = threading.Lock()
+            total = {"bytes": 0, "writes": 0}
+
+            def do_write(w: WriteItem) -> None:
+                if self.fault_hook is not None:
+                    self.fault_hook(w)
+                home = cluster.node_of_rank(w.src_rank)
+                # leader pulls from the source node's L1 file ("the send")
+                data = self.local.read_slice(home, step, w.src_rank, w.src_offset, w.size)
+                if len(data) != w.size:
+                    raise IOError(
+                        f"short read: rank {w.src_rank} [{w.src_offset}:"
+                        f"{w.src_offset + w.size})"
+                    )
+                os.pwrite(fds[w.file], data, w.file_offset)
+                with lock:
+                    total["bytes"] += w.size
+                    total["writes"] += 1
+
+            # Global worker pool == work stealing across backends: idle
+            # backends' threads drain the shared queue (the straggler
+            # mitigation used by our §3 implementation; see DESIGN.md).
+            n_backends = len({w.backend for w in plan.writes}) or 1
+            workers = min(16, self.io_threads * n_backends)
+
+            if plan.barrier_per_round:
+                rounds = sorted({w.round for w in plan.writes})
+                for rnd in rounds:
+                    batch = [w for w in plan.writes if w.round == rnd]
+                    self._run_batch(batch, do_write, workers)
+            else:
+                self._run_batch(list(plan.writes), do_write, workers)
+
+            for fd in fds.values():
+                os.fsync(fd)
+            return FlushResult(
+                step=step,
+                duration=time.perf_counter() - t0,
+                bytes_written=total["bytes"],
+                n_writes=total["writes"],
+            )
+        finally:
+            for fd in fds.values():
+                try:
+                    os.close(fd)
+                except OSError:
+                    pass
+
+    @staticmethod
+    def _run_batch(
+        batch: List[WriteItem],
+        fn: Callable[[WriteItem], None],
+        workers: int,
+    ) -> None:
+        if not batch:
+            return
+        if workers <= 1 or len(batch) == 1:
+            for w in batch:
+                fn(w)
+            return
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            futs = [ex.submit(fn, w) for w in batch]
+            for f in as_completed(futs):
+                f.result()  # re-raise worker exceptions
+
+    # ---- read side --------------------------------------------------------
+
+    def read_rank_blob(self, manifest: Manifest, step: int, rank: int) -> bytes:
+        """Reassemble one rank's stored blob from the PFS placement."""
+        entries = manifest.placement.get(rank, [])
+        size = manifest.ranks[rank].stored_size
+        buf = bytearray(size)
+        got = 0
+        sdir = self.step_dir(step)
+        for fname, file_off, src_off, n in entries:
+            with open(sdir / fname, "rb") as f:
+                f.seek(file_off)
+                data = f.read(n)
+            if len(data) != n:
+                raise IOError(f"short PFS read for rank {rank}")
+            buf[src_off : src_off + n] = data
+            got += n
+        if got != size:
+            raise IOError(
+                f"rank {rank}: placement covers {got} of {size} stored bytes"
+            )
+        return bytes(buf)
+
+
+def placement_from_plan(plan: FlushPlan) -> Dict[int, List[Tuple[str, int, int, int]]]:
+    out: Dict[int, List[Tuple[str, int, int, int]]] = {}
+    for w in plan.writes:
+        out.setdefault(w.src_rank, []).append(
+            (w.file, w.file_offset, w.src_offset, w.size)
+        )
+    for v in out.values():
+        v.sort(key=lambda e: e[2])
+    return out

@@ -1,0 +1,489 @@
+"""Aggregation strategies for the asynchronous flush phase.
+
+Implemented strategies (paper section in brackets):
+
+* ``file_per_process``  — VELOC default baseline: N ranks -> N files, zero
+  coordination [§1].
+* ``posix``             — prefix-sum offsets into one shared file, each
+  active backend pwrite()s its co-located ranks' data [§2.1].  Suffers
+  false sharing on PFS stripes.
+* ``mpiio``             — GenericIO-style two-phase collective: I/O
+  leaders matched to the number of I/O servers, disjoint stripe sets,
+  one *barrier-synchronized collective round per node-local checkpoint*
+  (the paper's multi-phase workaround for MPI-IO's single-contiguous-
+  buffer restriction) [§2.2].
+* ``stripe_aligned``    — the paper's §3 proposal, fully implemented:
+  piggy-backed prefix-sum -> deterministic election of M leaders ->
+  static stripe-aligned region ownership -> non-leaders stream their
+  bytes to the owning leader(s); no barriers, no collectives.
+* ``gio_sync``          — synchronous GenericIO-like baseline (blocks the
+  application; used for the Fig. 1/2 comparison).
+
+Every strategy returns a validated :class:`~repro.core.plan.FlushPlan`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.cluster import ClusterSpec
+from repro.core.plan import FlushPlan, SendItem, WriteItem, validate_plan
+from repro.core.prefix_sum import (
+    elect_leaders,
+    exclusive_prefix_sum,
+    piggybacked_scan,
+)
+
+AGGREGATE_FILE = "aggregate.dat"
+
+
+def _rank_file(rank: int) -> str:
+    return f"rank_{rank:06d}.dat"
+
+
+# ---------------------------------------------------------------------------
+# Baseline: one file per process (VELOC default)
+# ---------------------------------------------------------------------------
+
+
+def plan_file_per_process(
+    cluster: ClusterSpec, rank_sizes: Sequence[int], **_: object
+) -> FlushPlan:
+    writes: List[WriteItem] = []
+    files: Dict[str, int] = {}
+    for rank, size in enumerate(rank_sizes):
+        if size == 0:
+            continue
+        fname = _rank_file(rank)
+        files[fname] = int(size)
+        writes.append(
+            WriteItem(
+                backend=cluster.node_of_rank(rank),
+                file=fname,
+                file_offset=0,
+                size=int(size),
+                src_rank=rank,
+                src_offset=0,
+            )
+        )
+    plan = FlushPlan(
+        strategy="file_per_process",
+        cluster=cluster,
+        rank_sizes=[int(s) for s in rank_sizes],
+        files=files,
+        writes=writes,
+        scan_meta=None,  # embarrassingly parallel: no coordination at all
+        stripe_disjoint=True,  # distinct files => distinct OST objects
+    )
+    validate_plan(plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# §2.1 POSIX-based aggregation
+# ---------------------------------------------------------------------------
+
+
+def plan_posix(
+    cluster: ClusterSpec,
+    rank_sizes: Sequence[int],
+    *,
+    write_chunk: Optional[int] = None,
+    **_: object,
+) -> FlushPlan:
+    """Shared file, prefix-sum offsets, independent pwrites per backend.
+
+    Writes are issued in ``write_chunk``-sized pieces (default: one write
+    per rank blob) — the chunking matters to the simulator's request-size
+    efficiency model and to straggler-mitigating work stealing, not to
+    correctness.  No attempt is made to align to stripes: that is
+    precisely the false-sharing bug this strategy exhibits.
+    """
+    offsets, total = exclusive_prefix_sum(rank_sizes)
+    scan = piggybacked_scan(cluster, rank_sizes, payload_extra_bytes=0)
+    writes: List[WriteItem] = []
+    for rank, size in enumerate(rank_sizes):
+        size = int(size)
+        if size == 0:
+            continue
+        backend = cluster.node_of_rank(rank)
+        step = size if not write_chunk else max(1, int(write_chunk))
+        pos = 0
+        while pos < size:
+            n = min(step, size - pos)
+            writes.append(
+                WriteItem(
+                    backend=backend,
+                    file=AGGREGATE_FILE,
+                    file_offset=offsets[rank] + pos,
+                    size=n,
+                    src_rank=rank,
+                    src_offset=pos,
+                )
+            )
+            pos += n
+    plan = FlushPlan(
+        strategy="posix",
+        cluster=cluster,
+        rank_sizes=[int(s) for s in rank_sizes],
+        files={AGGREGATE_FILE: total},
+        writes=writes,
+        scan_meta=scan.meta,
+        stripe_disjoint=False,  # the whole point of §2.1's finding
+    )
+    validate_plan(plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# §2.2 MPI-IO collective aggregation (two-phase I/O, multi-round)
+# ---------------------------------------------------------------------------
+
+
+def plan_mpiio(
+    cluster: ClusterSpec,
+    rank_sizes: Sequence[int],
+    *,
+    n_leaders: Optional[int] = None,
+    chunk_stripes: int = 1,
+    **_: object,
+) -> FlushPlan:
+    """Two-phase collective write with I/O leaders.
+
+    Faithful to the paper's description of running GenericIO-style
+    aggregation from the active backends:
+
+    * leaders = min(#I/O servers, #backends) — observation (1);
+    * each leader owns a disjoint, stripe-aligned *interleaved* stripe set
+      (leader j owns stripes ``{s : s % M == j}``) — observation (2),
+      eliminating false sharing;
+    * MPI-IO accepts one contiguous region per rank per collective call,
+      and each backend holds ``procs_per_node`` node-local checkpoints, so
+      the flush needs ``procs_per_node`` successive barrier-synchronized
+      collective rounds — the paper's multi-phase workaround.  Round k
+      collectively writes every node's k-th local checkpoint.
+
+    ``chunk_stripes`` coarsens the exchange granularity to ``chunk_stripes``
+    PFS stripes per unit (ADIO ``cb_buffer_size`` analogue); 1 = exact
+    stripe-granular two-phase I/O.  Benchmarks at Theta scale use larger
+    values to keep plan sizes tractable; correctness is unaffected (the
+    plan validator enforces coverage either way).
+    """
+    offsets, total = exclusive_prefix_sum(rank_sizes)
+    scan = piggybacked_scan(cluster, rank_sizes, payload_extra_bytes=0)
+    pfs = cluster.pfs
+    stripe = pfs.stripe_size * max(1, int(chunk_stripes))
+    m = min(
+        n_leaders if n_leaders is not None else pfs.n_io_servers,
+        cluster.n_nodes,
+        max(1, pfs.n_stripes(total)),
+    )
+    # Interleaved static stripe ownership: stripe s -> leader (s % m).
+    leader_nodes = list(range(m))  # ADIO-style: first M backends aggregate
+
+    writes: List[WriteItem] = []
+    sends: List[SendItem] = []
+    for local_idx in range(cluster.procs_per_node):  # one collective / round
+        rnd = local_idx + 1
+        for node in range(cluster.n_nodes):
+            rank = node * cluster.procs_per_node + local_idx
+            size = int(rank_sizes[rank])
+            if size == 0:
+                continue
+            base = offsets[rank]
+            pos = 0
+            while pos < size:
+                off = base + pos
+                s_idx = off // stripe
+                stripe_end = (s_idx + 1) * stripe
+                n = min(size - pos, stripe_end - off)
+                leader = leader_nodes[s_idx % m]
+                if leader != node:
+                    sends.append(
+                        SendItem(
+                            src_backend=node,
+                            dst_backend=leader,
+                            src_rank=rank,
+                            src_offset=pos,
+                            size=n,
+                            round=rnd,
+                        )
+                    )
+                writes.append(
+                    WriteItem(
+                        backend=leader,
+                        file=AGGREGATE_FILE,
+                        file_offset=off,
+                        size=n,
+                        src_rank=rank,
+                        src_offset=pos,
+                        round=rnd,
+                    )
+                )
+                pos += n
+    writes = _coalesce_writes(writes)
+    sends = _coalesce_sends(sends)
+    plan = FlushPlan(
+        strategy="mpiio",
+        cluster=cluster,
+        rank_sizes=[int(s) for s in rank_sizes],
+        files={AGGREGATE_FILE: total},
+        writes=writes,
+        sends=sends,
+        scan_meta=scan.meta,
+        n_rounds=cluster.procs_per_node,
+        barrier_per_round=True,  # collective semantics: all ready, together
+        leaders=None,  # interleaved stripe ownership, not contiguous regions
+        stripe_disjoint=True,
+        meta={"interleaved_stripes": True, "m": m, "leader_nodes": leader_nodes},
+    )
+    validate_plan(plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# §3 The paper's proposal: stripe-aligned asynchronous aggregation
+# ---------------------------------------------------------------------------
+
+
+def plan_stripe_aligned(
+    cluster: ClusterSpec,
+    rank_sizes: Sequence[int],
+    *,
+    n_leaders: Optional[int] = None,
+    w_size: float = 1.0,
+    w_load: float = 0.75,
+    w_topo: float = 0.25,
+    pipeline_chunk: Optional[int] = None,
+    capacity_regions: bool = False,
+    **_: object,
+) -> FlushPlan:
+    """M elected leaders own static stripe-aligned regions; everyone else
+    streams bytes to the owning leader(s).  One piggy-backed prefix sum is
+    the only synchronization (paper §3).
+
+    ``pipeline_chunk`` (default: 8 stripes) controls the granularity at
+    which sends/writes are decomposed so leaders can overlap receive and
+    write, and so the work-stealing executor has units to steal.
+    """
+    scan = piggybacked_scan(cluster, rank_sizes)
+    pfs = cluster.pfs
+    stripe = pfs.stripe_size
+    total = scan.total_bytes
+    m = n_leaders if n_leaders is not None else min(
+        pfs.n_io_servers, cluster.n_nodes
+    )
+    assign = elect_leaders(
+        cluster, scan, m, w_size=w_size, w_load=w_load, w_topo=w_topo,
+        capacity_regions=capacity_regions,
+    )
+    chunk = int(pipeline_chunk) if pipeline_chunk else 8 * stripe
+
+    writes: List[WriteItem] = []
+    sends: List[SendItem] = []
+    for rank, size in enumerate(rank_sizes):
+        size = int(size)
+        if size == 0:
+            continue
+        home = cluster.node_of_rank(rank)
+        base = scan.rank_offsets[rank]
+        pos = 0
+        while pos < size:
+            off = base + pos
+            leader = assign.leader_of_offset(off)
+            # Slice ends at the first of: blob end, leader-region end,
+            # pipeline-chunk boundary (aligned to absolute file offsets so
+            # chunk edges coincide with stripe edges).
+            region_end = next(e for (s, e) in assign.regions if s <= off < e)
+            chunk_end = (off // chunk + 1) * chunk
+            n = min(size - pos, region_end - off, chunk_end - off)
+            if leader != home:
+                sends.append(
+                    SendItem(
+                        src_backend=home,
+                        dst_backend=leader,
+                        src_rank=rank,
+                        src_offset=pos,
+                        size=n,
+                    )
+                )
+            writes.append(
+                WriteItem(
+                    backend=leader,
+                    file=AGGREGATE_FILE,
+                    file_offset=off,
+                    size=n,
+                    src_rank=rank,
+                    src_offset=pos,
+                )
+            )
+            pos += n
+    plan = FlushPlan(
+        strategy="stripe_aligned",
+        cluster=cluster,
+        rank_sizes=[int(s) for s in rank_sizes],
+        files={AGGREGATE_FILE: total},
+        writes=writes,
+        sends=sends,
+        scan_meta=scan.meta,
+        leaders=assign,
+        stripe_disjoint=True,
+        meta={"m": assign.m, "pipeline_chunk": chunk},
+    )
+    validate_plan(plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Synchronous GenericIO-like baseline (application blocked)
+# ---------------------------------------------------------------------------
+
+
+def plan_gio_sync(
+    cluster: ClusterSpec,
+    rank_sizes: Sequence[int],
+    *,
+    n_leaders: Optional[int] = None,
+    chunk_stripes: int = 1,
+    **_: object,
+) -> FlushPlan:
+    """Collective synchronous aggregation straight from application ranks.
+
+    Structurally the MPI-IO plan with a single round (GenericIO hands MPI
+    one contiguous buffer per rank) and ``synchronous=True`` — the
+    executor charges the *application* for the full duration, and there is
+    no separate local phase (Fig. 1 shows GIO writing directly to the
+    PFS).
+    """
+    inner = plan_mpiio(
+        cluster, rank_sizes, n_leaders=n_leaders, chunk_stripes=chunk_stripes
+    )
+    writes = [
+        WriteItem(
+            backend=w.backend,
+            file=w.file,
+            file_offset=w.file_offset,
+            size=w.size,
+            src_rank=w.src_rank,
+            src_offset=w.src_offset,
+            round=1,
+        )
+        for w in inner.writes
+    ]
+    sends = [
+        SendItem(
+            src_backend=s.src_backend,
+            dst_backend=s.dst_backend,
+            src_rank=s.src_rank,
+            src_offset=s.src_offset,
+            size=s.size,
+            round=1,
+        )
+        for s in inner.sends
+    ]
+    plan = FlushPlan(
+        strategy="gio_sync",
+        cluster=cluster,
+        rank_sizes=list(inner.rank_sizes),
+        files=dict(inner.files),
+        writes=writes,
+        sends=sends,
+        scan_meta=inner.scan_meta,
+        n_rounds=1,
+        barrier_per_round=True,
+        leaders=inner.leaders,
+        synchronous=True,
+        stripe_disjoint=True,
+        meta=dict(inner.meta),
+    )
+    validate_plan(plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Helpers + registry
+# ---------------------------------------------------------------------------
+
+
+def _coalesce_writes(items: List[WriteItem]) -> List[WriteItem]:
+    """Merge adjacent stripe-chunk writes with identical (backend, file,
+    rank, round) and contiguous offsets into maximal runs."""
+    items = sorted(
+        items, key=lambda w: (w.round, w.backend, w.file, w.src_rank, w.file_offset)
+    )
+    out: List[WriteItem] = []
+    for w in items:
+        if out:
+            p = out[-1]
+            if (
+                p.round == w.round
+                and p.backend == w.backend
+                and p.file == w.file
+                and p.src_rank == w.src_rank
+                and p.file_offset + p.size == w.file_offset
+                and p.src_offset + p.size == w.src_offset
+            ):
+                out[-1] = WriteItem(
+                    backend=p.backend,
+                    file=p.file,
+                    file_offset=p.file_offset,
+                    size=p.size + w.size,
+                    src_rank=p.src_rank,
+                    src_offset=p.src_offset,
+                    round=p.round,
+                )
+                continue
+        out.append(w)
+    return out
+
+
+def _coalesce_sends(items: List[SendItem]) -> List[SendItem]:
+    items = sorted(
+        items,
+        key=lambda s: (s.round, s.src_backend, s.dst_backend, s.src_rank, s.src_offset),
+    )
+    out: List[SendItem] = []
+    for s in items:
+        if out:
+            p = out[-1]
+            if (
+                p.round == s.round
+                and p.src_backend == s.src_backend
+                and p.dst_backend == s.dst_backend
+                and p.src_rank == s.src_rank
+                and p.src_offset + p.size == s.src_offset
+            ):
+                out[-1] = SendItem(
+                    src_backend=p.src_backend,
+                    dst_backend=p.dst_backend,
+                    src_rank=p.src_rank,
+                    src_offset=p.src_offset,
+                    size=p.size + s.size,
+                    round=p.round,
+                )
+                continue
+        out.append(s)
+    return out
+
+
+StrategyFn = Callable[..., FlushPlan]
+
+STRATEGIES: Dict[str, StrategyFn] = {
+    "file_per_process": plan_file_per_process,
+    "posix": plan_posix,
+    "mpiio": plan_mpiio,
+    "stripe_aligned": plan_stripe_aligned,
+    "gio_sync": plan_gio_sync,
+}
+
+
+def make_plan(
+    name: str, cluster: ClusterSpec, rank_sizes: Sequence[int], **kw
+) -> FlushPlan:
+    try:
+        fn = STRATEGIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; available: {sorted(STRATEGIES)}"
+        ) from None
+    return fn(cluster, rank_sizes, **kw)

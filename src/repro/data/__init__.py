@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticTokens
+
+__all__ = ["DataConfig", "SyntheticTokens"]

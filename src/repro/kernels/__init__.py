@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for checkpoint-path compute hot-spots.
+
+The paper optimizes checkpoint I/O; the on-device compute that feeds the
+flush pipeline (integrity checksums, lossy int8 compression, XOR deltas
+for incremental checkpoints) is implemented here as TPU kernels with
+explicit VMEM BlockSpecs, validated on CPU in interpret mode against the
+pure-numpy/jnp oracles in each ``ref.py``.
+"""
+from repro.kernels.checksum import checksum_u32, digest_array, digest_bytes
+from repro.kernels.delta import xor_delta
+from repro.kernels.quantize import dequantize, quantize
+
+__all__ = [
+    "checksum_u32",
+    "digest_array",
+    "digest_bytes",
+    "xor_delta",
+    "quantize",
+    "dequantize",
+]

@@ -1,0 +1,4 @@
+from repro.kernels.checksum.ops import checksum_u32, digest_array, digest_bytes
+from repro.kernels.checksum.ref import checksum_ref_np, digest_ref
+
+__all__ = ["checksum_u32", "digest_array", "digest_bytes", "checksum_ref_np", "digest_ref"]

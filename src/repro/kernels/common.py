@@ -1,0 +1,34 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling)
+and are validated on CPU in interpret mode: ``interpret_default()`` turns
+interpretation on automatically when no TPU is present, so the same
+``ops.py`` entry points run everywhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pad_to_multiple(x: jnp.ndarray, multiple: int, axis: int = 0, value=0):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def bytes_to_u32(data: bytes) -> np.ndarray:
+    buf = np.frombuffer(data, dtype=np.uint8)
+    pad = (-buf.size) % 4
+    if pad:
+        buf = np.concatenate([buf, np.zeros(pad, dtype=np.uint8)])
+    return buf.view(np.uint32)

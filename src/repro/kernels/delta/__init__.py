@@ -1,0 +1,4 @@
+from repro.kernels.delta.ops import xor_delta
+from repro.kernels.delta.ref import delta_ref
+
+__all__ = ["xor_delta", "delta_ref"]

@@ -1,0 +1,11 @@
+from repro.kernels.quantize.ops import dequantize, quantize, quantize_blocks_needed
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref, quantize_ref_jnp
+
+__all__ = [
+    "quantize",
+    "dequantize",
+    "quantize_blocks_needed",
+    "quantize_ref",
+    "dequantize_ref",
+    "quantize_ref_jnp",
+]

@@ -1,0 +1,50 @@
+"""jit'd wrappers: flatten / pad / tile, call the kernels, un-tile."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default
+from repro.kernels.quantize.quantize import BLOCK, ROWS, dequantize_tiles, quantize_tiles
+
+TILE = ROWS * BLOCK
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def quantize(x: jax.Array, *, interpret: bool | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Any-shape float array -> (q int8 (n_blocks, 128), scales (n_blocks,) f32).
+
+    Flattens, zero-pads to a tile multiple; padding blocks quantize to
+    zero scale and are dropped by :func:`dequantize` (which knows the
+    original size).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % TILE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    tiles = flat.reshape(-1, ROWS, BLOCK)
+    q, s = quantize_tiles(tiles, interpret=interpret)
+    return q.reshape(-1, BLOCK), s.reshape(-1)
+
+
+@partial(jax.jit, static_argnames=("n", "interpret"))
+def dequantize(
+    q: jax.Array, s: jax.Array, *, n: int, interpret: bool | None = None
+) -> jax.Array:
+    """(q, scales) -> flat f32 array of length ``n`` (original element count)."""
+    if interpret is None:
+        interpret = interpret_default()
+    tiles = q.reshape(-1, ROWS, BLOCK)
+    sc = s.reshape(-1, ROWS, 1)
+    x = dequantize_tiles(tiles, sc, interpret=interpret)
+    return x.reshape(-1)[:n]
+
+
+def quantize_blocks_needed(n: int) -> int:
+    padded = n + ((-n) % TILE)
+    return padded // BLOCK

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for blockwise int8 quantization.
+
+Block size = 128 values (one VPU lane row).  Per block: symmetric
+absmax scaling,
+
+    scale = max(|x|) / 127          (scale 0 -> block of zeros)
+    q     = round_half_away(x / scale)  clipped to [-127, 127]
+    x'    = q * scale
+
+Round-half-away-from-zero (not banker's rounding) so the kernel and the
+oracle agree bit-exactly on ties across backends.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 128
+
+
+def quantize_ref(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """x: (n_blocks, BLOCK) float -> (q int8 same shape, scales (n_blocks,) f32)."""
+    xf = np.asarray(x, dtype=np.float32)
+    absmax = np.abs(xf).max(axis=-1)
+    scale = absmax / 127.0
+    safe = np.where(scale > 0, scale, 1.0)[:, None]
+    q = np.trunc(xf / safe + np.where(xf >= 0, 0.5, -0.5))
+    q = np.clip(q, -127, 127).astype(np.int8)
+    q = np.where(scale[:, None] > 0, q, 0).astype(np.int8)
+    return q, scale.astype(np.float32)
+
+
+def dequantize_ref(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return (q.astype(np.float32) * np.asarray(scale, np.float32)[:, None]).astype(
+        np.float32
+    )
+
+
+def quantize_ref_jnp(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = absmax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)[:, None]
+    q = jnp.trunc(xf / safe + jnp.where(xf >= 0, 0.5, -0.5))
+    q = jnp.clip(q, -127, 127)
+    q = jnp.where(scale[:, None] > 0, q, 0).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)

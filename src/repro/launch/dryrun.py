@@ -1,0 +1,351 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (test-suite may shrink the placeholder device pool; production stays 512)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+No arrays are ever allocated: inputs are ShapeDtypeStructs, the product
+is the compiled executable's memory/cost analysis + the partitioned HLO,
+from which EXPERIMENTS.md's §Dry-run and §Roofline tables are built.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k                      # one cell, single-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+Results are cached under reports/dryrun/ as JSON; --force recompiles.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.roofline import (
+    DCN_BW, LINK_BW, RooflineTerms, collective_bytes, model_flops,
+)
+from repro.models import get_model
+from repro.models.sharding import (
+    activation_sharding,
+    batch_specs,
+    cache_specs,
+    fsdp_axes,
+    param_specs,
+    _maybe,
+)
+from repro.train import OptConfig, TrainConfig, init_train_state, train_state_specs
+from repro.train.train_step import batch_spec_tree, build_train_step
+
+REPORT_DIR = Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+# per-arch dry-run knobs: grad-microbatching + optimizer/accum dtypes keep
+# the big dense models inside v5e HBM (see EXPERIMENTS.md §Dry-run)
+# microbatch counts tuned in the §Perf loop: fewer microbatches = fewer
+# per-pass FSDP weight re-gathers (the dominant collective everywhere),
+# bounded by activation-stack memory (sequence-parallel residuals).
+KNOBS: Dict[str, Dict[str, Any]] = {
+    "llama3-405b": dict(microbatches=4, opt_dtype="bfloat16", accum="bfloat16"),
+    "qwen2-72b": dict(microbatches=4, opt_dtype="bfloat16", accum="bfloat16"),
+    "llama4-scout-17b-a16e": dict(microbatches=2, opt_dtype="bfloat16", accum="bfloat16"),
+    "llava-next-mistral-7b": dict(microbatches=2, opt_dtype="bfloat16", accum="float32"),
+    "qwen2-moe-a2.7b": dict(microbatches=4, opt_dtype=None, accum="float32"),
+    "recurrentgemma-2b": dict(microbatches=4, opt_dtype=None, accum="float32"),
+    "whisper-small": dict(microbatches=4, opt_dtype=None, accum="float32"),
+    "xlstm-350m": dict(microbatches=4, opt_dtype=None, accum="float32"),
+}
+DEFAULT_KNOBS = dict(microbatches=2, opt_dtype=None, accum="float32")
+
+
+def _ns(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def analytic_hbm_bytes(model, cell, mesh, knobs) -> float:
+    """Per-device HBM traffic floor (B/step) from first principles.
+
+    The measured HLO traffic proxy is pessimistic on the CPU backend
+    (small fusions); this analytic floor brackets it from below and is
+    used as the §Roofline memory term:
+
+    * weights are FSDP-gathered then read once per pass (fwd / remat-fwd
+      / bwd for train; once for inference) at 1/TP residency;
+    * optimizer update streams params + both moments (read+write);
+    * boundary activations: one write + one read per remat checkpoint;
+    * decode reads the local KV-cache shard once and appends once.
+    """
+    import math as _m
+
+    cfg = model.cfg
+    n_dev = mesh.devices.size
+    tp = int(mesh.shape["model"])
+    fs = n_dev // tp
+    struct = model.param_struct()
+    param_bytes = sum(
+        _m.prod(l.shape) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(struct)
+    )
+    p_tp = param_bytes / tp          # post-gather residency
+    p_loc = param_bytes / n_dev      # FSDP-sharded residency
+    tokens_dev = cell.global_batch * cell.seq_len / max(1, fs)
+    act_dt = 2  # bf16 activations
+    d = cfg.d_model
+    L = cfg.n_layers + cfg.n_enc_layers
+    if cell.kind == "train":
+        k = int(knobs["microbatches"])
+        opt_itemsize = 2 if knobs["opt_dtype"] == "bfloat16" else (
+            jnp.dtype(cfg.param_dtype).itemsize
+        )
+        weights = k * 3.0 * p_tp                    # fwd + remat-fwd + bwd
+        grads = 4.0 * p_loc                          # accumulate rd+wr (x2)
+        opt = 6.0 * (param_bytes * opt_itemsize / jnp.dtype(cfg.param_dtype).itemsize) / n_dev + 2.0 * p_loc
+        acts = 2.0 * L * tokens_dev * d * act_dt     # ckpt write + bwd read
+        logits = 4.0 * tokens_dev * cfg.vocab_size / tp * act_dt
+        return weights + grads + opt + acts + logits
+    if cell.kind == "prefill":
+        kv_dim = cfg.n_kv_heads * cfg.hd
+        cache = 2.0 * L * tokens_dev * kv_dim * act_dt      # write k+v
+        # chunked attention re-reads K/V per query chunk
+        n_chunks = max(1, cell.seq_len // 1024)
+        kv_reread = 2.0 * L * n_chunks * (cell.seq_len * kv_dim * act_dt) * (
+            cell.global_batch / max(1, fs)
+        )
+        acts = 2.0 * L * tokens_dev * d * act_dt
+        return p_tp + cache + kv_reread + acts
+    # decode: weights once + cache shard read + append
+    if cfg.family in ("ssm",):
+        cache = 0.0  # O(1) recurrent state
+    elif cfg.family == "hybrid":
+        win = cfg.window or 2048
+        n_attn = sum(1 for kk in cfg.layer_kinds() if kk == "attn")
+        cache = (
+            n_attn * cell.global_batch * win * cfg.n_kv_heads * cfg.hd * act_dt * 2
+        ) / max(1, fs)
+    else:
+        s_kv = min(cell.seq_len, 2 ** 31)
+        cache = (
+            2.0 * L * cell.global_batch * s_kv * cfg.n_kv_heads * cfg.hd * act_dt
+        ) / max(1, fs)
+    return p_tp + cache
+
+
+def lower_cell(arch: str, shape_name: str, mesh: Mesh, *, donate: bool = True):
+    """Returns (lowered, meta) for the cell, or raises."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    model = get_model(cfg)
+    knobs = KNOBS.get(arch, DEFAULT_KNOBS)
+    meta: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "kind": cell.kind,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "knobs": {k: str(v) for k, v in knobs.items()},
+    }
+
+    if cell.kind == "train":
+        tcfg = TrainConfig(
+            opt=OptConfig(state_dtype=knobs["opt_dtype"]),
+            microbatches=knobs["microbatches"],
+            accum_dtype=knobs["accum"],
+        )
+        batch_struct = model.batch_struct(cell.global_batch, cell.seq_len)
+        state_struct = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0), tcfg)
+        )
+        sspecs = train_state_specs(model, mesh, tcfg)
+        bspecs = batch_spec_tree(model, mesh, batch_struct)
+        mspec = {"loss": P(), "grad_norm": P(), "lr": P()}
+        with activation_sharding(mesh):
+            fn = jax.jit(
+                build_train_step(model, tcfg),
+                in_shardings=(_ns(mesh, sspecs), _ns(mesh, bspecs)),
+                out_shardings=(_ns(mesh, sspecs), _ns(mesh, mspec)),
+                donate_argnums=(0,) if donate else (),
+            )
+            lowered = fn.lower(state_struct, batch_struct)
+        return lowered, meta
+
+    pspecs = param_specs(model, mesh)
+    param_struct = model.param_struct()
+
+    if cell.kind == "prefill":
+        batch_struct = model.batch_struct(cell.global_batch, cell.seq_len)
+        bspecs = batch_spec_tree(model, mesh, batch_struct)
+        with activation_sharding(mesh):
+            fn = jax.jit(
+                lambda params, batch: model.prefill(params, batch, s_max=cell.seq_len),
+                in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)),
+            )
+            lowered = fn.lower(param_struct, batch_struct)
+        return lowered, meta
+
+    if cell.kind == "decode":
+        cache_struct = model.cache_struct(cell.global_batch, cell.seq_len)
+        cspecs = cache_specs(model, mesh, cell.global_batch, cell.seq_len)
+        F = fsdp_axes(mesh)
+        tok_spec = P(_maybe(cell.global_batch, F, mesh), None)
+        tok_struct = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+        with activation_sharding(mesh):
+            fn = jax.jit(
+                lambda params, cache, tok: model.decode_step(params, cache, tok),
+                in_shardings=(
+                    _ns(mesh, pspecs), _ns(mesh, cspecs), NamedSharding(mesh, tok_spec)
+                ),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = fn.lower(param_struct, cache_struct, tok_struct)
+        return lowered, meta
+
+    raise ValueError(cell.kind)
+
+
+def run_cell(
+    arch: str, shape_name: str, *, multi_pod: bool, force: bool = False,
+    mesh: Optional[Mesh] = None, report_dir: Optional[Path] = None,
+) -> Dict[str, Any]:
+    rdir = report_dir or REPORT_DIR
+    rdir.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    out_path = rdir / f"{arch}__{shape_name}__{mesh_tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, cell)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "kind": cell.kind, "status": "skip" if not ok else "pending",
+    }
+    if not ok:
+        rec["skip_reason"] = why
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.perf_counter()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh)
+        t_lower = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t1
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        # trip-count-corrected per-device costs (XLA counts scan bodies
+        # once; analyze_hlo multiplies by recovered while trip counts)
+        hc = analyze_hlo(hlo)
+        model = get_model(cfg)
+        n_active = model.param_count(active_only=True)
+        mf = model_flops(cell.kind, n_active, cell.global_batch, cell.seq_len)
+        knobs = KNOBS.get(arch, DEFAULT_KNOBS)
+        mem_floor = analytic_hbm_bytes(model, cell, mesh, knobs)
+        terms = RooflineTerms(
+            flops_per_dev=float(hc.flops),
+            bytes_per_dev=float(mem_floor),
+            coll_bytes_per_dev=float(hc.collective_total),
+            n_chips=n_chips,
+            model_flops_global=mf,
+            coll_breakdown={k: int(v) for k, v in hc.collectives.items()},
+        )
+        rec.update(meta)
+        rec.update(
+            {
+                "status": "ok",
+                "n_chips": n_chips,
+                "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2),
+                "memory": {
+                    "argument_bytes": ma.argument_size_in_bytes,
+                    "output_bytes": ma.output_size_in_bytes,
+                    "temp_bytes": ma.temp_size_in_bytes,
+                    "alias_bytes": ma.alias_size_in_bytes,
+                    "peak_bytes": getattr(ma, "peak_memory_in_bytes", 0),
+                    # live-per-device = args + temps (aliased args reused)
+                    "per_device_bytes": ma.argument_size_in_bytes
+                    + ma.temp_size_in_bytes
+                    + ma.output_size_in_bytes
+                    - ma.alias_size_in_bytes,
+                },
+                "cost": {k: v for k, v in ca.items() if isinstance(v, (int, float))},
+                "cost_corrected": {
+                    "flops_per_dev": hc.flops,
+                    "traffic_bytes_per_dev": hc.traffic_bytes,
+                    "n_while": hc.n_while,
+                    "max_trip": hc.max_trip,
+                },
+                "roofline": terms.row(),
+                "n_params_active": n_active,
+            }
+        )
+    except Exception as e:  # record the failure; the harness keeps going
+        rec.update(
+            {
+                "status": "error",
+                "error": repr(e),
+                "traceback": traceback.format_exc()[-4000:],
+            }
+        )
+    out_path.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = args.arch or (list(ARCHS) if args.all else ["tinyllama-1.1b"])
+    shapes = args.shape or list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_bad = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(
+                    arch, shape, multi_pod=multi_pod, force=args.force, mesh=mesh
+                )
+                status = rec["status"]
+                if status == "ok":
+                    r = rec["roofline"]
+                    mem = rec["memory"]["per_device_bytes"] / 2**30
+                    print(
+                        f"[{rec['mesh']}] {arch:24s} {shape:12s} OK  "
+                        f"compile {rec['compile_s']:7.1f}s  mem/dev {mem:6.2f} GiB  "
+                        f"dom={r['dominant']:10s} "
+                        f"terms(c/m/n)=({r['compute_s']:.3f}/{r['memory_s']:.3f}/"
+                        f"{r['collective_s']:.3f})s  roofline_frac={r['roofline_fraction']:.3f}"
+                    )
+                elif status == "skip":
+                    print(f"[{rec['mesh']}] {arch:24s} {shape:12s} SKIP ({rec['skip_reason'][:60]})")
+                else:
+                    n_bad += 1
+                    print(f"[{rec['mesh']}] {arch:24s} {shape:12s} ERROR {rec['error'][:120]}")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any
+device query).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 dual-pod (512 chips).
+
+    Axes: ``data`` carries FSDP + data parallelism, ``model`` carries
+    tensor/expert parallelism, ``pod`` (multi-pod only) is an outer
+    data-parallel axis whose collectives ride the inter-pod DCN.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this process actually has (CPU smoke runs): 1x1 mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,149 @@
+"""Uniform model facade over the four architecture families.
+
+Batch dict keys: ``tokens`` (always), ``patches`` (vlm), ``frames``
+(audio).  Caches are family-specific pytrees; ``cache_struct`` builds
+their ShapeDtypeStruct twins for the compile-only dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import griffin, transformer, whisper, xlstm
+from repro.models.config import ModelConfig
+
+
+def _family_module(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer
+    if cfg.family == "ssm":
+        return xlstm
+    if cfg.family == "hybrid":
+        return griffin
+    if cfg.family == "audio":
+        return whisper
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def _extra_kwargs(cfg: ModelConfig, batch: Dict[str, Any]) -> Dict[str, Any]:
+    kw = {}
+    if cfg.family == "vlm" and "patches" in batch:
+        kw["patches"] = batch["patches"]
+    if cfg.family == "audio":
+        kw["frames"] = batch["frames"]
+    return kw
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def mod(self):
+        return _family_module(self.cfg)
+
+    # -- parameters ---------------------------------------------------------
+    def init(self, rng) -> Any:
+        return self.mod.init_params(rng, self.cfg)
+
+    def param_struct(self) -> Any:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def param_count(self, *, active_only: bool = False) -> int:
+        import math
+
+        struct = self.param_struct()
+        total = sum(
+            math.prod(l.shape)
+            for l in jax.tree_util.tree_leaves(struct)
+            if hasattr(l, "shape")
+        )
+        if active_only and self.cfg.moe is not None:
+            m = self.cfg.moe
+            e_ff = m.expert_d_ff or self.cfg.d_ff
+            per_layer_inactive = 3 * self.cfg.d_model * e_ff * (m.n_experts - m.top_k)
+            total -= per_layer_inactive * self.cfg.n_layers
+        return total
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch: Dict[str, Any], *, remat: bool = True):
+        return self.mod.lm_loss(
+            params, self.cfg, batch["tokens"], remat=remat,
+            **_extra_kwargs(self.cfg, batch),
+        )
+
+    def forward(self, params, batch: Dict[str, Any], *, remat: bool = False):
+        return self.mod.forward(
+            params, self.cfg, batch["tokens"], remat=remat,
+            **_extra_kwargs(self.cfg, batch),
+        )
+
+    # -- serving --------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, Any], *, s_max: Optional[int] = None):
+        return self.mod.prefill(
+            params, self.cfg, batch["tokens"], s_max=s_max,
+            **_extra_kwargs(self.cfg, batch),
+        )
+
+    def decode_step(self, params, cache, tokens):
+        return self.mod.decode_step(params, self.cfg, cache, tokens)
+
+    def cache_struct(self, b: int, s_max: int) -> Any:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return jax.eval_shape(lambda: transformer.init_cache(cfg, b, s_max))
+        if cfg.family == "ssm":
+            return jax.eval_shape(lambda: xlstm.init_state(None, cfg, b))
+        if cfg.family == "hybrid":
+            return jax.eval_shape(lambda: griffin.init_state(None, cfg, b))
+        if cfg.family == "audio":
+            return jax.eval_shape(
+                lambda: whisper.WhisperCache(
+                    k=jnp.zeros((cfg.n_layers, b, s_max, cfg.n_kv_heads, cfg.hd), cfg.cdt),
+                    v=jnp.zeros((cfg.n_layers, b, s_max, cfg.n_kv_heads, cfg.hd), cfg.cdt),
+                    xk=jnp.zeros((cfg.n_layers, b, cfg.enc_seq, cfg.n_kv_heads, cfg.hd), cfg.cdt),
+                    xv=jnp.zeros((cfg.n_layers, b, cfg.enc_seq, cfg.n_kv_heads, cfg.hd), cfg.cdt),
+                    pos=jnp.zeros((), jnp.int32),
+                )
+            )
+        raise ValueError(cfg.family)
+
+    def init_cache(self, params, b: int, s_max: int, memory=None):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return transformer.init_cache(cfg, b, s_max)
+        if cfg.family == "ssm":
+            return xlstm.init_state(params, cfg, b)
+        if cfg.family == "hybrid":
+            return griffin.init_state(params, cfg, b)
+        if cfg.family == "audio":
+            return whisper.init_cache(params, cfg, memory, b, s_max)
+        raise ValueError(cfg.family)
+
+    # -- dry-run inputs -------------------------------------------------------
+    def batch_struct(self, batch_size: int, seq_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        i32 = jnp.int32
+        if cfg.family == "vlm":
+            n_text = max(1, seq_len - cfg.n_patches)
+            return {
+                "tokens": jax.ShapeDtypeStruct((batch_size, n_text), i32),
+                "patches": jax.ShapeDtypeStruct(
+                    (batch_size, cfg.n_patches, cfg.d_model), cfg.cdt
+                ),
+            }
+        if cfg.family == "audio":
+            return {
+                "tokens": jax.ShapeDtypeStruct((batch_size, seq_len), i32),
+                "frames": jax.ShapeDtypeStruct(
+                    (batch_size, cfg.enc_seq, cfg.d_model), cfg.cdt
+                ),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((batch_size, seq_len), i32)}
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg)

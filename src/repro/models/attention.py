@@ -1,0 +1,184 @@
+"""GQA attention: plain, query-chunked (memory-efficient), and cached decode.
+
+Query-chunked attention bounds the live score tensor to
+``(B, H, chunk_q, S_k)`` via ``lax.scan`` — the pure-JAX analogue of a
+flash kernel's outer loop, and what the 32k-prefill shape cells rely on
+to pass compile-time memory analysis.  All softmax math in f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _scores_mask(
+    s_q: int, s_k: int, *, causal: bool, window: Optional[int], q_offset
+) -> jnp.ndarray:
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    ki = jnp.arange(s_k)[None, :]
+    m = jnp.ones((s_q, s_k), bool)
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    return m
+
+
+def pad_heads_for_tp(q, k, v):
+    """Zero-pad the head dim to the next TP multiple.
+
+    Archs whose head count doesn't divide TP (llama4: 40, gemma: 10,
+    whisper: 12 over 16-way TP) would otherwise replicate the whole
+    attention computation on every model shard — measured 5x compute
+    inflation on llama4 train.  Padded heads produce garbage that is
+    sliced off before the output projection, so numerics are unchanged.
+
+    Returns (q, k, v, original_head_count); no-op without a mesh context
+    or when heads already divide TP.
+    """
+    from repro.models.sharding import tp_size
+
+    tp = tp_size()
+    h = q.shape[2]
+    if tp <= 1 or h % tp == 0:
+        return q, k, v, h
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    hp = -(-h // tp) * tp
+    pad = ((0, 0), (0, 0), (0, hp - h), (0, 0))
+    return jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad), h
+
+
+def repeat_kv(k: jnp.ndarray, h_q: int) -> jnp.ndarray:
+    """(B, S, H_kv, hd) -> (B, S, H_q, hd) by group repetition.
+
+    Keeps every attention tensor at H_q heads so the "model" (TP) axis
+    shards the head dim uniformly — GQA's memory win stays in the cache,
+    which remains H_kv.
+    """
+    h_kv = k.shape[2]
+    if h_kv == h_q:
+        return k
+    if h_q % h_kv:
+        raise ValueError(f"n_heads {h_q} not a multiple of n_kv_heads {h_kv}")
+    return jnp.repeat(k, h_q // h_kv, axis=2)
+
+
+def _attend_block(q, k, v, mask) -> jnp.ndarray:
+    """q: (B,Sq,H,hd) k/v: (B,Sk,H,hd) mask: (Sq,Sk) -> (B,Sq,H,hd)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    chunk_q: Optional[int] = 1024,
+) -> jnp.ndarray:
+    """q: (B, Sq, Hq, hd); k, v: (B, Sk, Hkv, hd) -> (B, Sq, Hq, hd)."""
+    b, s_q, h_q, hd = q.shape
+    _, s_k, _, _ = k.shape
+    k = repeat_kv(k, h_q)
+    v = repeat_kv(v, h_q)
+
+    if chunk_q is None or s_q <= chunk_q or s_q % chunk_q:
+        mask = _scores_mask(s_q, s_k, causal=causal, window=window, q_offset=q_offset)
+        return _attend_block(q, k, v, mask)
+
+    n_chunks = s_q // chunk_q
+    qc = q.reshape(b, n_chunks, chunk_q, h_q, hd).transpose(1, 0, 2, 3, 4)
+
+    # banded path: local attention only ever sees `window + chunk_q` keys
+    # per query chunk — at 32k a 2048-window band is ~10x fewer scores
+    # (and collectives) than masking the dense (S x S) product.
+    band = None
+    if window is not None and causal and q_offset == 0 and s_k == s_q:
+        band = window + chunk_q
+        if band >= s_k:
+            band = None
+
+    def step(_, args):
+        qi, idx = args
+        off = q_offset + idx * chunk_q
+        if band is None:
+            mask = _scores_mask(
+                chunk_q, s_k, causal=causal, window=window, q_offset=off
+            )
+            return None, _attend_block(qi, k, v, mask)
+        start = jnp.clip(off + chunk_q - band, 0, s_k - band)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        qi_pos = off + jnp.arange(chunk_q)[:, None]
+        kb_pos = start + jnp.arange(band)[None, :]
+        mask = (kb_pos <= qi_pos) & (kb_pos > qi_pos - window)
+        return None, _attend_block(qi, kb, vb, mask)
+
+    _, outs = jax.lax.scan(step, None, (qc, jnp.arange(n_chunks)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s_q, h_q, hd)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray     # (B, S_max, H_kv, hd)
+    v: jnp.ndarray
+    pos: jnp.ndarray   # () int32 — tokens already in the cache
+
+    @staticmethod
+    def zeros(b: int, s_max: int, h_kv: int, hd: int, dtype) -> "KVCache":
+        return KVCache(
+            k=jnp.zeros((b, s_max, h_kv, hd), dtype),
+            v=jnp.zeros((b, s_max, h_kv, hd), dtype),
+            pos=jnp.zeros((), jnp.int32),
+        )
+
+
+def cache_update(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray) -> KVCache:
+    """Append S_new tokens at cache.pos (dynamic)."""
+    b, s_new = k_new.shape[0], k_new.shape[1]
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, cache.pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, cache.pos, 0, 0))
+    return KVCache(k=k, v=v, pos=cache.pos + s_new)
+
+
+def decode_attention(
+    q: jnp.ndarray, cache: KVCache, *, window: Optional[int] = None
+) -> jnp.ndarray:
+    """Single-step attention against the cache.
+
+    q: (B, 1, Hq, hd).  The cache is full-length; masking restricts to
+    positions < pos (and the window, if local attention).
+    """
+    b, s_q, h_q, hd = q.shape
+    s_k = cache.k.shape[1]
+    k = repeat_kv(cache.k, h_q)
+    v = repeat_kv(cache.v, h_q)
+    scale = hd ** -0.5
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    ki = jnp.arange(s_k)[None, :]
+    qi = (cache.pos - s_q) + jnp.arange(s_q)[:, None]  # new tokens' positions
+    mask = ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)

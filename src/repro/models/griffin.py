@@ -1,0 +1,426 @@
+"""Griffin / RecurrentGemma (arXiv:2402.19427): RG-LRU + local attention.
+
+Layer pattern 2:1 — two recurrent (RG-LRU) residual blocks per local-
+attention (MQA, windowed) block; every layer also carries a GeGLU MLP
+residual.  The RG-LRU trains via ``lax.associative_scan`` (parallel
+prefix over the diagonal linear recurrence) and decodes with O(1) state;
+local attention decodes against a ring-buffer KV cache of window size —
+together this is why the arch qualifies for the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention, repeat_kv
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, embed_init, rms_norm
+from repro.models.sharding import shard_act
+from repro.models.xlstm import _conv_causal, _conv_step
+
+_C = 8.0  # RG-LRU gate sharpness constant (Griffin paper)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def _rglru_coeffs(p, x, *, weights=None):
+    """x: (..., dr) -> (a, b) of the recurrence h = a*h_prev + b.
+
+    ``weights=(w_r, w_i)`` lets callers hoist the (FSDP-gathered) gate
+    weights out of a chunk scan so they gather once, not per chunk."""
+    f32 = jnp.float32
+    w_r, w_i = weights if weights is not None else (p["w_r"], p["w_i"])
+    r = jax.nn.sigmoid(
+        jnp.einsum("...d,de->...e", x.astype(f32), w_r.astype(f32)) + p["b_r"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("...d,de->...e", x.astype(f32), w_i.astype(f32)) + p["b_i"]
+    )
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(f32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) * (i * x.astype(f32))
+    return a, b
+
+
+def _combine(l, r):
+    al, bl = l
+    ar, br = r
+    return al * ar, ar * bl + br
+
+
+def rglru_scan(p, x, *, chunk: int = 512):
+    """x: (B,S,dr) -> (B,S,dr): coefficient-fused chunked scan.
+
+    The gate/coefficient computation runs *inside* the chunk scan —
+    computing (r, i, a, b) for the full sequence up front keeps
+    ~10 f32 (B,S,dr) tensors live per layer (the 39 GiB/device culprit
+    on recurrentgemma train); per-chunk they are (B,512,dr) transients.
+    The carried hidden state makes chunking exact.
+    """
+    s = x.shape[1]
+    # Chunking halves peak gate memory but adds per-chunk boundary
+    # gathers that cost ~0.5s of collectives at 4k (frac 0.209 -> 0.164,
+    # measured) — so the full parallel scan stays the default up to 8k
+    # and chunking engages only for longer sequences.
+    if s <= max(chunk, 8192) or s % chunk:
+        a, b = _rglru_coeffs(p, x)
+        _, b_c = jax.lax.associative_scan(_combine, (a, b), axis=1)
+        return b_c.astype(x.dtype)  # h_0 = 0 => h_t = b_cumulative
+
+    n_ch = s // chunk
+    xc = x.reshape(x.shape[0], n_ch, chunk, -1).swapaxes(0, 1)
+    # hoist the gate weights: gathered once here, closed over by the scan
+    # body (in-scan einsums re-gathered FSDP shards every chunk)
+    w_r = shard_act(p["w_r"], None, "tp")
+    w_i = shard_act(p["w_i"], None, "tp")
+
+    def step(h0, xi):
+        ai, bi = _rglru_coeffs(p, xi, weights=(w_r, w_i))
+        cumA, cumB = jax.lax.associative_scan(_combine, (ai, bi), axis=1)
+        h = cumB + cumA * h0[:, None, :]
+        return h[:, -1], h.astype(x.dtype)
+
+    zero = jnp.zeros((x.shape[0], x.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, zero, xc)
+    return hs.swapaxes(0, 1).reshape(x.shape[0], s, -1).astype(x.dtype)
+
+
+def rglru_step(p, h_prev, x_t):
+    a, b = _rglru_coeffs(p, x_t)
+    h = a * h_prev + b
+    return h, h.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(rng, cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    dr = d  # RecurrentGemma: lru_width == d_model
+    hd = cfg.hd
+    q_dim = cfg.n_heads * hd
+    kv_dim = cfg.n_kv_heads * hd
+    ks = jax.random.split(rng, 12)
+    p: Dict[str, Any] = {
+        "ln1": jnp.zeros((d,), cfg.pdt),
+        "ln2": jnp.zeros((d,), cfg.pdt),
+        # GeGLU MLP on every layer
+        "m_gate": dense_init(ks[0], (d, cfg.d_ff), cfg.pdt),
+        "m_up": dense_init(ks[1], (d, cfg.d_ff), cfg.pdt),
+        "m_down": dense_init(ks[2], (cfg.d_ff, d), cfg.pdt),
+    }
+    if kind == "rglru":
+        p.update(
+            {
+                "w_x": dense_init(ks[3], (d, dr), cfg.pdt),
+                "w_gate": dense_init(ks[4], (d, dr), cfg.pdt),
+                "conv_w": dense_init(ks[5], (cfg.conv_width, dr), cfg.pdt, scale=0.3),
+                "conv_b": jnp.zeros((dr,), cfg.pdt),
+                "w_r": dense_init(ks[6], (dr, dr), jnp.float32, scale=0.02),
+                "b_r": jnp.zeros((dr,), jnp.float32),
+                "w_i": dense_init(ks[7], (dr, dr), jnp.float32, scale=0.02),
+                "b_i": jnp.zeros((dr,), jnp.float32),
+                "lam": jnp.full((dr,), 0.65, jnp.float32),
+                "w_out": dense_init(ks[8], (dr, d), cfg.pdt),
+            }
+        )
+    elif kind == "attn":
+        p.update(
+            {
+                "wq": dense_init(ks[3], (d, q_dim), cfg.pdt),
+                "wk": dense_init(ks[4], (d, kv_dim), cfg.pdt),
+                "wv": dense_init(ks[5], (d, kv_dim), cfg.pdt),
+                "wo": dense_init(ks[6], (q_dim, d), cfg.pdt),
+            }
+        )
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _mlp(p, cfg: ModelConfig, x):
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    dt = h.dtype
+    kinds = ("dp",) + (None,) * (h.ndim - 2) + ("tp",)
+    g = shard_act(jnp.einsum("...d,df->...f", h, p["m_gate"].astype(dt)), *kinds)
+    u = shard_act(jnp.einsum("...d,df->...f", h, p["m_up"].astype(dt)), *kinds)
+    z = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(dt) * u
+    return x + jnp.einsum("...f,fd->...d", z, p["m_down"].astype(dt))
+
+
+def rglru_block(p, cfg: ModelConfig, x):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    dt = h.dtype
+    xr = shard_act(jnp.einsum("bsd,de->bse", h, p["w_x"].astype(dt)), "dp", None, "tp")
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,de->bse", h, p["w_gate"].astype(dt)).astype(jnp.float32),
+        approximate=True,
+    ).astype(dt)
+    xr = _conv_causal(xr, p["conv_w"], p["conv_b"])
+    y = shard_act(rglru_scan(p, xr), "dp", None, "tp")
+    x = shard_act(
+        x + jnp.einsum("bse,ed->bsd", y * gate, p["w_out"].astype(dt)),
+        "dp", None, None,
+    )
+    return _mlp(p, cfg, x)
+
+
+def attn_block(p, cfg: ModelConfig, x, positions):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    dt = h.dtype
+    b, s, d = h.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dq->bsq", h, p["wq"].astype(dt)).reshape(b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dq->bsq", h, p["wk"].astype(dt)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dq->bsq", h, p["wv"].astype(dt)).reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # 10 heads pad to 16 so TP shards them (padded heads sliced off)
+    from repro.models.attention import pad_heads_for_tp
+
+    qp, kp, vp, n_h = pad_heads_for_tp(q, k, v)
+    qp = shard_act(qp, "dp", None, "tp", None)
+    o = attention(qp, kp, vp, causal=True, window=cfg.window, chunk_q=1024)[:, :, :n_h]
+    x = x + jnp.einsum(
+        "bshd,hdm->bsm", o, p["wo"].astype(dt).reshape(cfg.n_heads, hd, d)
+    )
+    return _mlp(p, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# LM assembly
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    kinds = cfg.layer_kinds()
+    ks = jax.random.split(rng, cfg.n_layers + 2)
+    blocks = [init_block(ks[i], cfg, kind) for i, kind in enumerate(kinds)]
+    return {
+        "embed": embed_init(ks[-2], (cfg.vocab_size, cfg.d_model), cfg.pdt),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.pdt),
+        "blocks": blocks,
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, *, remat: bool = True, **_):
+    x = shard_act(
+        params["embed"].astype(cfg.cdt)[tokens] * jnp.sqrt(jnp.asarray(cfg.d_model, cfg.cdt)),
+        "dp", None, None,
+    )
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    for kind, p in zip(cfg.layer_kinds(), params["blocks"]):
+        if kind == "rglru":
+            fn = jax.checkpoint(rglru_block, static_argnums=(1,)) if remat else rglru_block
+            x = fn(p, cfg, x)
+        else:
+            fn = jax.checkpoint(attn_block, static_argnums=(1,)) if remat else attn_block
+            x = fn(p, cfg, x, positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cfg.cdt))  # tied
+    return shard_act(logits, "dp", None, "tp"), jnp.zeros((), jnp.float32)
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, *, remat: bool = True, **_):
+    logits, _ = forward(params, cfg, tokens, remat=remat)
+    lf = logits[:, :-1].astype(jnp.float32)
+    tgt = tokens[:, 1:]
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    # gold logit via mask+reduce: shards over the TP vocab dim with a
+    # scalar psum, where take_along_axis all-gathers the logits tensor
+    vocab_iota = jnp.arange(lf.shape[-1], dtype=tgt.dtype)
+    gold = jnp.sum(jnp.where(vocab_iota == tgt[..., None], lf, 0.0), axis=-1)
+    ce = jnp.mean(lse - gold)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# -- decode: ring-buffer KV for attn layers, O(1) state for rglru -----------
+
+
+def init_state(params, cfg: ModelConfig, b: int, s_max: int = 0):
+    """Decode state: O(1) rglru state + ring-buffer KV of window size.
+
+    Shapes depend only on cfg (``params`` may be None — dry-run builds
+    the struct without weights)."""
+    del params, s_max
+    win = cfg.window or 2048
+    states: List[Dict[str, jnp.ndarray]] = []
+    for kind in cfg.layer_kinds():
+        if kind == "rglru":
+            states.append(
+                {
+                    "h": jnp.zeros((b, cfg.d_model), jnp.float32),
+                    "conv": jnp.zeros((b, cfg.conv_width - 1, cfg.d_model), cfg.cdt),
+                }
+            )
+        else:
+            states.append(
+                {
+                    "k": jnp.zeros((b, win, cfg.n_kv_heads, cfg.hd), cfg.cdt),
+                    "v": jnp.zeros((b, win, cfg.n_kv_heads, cfg.hd), cfg.cdt),
+                    "slot_pos": jnp.full((win,), -1, jnp.int32),
+                }
+            )
+    return {"layers": states, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _attn_decode(p, cfg: ModelConfig, st, x, pos):
+    dt = x.dtype
+    b = x.shape[0]
+    hd = cfg.hd
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dq->bsq", h, p["wq"].astype(dt)).reshape(b, 1, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dq->bsq", h, p["wk"].astype(dt)).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dq->bsq", h, p["wv"].astype(dt)).reshape(b, 1, cfg.n_kv_heads, hd)
+    posb = pos[None, None]
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    win = st["k"].shape[1]
+    slot = pos % win
+    kc = jax.lax.dynamic_update_slice(st["k"], k.astype(st["k"].dtype), (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(st["v"], v.astype(st["v"].dtype), (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(st["slot_pos"], pos[None], (slot,))
+    kf = repeat_kv(kc, cfg.n_heads)
+    vf = repeat_kv(vc, cfg.n_heads)
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32) * hd ** -0.5, kf.astype(jnp.float32)
+    )
+    valid = (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos > pos - win)
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vf.dtype), vf)
+    x = x + jnp.einsum(
+        "bshd,hdm->bsm", o, p["wo"].astype(dt).reshape(cfg.n_heads, hd, cfg.d_model)
+    )
+    return {"k": kc, "v": vc, "slot_pos": slot_pos}, _mlp(p, cfg, x)
+
+
+def _rglru_decode(p, cfg: ModelConfig, st, x):
+    dt = x.dtype
+    h = rms_norm(x[:, 0], p["ln1"], cfg.norm_eps)
+    xr = jnp.einsum("bd,de->be", h, p["w_x"].astype(dt))
+    gate = jax.nn.gelu(
+        jnp.einsum("bd,de->be", h, p["w_gate"].astype(dt)).astype(jnp.float32),
+        approximate=True,
+    ).astype(dt)
+    conv_out, conv_state = _conv_step(xr, st["conv"], p["conv_w"], p["conv_b"])
+    hnew, y = rglru_step(p, st["h"], conv_out)
+    x = x + jnp.einsum("be,ed->bd", y * gate, p["w_out"].astype(dt))[:, None]
+    return {"h": hnew, "conv": conv_state}, _mlp(p, cfg, x)
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens):
+    x = params["embed"].astype(cfg.cdt)[tokens] * jnp.sqrt(
+        jnp.asarray(cfg.d_model, cfg.cdt)
+    )
+    pos = state["pos"]
+    new_states = []
+    for kind, p, st in zip(cfg.layer_kinds(), params["blocks"], state["layers"]):
+        if kind == "rglru":
+            st2, x = _rglru_decode(p, cfg, st, x)
+        else:
+            st2, x = _attn_decode(p, cfg, st, x, pos)
+        new_states.append(st2)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, 0], params["embed"].astype(cfg.cdt))
+    return logits, {"layers": new_states, "pos": pos + 1}
+
+
+def _ring_from_full(k, v, s, win, cfg: ModelConfig):
+    """Place the last `win` roped K/V at their ring slots (slot = pos % win)."""
+    b = k.shape[0]
+    kc = jnp.zeros((b, win, cfg.n_kv_heads, cfg.hd), cfg.cdt)
+    vc = jnp.zeros((b, win, cfg.n_kv_heads, cfg.hd), cfg.cdt)
+    n_keep = min(s, win)
+    last_k = k[:, s - n_keep :].astype(cfg.cdt)     # (b, n_keep, kv, hd)
+    last_v = v[:, s - n_keep :].astype(cfg.cdt)
+    pos = jnp.arange(s - n_keep, s)                  # absolute positions
+    slots = pos % win
+    kc = kc.at[:, slots].set(last_k)
+    vc = vc.at[:, slots].set(last_v)
+    slot_pos = jnp.full((win,), -1, jnp.int32).at[slots].set(pos.astype(jnp.int32))
+    return {"k": kc, "v": vc, "slot_pos": slot_pos}
+
+
+def _conv_tail(xr, w: int):
+    """Last w pre-conv inputs, left-padded when the prompt is shorter."""
+    s = xr.shape[1]
+    tail = xr[:, max(0, s - w):]
+    if tail.shape[1] < w:
+        tail = jnp.pad(tail, ((0, 0), (w - tail.shape[1], 0), (0, 0)))
+    return tail
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, s_max: Optional[int] = None, **_):
+    """Parallel prefill: one teacher-forced forward pass that *also*
+    extracts the decode state per layer (RG-LRU carry + conv tail, or the
+    last-``window`` ring KV slots).
+
+    Replaces the original token-by-token decode scan, whose per-token
+    FSDP weight gathers made this the most collective-bound cell of the
+    whole §Roofline baseline (see EXPERIMENTS.md §Perf before/after).
+    """
+    b, s = tokens.shape
+    win = cfg.window or 2048
+    positions = jnp.arange(s)[None, :]
+    x = shard_act(
+        params["embed"].astype(cfg.cdt)[tokens]
+        * jnp.sqrt(jnp.asarray(cfg.d_model, cfg.cdt)),
+        "dp", None, None,
+    )
+    states: List[Dict[str, jnp.ndarray]] = []
+    for kind, p in zip(cfg.layer_kinds(), params["blocks"]):
+        if kind == "rglru":
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            dt = h.dtype
+            xr = shard_act(
+                jnp.einsum("bsd,de->bse", h, p["w_x"].astype(dt)), "dp", None, "tp"
+            )
+            gate = jax.nn.gelu(
+                jnp.einsum("bsd,de->bse", h, p["w_gate"].astype(dt)).astype(jnp.float32),
+                approximate=True,
+            ).astype(dt)
+            xr_c = _conv_causal(xr, p["conv_w"], p["conv_b"])
+            a, bb = _rglru_coeffs(p, xr_c)
+            _, h_all = jax.lax.associative_scan(_combine, (a, bb), axis=1)
+            y = shard_act(h_all.astype(dt), "dp", None, "tp")
+            x = shard_act(
+                x + jnp.einsum("bse,ed->bsd", y * gate, p["w_out"].astype(dt)),
+                "dp", None, None,
+            )
+            x = _mlp(p, cfg, x)
+            states.append(
+                {
+                    "h": h_all[:, -1].astype(jnp.float32),
+                    "conv": _conv_tail(xr, cfg.conv_width - 1).astype(cfg.cdt),
+                }
+            )
+        else:
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            dt = h.dtype
+            hd = cfg.hd
+            q = jnp.einsum("bsd,dq->bsq", h, p["wq"].astype(dt)).reshape(b, s, cfg.n_heads, hd)
+            k = jnp.einsum("bsd,dq->bsq", h, p["wk"].astype(dt)).reshape(b, s, cfg.n_kv_heads, hd)
+            v = jnp.einsum("bsd,dq->bsq", h, p["wv"].astype(dt)).reshape(b, s, cfg.n_kv_heads, hd)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            from repro.models.attention import pad_heads_for_tp
+
+            qp, kp, vp, n_h = pad_heads_for_tp(q, k, v)
+            qp = shard_act(qp, "dp", None, "tp", None)
+            o = attention(qp, kp, vp, causal=True, window=cfg.window, chunk_q=1024)[:, :, :n_h]
+            x = x + jnp.einsum(
+                "bshd,hdm->bsm", o, p["wo"].astype(dt).reshape(cfg.n_heads, hd, cfg.d_model)
+            )
+            x = _mlp(p, cfg, x)
+            states.append(_ring_from_full(k, v, s, win, cfg))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"].astype(cfg.cdt))
+    return {"layers": states, "pos": jnp.asarray(s, jnp.int32)}, logits

@@ -1,0 +1,130 @@
+"""Shared neural building blocks (pure jnp, no framework)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float
+) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions_at(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """Analytic sinusoidal embeddings for arbitrary (traced) positions."""
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)
+    inv = jnp.exp(-jnp.log(10000.0) * dim / max(1, d_model // 2 - 1))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_positions(n_pos: int, d_model: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal position embedding table."""
+    pos = np.arange(n_pos)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    inv = np.exp(-np.log(10000.0) * dim / max(1, d_model // 2 - 1))
+    ang = pos * inv
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def _act_ff(h: jnp.ndarray) -> jnp.ndarray:
+    """Pin wide MLP intermediates: batch over dp, feature over tp."""
+    from repro.models.sharding import shard_act
+
+    kinds = ("dp",) + (None,) * (h.ndim - 2) + ("tp",)
+    return shard_act(h, *kinds)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    g = _act_ff(jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype)))
+    u = _act_ff(jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype)))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(x.dtype))
+
+
+def gelu_mlp(x: jnp.ndarray, w_in, b_in, w_out, b_out) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, w_in.astype(x.dtype)) + b_in.astype(x.dtype)
+    h = _act_ff(h)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, w_out.astype(x.dtype)) + b_out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (all take explicit rng)
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, shape: Tuple[int, ...], dtype, *, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else max(1, shape[0])
+    if len(shape) >= 2:
+        fan_in = int(np.prod(shape[:-1]))
+    std = scale if scale is not None else (1.0 / np.sqrt(fan_in))
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng, shape, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_rng, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def causal_mask(s_q: int, s_k: int, *, q_offset: int = 0) -> jnp.ndarray:
+    """(s_q, s_k) boolean mask; True = attend."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    ki = jnp.arange(s_k)[None, :]
+    return ki <= qi
+
+
+def window_mask(s_q: int, s_k: int, window: int, *, q_offset: int = 0) -> jnp.ndarray:
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    ki = jnp.arange(s_k)[None, :]
+    return (ki <= qi) & (ki > qi - window)

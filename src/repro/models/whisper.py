@@ -1,0 +1,295 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356) — backbone only.
+
+The mel-spectrogram/conv frontend is a STUB per the assignment:
+``input_specs()`` feeds precomputed frame embeddings ``(B, enc_seq,
+d_model)`` (what the two conv layers would produce).  Everything else is
+real: sinusoidal-position encoder, causal decoder with cross-attention,
+pre-LayerNorm blocks with biases, GELU MLPs, tied decoder embedding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import KVCache, attention, cache_update, decode_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    gelu_mlp,
+    layer_norm,
+    sinusoidal_positions,
+    sinusoidal_positions_at,
+)
+from repro.models.sharding import shard_act
+
+
+def _init_attn(ks, cfg: ModelConfig, *, cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.hd
+    q_dim = cfg.n_heads * hd
+    kv_dim = cfg.n_kv_heads * hd
+    return {
+        "wq": dense_init(ks[0], (d, q_dim), cfg.pdt),
+        "bq": jnp.zeros((q_dim,), cfg.pdt),
+        "wk": dense_init(ks[1], (d, kv_dim), cfg.pdt),
+        "wv": dense_init(ks[2], (d, kv_dim), cfg.pdt),
+        "bv": jnp.zeros((kv_dim,), cfg.pdt),
+        "wo": dense_init(ks[3], (q_dim, d), cfg.pdt),
+        "bo": jnp.zeros((d,), cfg.pdt),
+    }
+
+
+def _init_layer(rng, cfg: ModelConfig, *, decoder: bool):
+    ks = jax.random.split(rng, 16)
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {
+        "ln1_s": jnp.ones((d,), cfg.pdt), "ln1_b": jnp.zeros((d,), cfg.pdt),
+        "self": _init_attn(ks[0:4], cfg),
+        "ln2_s": jnp.ones((d,), cfg.pdt), "ln2_b": jnp.zeros((d,), cfg.pdt),
+        "w_in": dense_init(ks[4], (d, ff), cfg.pdt),
+        "b_in": jnp.zeros((ff,), cfg.pdt),
+        "w_out": dense_init(ks[5], (ff, d), cfg.pdt),
+        "b_out": jnp.zeros((d,), cfg.pdt),
+    }
+    if decoder:
+        p["lnx_s"] = jnp.ones((d,), cfg.pdt)
+        p["lnx_b"] = jnp.zeros((d,), cfg.pdt)
+        p["cross"] = _init_attn(ks[6:10], cfg)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    enc_layers = jax.vmap(lambda r: _init_layer(r, cfg, decoder=False))(
+        jax.random.split(k1, cfg.n_enc_layers)
+    )
+    dec_layers = jax.vmap(lambda r: _init_layer(r, cfg, decoder=True))(
+        jax.random.split(k2, cfg.n_layers)
+    )
+    d = cfg.d_model
+    return {
+        "enc_pos": jnp.asarray(sinusoidal_positions(cfg.enc_seq, d), cfg.pdt),
+        "enc_layers": enc_layers,
+        "enc_ln_s": jnp.ones((d,), cfg.pdt), "enc_ln_b": jnp.zeros((d,), cfg.pdt),
+        "embed": embed_init(k3, (cfg.vocab_size, d), cfg.pdt),
+        # decoder positions are analytic sinusoids (whisper's learned
+        # table is a stub here; analytic = unbounded context for the
+        # synthetic 32k decode cells)
+        "dec_layers": dec_layers,
+        "dec_ln_s": jnp.ones((d,), cfg.pdt), "dec_ln_b": jnp.zeros((d,), cfg.pdt),
+    }
+
+
+def _mha(p, cfg: ModelConfig, xq, xkv, *, causal: bool, chunk_q=1024):
+    dt = xq.dtype
+    b, sq, d = xq.shape
+    hd = cfg.hd
+    q = (jnp.einsum("bsd,dq->bsq", xq, p["wq"].astype(dt)) + p["bq"].astype(dt)).reshape(
+        b, sq, cfg.n_heads, hd
+    )
+    k = jnp.einsum("bsd,dq->bsq", xkv, p["wk"].astype(dt)).reshape(
+        b, -1, cfg.n_kv_heads, hd
+    )
+    v = (jnp.einsum("bsd,dq->bsq", xkv, p["wv"].astype(dt)) + p["bv"].astype(dt)).reshape(
+        b, -1, cfg.n_kv_heads, hd
+    )
+    # 12 heads pad to 16 so TP shards them (padded heads sliced off)
+    from repro.models.attention import pad_heads_for_tp
+
+    qp, kp, vp, n_h = pad_heads_for_tp(q, k, v)
+    qp = shard_act(qp, "dp", None, "tp", None)
+    o = attention(qp, kp, vp, causal=causal, chunk_q=chunk_q)[:, :, :n_h]
+    return (
+        jnp.einsum("bshd,hdm->bsm", o, p["wo"].astype(dt).reshape(cfg.n_heads, hd, d))
+        + p["bo"].astype(dt),
+        k,
+        v,
+    )
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, enc_seq, d) stub embeddings -> encoder memory."""
+    x = frames.astype(cfg.cdt) + params["enc_pos"].astype(cfg.cdt)[None]
+
+    def body(h, lp):
+        a, _, _ = _mha(
+            lp["self"], cfg, layer_norm(h, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps),
+            layer_norm(h, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps), causal=False,
+        )
+        h = h + a
+        m = gelu_mlp(
+            layer_norm(h, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps),
+            lp["w_in"], lp["b_in"], lp["w_out"], lp["b_out"],
+        )
+        return h + m, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+    return layer_norm(x, params["enc_ln_s"], params["enc_ln_b"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: ModelConfig, tokens, memory, *, remat=True):
+    x = params["embed"].astype(cfg.cdt)[tokens]
+    s = tokens.shape[1]
+    x = x + sinusoidal_positions_at(jnp.arange(s), cfg.d_model).astype(cfg.cdt)[None]
+
+    def body(h, lp):
+        a, _, _ = _mha(
+            lp["self"], cfg, layer_norm(h, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps),
+            layer_norm(h, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps), causal=True,
+        )
+        h = h + a
+        c, _, _ = _mha(
+            lp["cross"], cfg, layer_norm(h, lp["lnx_s"], lp["lnx_b"], cfg.norm_eps),
+            memory, causal=False,
+        )
+        h = h + c
+        m = gelu_mlp(
+            layer_norm(h, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps),
+            lp["w_in"], lp["b_in"], lp["w_out"], lp["b_out"],
+        )
+        return h + m, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = layer_norm(x, params["dec_ln_s"], params["dec_ln_b"], cfg.norm_eps)
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cfg.cdt))
+
+
+def forward(params, cfg: ModelConfig, tokens, *, frames=None, remat=True, **_):
+    memory = encode(params, cfg, frames)
+    return decode_train(params, cfg, tokens, memory, remat=remat), jnp.zeros(
+        (), jnp.float32
+    )
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, *, frames=None, remat=True, **_):
+    logits, _ = forward(params, cfg, tokens, frames=frames, remat=remat)
+    lf = logits[:, :-1].astype(jnp.float32)
+    tgt = tokens[:, 1:]
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    # gold logit via mask+reduce: shards over the TP vocab dim with a
+    # scalar psum, where take_along_axis all-gathers the logits tensor
+    vocab_iota = jnp.arange(lf.shape[-1], dtype=tgt.dtype)
+    gold = jnp.sum(jnp.where(vocab_iota == tgt[..., None], lf, 0.0), axis=-1)
+    ce = jnp.mean(lse - gold)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+class WhisperCache(NamedTuple):
+    k: jnp.ndarray       # (L, B, S_max, H_kv, hd) decoder self-attn
+    v: jnp.ndarray
+    xk: jnp.ndarray      # (L, B, enc_seq, H_kv, hd) cross K (static)
+    xv: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def init_cache(params, cfg: ModelConfig, memory, b: int, s_max: int) -> WhisperCache:
+    """Precompute cross K/V from encoder memory; empty self cache."""
+    def cross_kv(lp):
+        dt = cfg.cdt
+        k = jnp.einsum("bsd,dq->bsq", memory, lp["cross"]["wk"].astype(dt)).reshape(
+            b, -1, cfg.n_kv_heads, cfg.hd
+        )
+        v = (
+            jnp.einsum("bsd,dq->bsq", memory, lp["cross"]["wv"].astype(dt))
+            + lp["cross"]["bv"].astype(dt)
+        ).reshape(b, -1, cfg.n_kv_heads, cfg.hd)
+        return k, v
+
+    xk, xv = jax.vmap(cross_kv)(params["dec_layers"])
+    return WhisperCache(
+        k=jnp.zeros((cfg.n_layers, b, s_max, cfg.n_kv_heads, cfg.hd), cfg.cdt),
+        v=jnp.zeros((cfg.n_layers, b, s_max, cfg.n_kv_heads, cfg.hd), cfg.cdt),
+        xk=xk, xv=xv, pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_step(params, cfg: ModelConfig, cache: WhisperCache, tokens):
+    b = tokens.shape[0]
+    dt = cfg.cdt
+    x = params["embed"].astype(dt)[tokens]
+    x = x + sinusoidal_positions_at(cache.pos[None], cfg.d_model).astype(dt)[None]
+
+    def body(h, layer):
+        lp, kc, vc, xk, xv = layer
+        hn = layer_norm(h, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+        hd = cfg.hd
+        q = (jnp.einsum("bsd,dq->bsq", hn, lp["self"]["wq"].astype(dt)) + lp["self"]["bq"].astype(dt)).reshape(b, 1, cfg.n_heads, hd)
+        k = jnp.einsum("bsd,dq->bsq", hn, lp["self"]["wk"].astype(dt)).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = (jnp.einsum("bsd,dq->bsq", hn, lp["self"]["wv"].astype(dt)) + lp["self"]["bv"].astype(dt)).reshape(b, 1, cfg.n_kv_heads, hd)
+        lc = KVCache(k=kc, v=vc, pos=cache.pos)
+        lc = cache_update(lc, k, v)
+        o = decode_attention(q, lc)
+        h = h + (
+            jnp.einsum("bshd,hdm->bsm", o, lp["self"]["wo"].astype(dt).reshape(cfg.n_heads, hd, cfg.d_model))
+            + lp["self"]["bo"].astype(dt)
+        )
+        # cross attention against static memory K/V
+        hx = layer_norm(h, lp["lnx_s"], lp["lnx_b"], cfg.norm_eps)
+        qx = (jnp.einsum("bsd,dq->bsq", hx, lp["cross"]["wq"].astype(dt)) + lp["cross"]["bq"].astype(dt)).reshape(b, 1, cfg.n_heads, hd)
+        xc = KVCache(k=xk, v=xv, pos=jnp.array(xk.shape[1], jnp.int32))
+        ox = decode_attention(qx, xc)
+        h = h + (
+            jnp.einsum("bshd,hdm->bsm", ox, lp["cross"]["wo"].astype(dt).reshape(cfg.n_heads, hd, cfg.d_model))
+            + lp["cross"]["bo"].astype(dt)
+        )
+        m = gelu_mlp(
+            layer_norm(h, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps),
+            lp["w_in"], lp["b_in"], lp["w_out"], lp["b_out"],
+        )
+        return h + m, (lc.k, lc.v)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache.k, cache.v, cache.xk, cache.xv)
+    )
+    x = layer_norm(x, params["dec_ln_s"], params["dec_ln_b"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, 0], params["embed"].astype(dt))
+    return logits, cache._replace(k=ks, v=vs, pos=cache.pos + 1)
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, frames=None, s_max=None, **_):
+    """Encode frames + ONE teacher-forced decoder pass that collects the
+    self-attention K/V cache (replaces the token-by-token decode scan,
+    which both stacked 32k cache copies and issued per-token collectives)."""
+    memory = encode(params, cfg, frames)
+    b, s = tokens.shape
+    s_max = max(s_max or s, s)
+    dt = cfg.cdt
+    x = params["embed"].astype(dt)[tokens]
+    x = x + sinusoidal_positions_at(jnp.arange(s), cfg.d_model).astype(dt)[None]
+    pad = s_max - s
+
+    def body(h, lp):
+        hn = layer_norm(h, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+        a, k, v = _mha(lp["self"], cfg, hn, hn, causal=True)
+        h = h + a
+        c, _, _ = _mha(
+            lp["cross"], cfg, layer_norm(h, lp["lnx_s"], lp["lnx_b"], cfg.norm_eps),
+            memory, causal=False,
+        )
+        h = h + c
+        m = gelu_mlp(
+            layer_norm(h, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps),
+            lp["w_in"], lp["b_in"], lp["w_out"], lp["b_out"],
+        )
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = shard_act(k.astype(dt), "dp", None, None, "tp")
+        v = shard_act(v.astype(dt), "dp", None, None, "tp")
+        return h + m, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(jax.checkpoint(body), x, params["dec_layers"])
+    x = layer_norm(x, params["dec_ln_s"], params["dec_ln_b"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"].astype(dt))
+    base = init_cache(params, cfg, memory, b, s_max)
+    cache = base._replace(k=ks, v=vs, pos=jnp.asarray(s, jnp.int32))
+    return cache, logits

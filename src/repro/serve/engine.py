@@ -1,0 +1,51 @@
+"""Minimal batched serving engine: prefill once, decode greedily.
+
+Serving snapshots (params + live caches/recurrent state) checkpoint
+through the same CheckpointManager as training state — recurrent-state
+snapshots are what make long-context serving restartable, one of the
+paper-system's selling points for inference fleets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    s_max: Optional[int] = None  # cache capacity (default: prompt + new)
+
+
+class Server:
+    def __init__(self, model: Model, params: Any, cfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(
+            lambda p, c, t: self.model.decode_step(p, c, t)
+        )
+
+    def generate(self, batch: Dict[str, Any]) -> Tuple[np.ndarray, Any]:
+        """Greedy decode; returns (generated tokens (B, T_new), final cache)."""
+        prompt = batch["tokens"]
+        b, s = prompt.shape
+        s_max = self.cfg.s_max or (s + self.cfg.max_new_tokens)
+        cache, logits = self.model.prefill(self.params, batch, s_max=s_max)
+        outs = []
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        for _ in range(self.cfg.max_new_tokens):
+            outs.append(np.asarray(tok)[:, 0])
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return np.stack(outs, axis=1), cache
+
+    def snapshot_state(self, cache: Any) -> Dict[str, Any]:
+        """Checkpointable serving snapshot (params + cache)."""
+        return {"params": self.params, "cache": cache}

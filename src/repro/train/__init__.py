@@ -1,0 +1,20 @@
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, lr_at
+from repro.train.train_step import (
+    TrainConfig,
+    build_train_step,
+    init_train_state,
+    make_train_step,
+    train_state_specs,
+)
+
+__all__ = [
+    "OptConfig",
+    "adamw_update",
+    "init_opt_state",
+    "lr_at",
+    "TrainConfig",
+    "build_train_step",
+    "init_train_state",
+    "make_train_step",
+    "train_state_specs",
+]

@@ -1,0 +1,98 @@
+"""AdamW + schedules, from scratch (no optax).
+
+Optimizer moments can live in a reduced dtype (``state_dtype='bfloat16'``)
+— at 405B that is the difference between fitting and not fitting v5e HBM
+alongside FSDP-sharded bf16 params (see EXPERIMENTS.md §Roofline).
+Update math always runs in f32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Optional[str] = None   # None -> match param dtype
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"            # cosine | constant
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> Dict[str, Any]:
+    def z(p):
+        dt = jnp.dtype(cfg.state_dtype) if cfg.state_dtype else p.dtype
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "mu": jax.tree_util.tree_map(z, params),
+        "nu": jax.tree_util.tree_map(z, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    grads: Any, opt_state: Dict[str, Any], params: Any, cfg: OptConfig
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    count = opt_state["count"] + 1
+    cf = count.astype(jnp.float32)
+    gnorm = global_norm(grads)
+    scale = jnp.where(
+        gnorm > cfg.grad_clip, cfg.grad_clip / jnp.maximum(gnorm, 1e-9), 1.0
+    )
+    lr = lr_at(cfg, opt_state["count"])
+    bc1 = 1.0 - cfg.beta1 ** cf
+    bc2 = 1.0 - cfg.beta2 ** cf
+
+    def upd(p, g, mu, nu):
+        gf = g.astype(jnp.float32) * scale
+        mu_f = cfg.beta1 * mu.astype(jnp.float32) + (1 - cfg.beta1) * gf
+        nu_f = cfg.beta2 * nu.astype(jnp.float32) + (1 - cfg.beta2) * gf * gf
+        step = (mu_f / bc1) / (jnp.sqrt(nu_f / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), mu_f.astype(mu.dtype), nu_f.astype(nu.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(opt_state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return (
+        new_p,
+        {"mu": new_mu, "nu": new_nu, "count": count},
+        {"grad_norm": gnorm, "lr": lr},
+    )

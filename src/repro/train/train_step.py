@@ -1,0 +1,135 @@
+"""Train-step builder: grad accumulation, remat, pjit shardings.
+
+``make_train_step`` returns a jitted function over a TrainState pytree
+with explicit in/out shardings derived from the model's partition rules
+(FSDP over pod+data, TP over model).  Gradient accumulation runs as a
+``lax.scan`` over microbatches — peak activation memory is one
+microbatch deep, which is what lets llama3-405b's train_4k cell compile
+inside v5e HBM.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.api import Model
+from repro.models.sharding import fsdp_axes, param_specs, _maybe
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1
+    remat: bool = True
+    accum_dtype: str = "float32"   # grad-accumulator dtype (bf16 at 405B)
+
+
+def init_train_state(model: Model, rng, tcfg: TrainConfig) -> Dict[str, Any]:
+    params = model.init(rng)
+    return {
+        "params": params,
+        "opt": init_opt_state(params, tcfg.opt),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def train_state_specs(model: Model, mesh: Mesh, tcfg: TrainConfig) -> Dict[str, Any]:
+    pspecs = param_specs(model, mesh)
+    return {
+        "params": pspecs,
+        "opt": {
+            "mu": pspecs,
+            "nu": pspecs,
+            "count": P(),
+        },
+        "step": P(),
+    }
+
+
+def batch_spec_tree(model: Model, mesh: Mesh, batch_struct: Any) -> Any:
+    F = fsdp_axes(mesh)
+
+    def spec(leaf):
+        rank = len(leaf.shape)
+        return P(_maybe(leaf.shape[0], F, mesh), *([None] * (rank - 1)))
+
+    return jax.tree_util.tree_map(spec, batch_struct)
+
+
+def build_train_step(model: Model, tcfg: TrainConfig):
+    """The un-jitted step: (state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        loss, parts = model.loss(params, mb, remat=tcfg.remat)
+        return loss, parts
+
+    def train_step(state, batch):
+        params = state["params"]
+        k = tcfg.microbatches
+        if k > 1:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch
+            )
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype) / k, g_acc, g
+                )
+                return (g_acc, l_acc + loss / k), None
+
+            adt = jnp.dtype(tcfg.accum_dtype)
+            g0 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, adt), params)
+            (grads, loss), _ = jax.lax.scan(
+                accum, (g0, jnp.zeros((), jnp.float32)), mbs
+            )
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        new_params, new_opt, om = adamw_update(grads, state["opt"], params, tcfg.opt)
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        metrics = {"loss": loss.astype(jnp.float32), **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_train_step(
+    model: Model,
+    tcfg: TrainConfig,
+    mesh: Mesh,
+    batch_struct: Any,
+):
+    """jit with explicit shardings; returns (jitted_fn, state_specs, batch_specs)."""
+    sspecs = train_state_specs(model, mesh, tcfg)
+    bspecs = batch_spec_tree(model, mesh, batch_struct)
+    mspec = {"loss": P(), "grad_norm": P(), "lr": P()}
+    fn = jax.jit(
+        build_train_step(model, tcfg),
+        in_shardings=(
+            jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), sspecs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+            jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), bspecs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+        ),
+        out_shardings=(
+            jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), sspecs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+            jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), mspec,
+                                   is_leaf=lambda x: isinstance(x, P)),
+        ),
+        donate_argnums=(0,),
+    )
+    return fn, sspecs, bspecs

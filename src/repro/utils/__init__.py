@@ -1,0 +1,11 @@
+from repro.utils.humanize import fmt_bytes, fmt_dur, fmt_bw
+from repro.utils.treelib import leaf_paths, tree_bytes, flatten_with_names
+
+__all__ = [
+    "fmt_bytes",
+    "fmt_dur",
+    "fmt_bw",
+    "leaf_paths",
+    "tree_bytes",
+    "flatten_with_names",
+]

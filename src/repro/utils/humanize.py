@@ -1,0 +1,27 @@
+"""Human-readable formatting helpers used across logs / benchmarks."""
+from __future__ import annotations
+
+
+def fmt_bytes(n: float) -> str:
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
+        if abs(n) < 1024.0 or unit == "PiB":
+            return f"{n:.2f} {unit}" if unit != "B" else f"{int(n)} B"
+        n /= 1024.0
+    return f"{n:.2f} PiB"
+
+
+def fmt_dur(seconds: float) -> str:
+    if seconds < 1e-6:
+        return f"{seconds * 1e9:.1f} ns"
+    if seconds < 1e-3:
+        return f"{seconds * 1e6:.1f} us"
+    if seconds < 1.0:
+        return f"{seconds * 1e3:.2f} ms"
+    if seconds < 120.0:
+        return f"{seconds:.2f} s"
+    return f"{seconds / 60.0:.1f} min"
+
+
+def fmt_bw(bytes_per_sec: float) -> str:
+    return f"{bytes_per_sec / 1e9:.2f} GB/s"

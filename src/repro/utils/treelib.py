@@ -1,0 +1,36 @@
+"""Pytree helpers: named leaves, byte accounting.
+
+Kept dependency-light (jax.tree_util only) so the checkpoint core can use
+them without importing model code.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import numpy as np
+from jax.tree_util import tree_flatten_with_path, keystr
+
+
+def leaf_paths(tree: Any) -> List[str]:
+    """Stable, human-readable path string per leaf (manifest keys)."""
+    leaves, _ = tree_flatten_with_path(tree)
+    return [keystr(path) for path, _ in leaves]
+
+
+def flatten_with_names(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    leaves, treedef = tree_flatten_with_path(tree)
+    return [(keystr(path), leaf) for path, leaf in leaves], treedef
+
+
+def _leaf_nbytes(x: Any) -> int:
+    if hasattr(x, "nbytes"):
+        return int(x.nbytes)
+    if isinstance(x, (int, float, bool)):
+        return 8
+    return len(np.asarray(x).tobytes())
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total serialized payload size of a pytree (array leaves only)."""
+    return sum(_leaf_nbytes(l) for l in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,24 @@
+"""Beyond-paper capacity-weighted leader regions stay valid plans."""
+import numpy as np
+
+from repro.core import make_plan, theta_like, validate_plan
+
+GiB = 1 << 30
+
+
+def test_capacity_regions_valid_and_skewed():
+    rng = np.random.default_rng(3)
+    c = theta_like(8, 2).with_(node_load=[0.8, 0, 0, 0, 0.8, 0, 0, 0])
+    sizes = rng.integers(GiB // 4, GiB, c.world_size).tolist()
+    plan = make_plan(
+        "stripe_aligned", c, sizes, n_leaders=8, capacity_regions=True
+    )
+    validate_plan(plan)
+    assert plan.stripe_disjoint
+    sizes_per_region = [e - s for s, e in plan.leaders.regions]
+    loads = [c.load_of(n) for n in plan.leaders.leaders]
+    # loaded leaders own smaller regions than unloaded ones
+    loaded = [sz for sz, ld in zip(sizes_per_region, loads) if ld > 0.5]
+    clean = [sz for sz, ld in zip(sizes_per_region, loads) if ld <= 0.5]
+    if loaded and clean:
+        assert max(loaded) <= min(clean) * 1.01

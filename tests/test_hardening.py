@@ -1,0 +1,119 @@
+"""Production-hardening behaviours: backpressure, scrubbing, sim
+metamorphic properties."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CheckpointConfig,
+    CheckpointManager,
+    make_plan,
+    simulate_flush,
+    theta_like,
+)
+
+GiB = 1 << 30
+
+
+def small_state(step=0):
+    return {"w": jnp.full((50_000,), float(step), jnp.float32)}
+
+
+def test_backpressure_bounds_pending_flushes(tmp_path):
+    """save() must block once max_pending_flushes are in flight."""
+    gate = threading.Event()
+    in_flight = []
+
+    def slow_hook(_w):
+        in_flight.append(1)
+        gate.wait(timeout=30)
+
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            root=str(tmp_path), cluster=theta_like(1, 1),
+            strategy="file_per_process", max_pending_flushes=1,
+        ),
+        fault_hook=slow_hook,
+    )
+    mgr.save(1, small_state(1))          # occupies the single slot
+    t0 = time.perf_counter()
+    done = threading.Event()
+
+    def second_save():
+        mgr.save(2, small_state(2))
+        done.set()
+
+    t = threading.Thread(target=second_save, daemon=True)
+    t.start()
+    time.sleep(0.3)
+    assert not done.is_set()             # blocked on backpressure
+    gate.set()                           # let flush 1 (and 2) complete
+    assert done.wait(timeout=30)
+    mgr.wait()
+    assert not mgr.flush_errors
+    mgr.close()
+
+
+def test_validate_scrub_flags_corruption(tmp_path):
+    mgr = CheckpointManager(
+        CheckpointConfig(root=str(tmp_path), cluster=theta_like(2, 2),
+                         strategy="stripe_aligned")
+    )
+    mgr.save(5, small_state(5))
+    mgr.wait()
+    rep = mgr.validate(5)
+    assert all(rep["pfs"].values()) and len(rep["pfs"]) == 4
+    assert all(rep["local"].values()) and len(rep["local"]) == 4
+    # corrupt one byte on the PFS aggregate: exactly one rank goes bad
+    agg = next((mgr.pfs_dir / "step_00000005").glob("aggregate.dat"))
+    data = bytearray(agg.read_bytes())
+    data[10] ^= 0x01
+    agg.write_bytes(bytes(data))
+    rep2 = mgr.validate(5)
+    assert sum(not ok for ok in rep2["pfs"].values()) == 1
+    assert all(rep2["local"].values())   # local copies untouched
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# metamorphic simulator properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    nodes=st.sampled_from([4, 8, 16]),
+    ppn=st.sampled_from([1, 2, 4]),
+    strategy=st.sampled_from(["file_per_process", "stripe_aligned"]),
+)
+def test_flush_time_monotone_in_bytes(nodes, ppn, strategy):
+    c = theta_like(nodes, ppn)
+    small = simulate_flush(make_plan(strategy, c, [256 << 20] * c.world_size))
+    big = simulate_flush(make_plan(strategy, c, [1 << 30] * c.world_size))
+    assert big.flush_time > small.flush_time
+
+
+@settings(max_examples=8, deadline=None)
+@given(load=st.floats(0.1, 0.8), nodes=st.sampled_from([4, 8]))
+def test_load_never_speeds_up_flush(load, nodes):
+    c = theta_like(nodes, 2)
+    sizes = [GiB] * c.world_size
+    clean = simulate_flush(make_plan("file_per_process", c, sizes))
+    cj = c.with_(node_load=[load] + [0.0] * (nodes - 1))
+    jit = simulate_flush(make_plan("file_per_process", cj, sizes))
+    assert jit.flush_time >= clean.flush_time * 0.999
+
+
+def test_more_nodes_never_slower_same_total_bytes():
+    total = 64 * GiB
+    times = []
+    for nodes in (4, 8, 16):
+        c = theta_like(nodes, 2)
+        per = total // c.world_size
+        rep = simulate_flush(make_plan("stripe_aligned", c, [per] * c.world_size))
+        times.append(rep.flush_time)
+    assert times[0] >= times[1] >= times[2] * 0.999

@@ -1,0 +1,100 @@
+"""Trip-count-corrected HLO cost extraction (pure text-level tests +
+a live nested-scan validation in a subprocess with >1 device)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.launch.hlo_analysis import analyze_hlo, split_computations
+from repro.launch.roofline import RooflineTerms, model_flops
+
+HLO_TOY = """
+HloModule toy, is_scheduled=true
+
+%body (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%arg), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %dot.1 = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ni, %ar)
+}
+
+%cond (arg2: (s32[], f32[8,8])) -> pred[] {
+  %arg2 = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i2 = s32[] get-tuple-element(%arg2), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+  %p = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]{1,0}) tuple(%zero, %p)
+  %w = (s32[], f32[8,8]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_split_and_multipliers():
+    comps = split_computations(HLO_TOY)
+    assert set(comps) == {"body", "cond", "sum", "main"}
+    cost = analyze_hlo(HLO_TOY)
+    # 12 iterations x one 8x8x8 dot
+    assert cost.flops == 12 * 2 * 8 * 8 * 8
+    assert cost.collectives["all-reduce"] == 12 * 8 * 8 * 4
+    assert cost.n_while == 1
+    assert cost.max_trip == 12
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(
+        flops_per_dev=197e12, bytes_per_dev=819e9, coll_bytes_per_dev=0.0,
+        n_chips=256, model_flops_global=197e12 * 256,
+    )
+    assert t.compute_s == 1.0
+    assert t.memory_s == 1.0
+    assert t.dominant == "compute"
+    assert t.roofline_fraction == 1.0
+    assert model_flops("train", 10, 2, 3) == 6 * 10 * 6
+    assert model_flops("decode", 10, 4, 999) == 2 * 10 * 4
+
+
+def test_live_nested_scan_counts():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from repro.launch.hlo_analysis import analyze_hlo
+def f(x, w):
+    def outer(c, _):
+        def inner(c2, _):
+            return c2 @ w, None
+        y, _ = jax.lax.scan(inner, c, None, length=6)
+        return y, None
+    y, _ = jax.lax.scan(outer, x, None, length=5)
+    return y
+comp = jax.jit(f).lower(jax.ShapeDtypeStruct((32, 32), jnp.float32),
+                        jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+c = analyze_hlo(comp.as_text())
+expect = 5 * 6 * 2 * 32 ** 3
+assert c.flops == expect, (c.flops, expect)
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=300, env=env, cwd=str(Path(__file__).resolve().parents[1]),
+    )
+    assert "OK" in out.stdout, out.stderr[-2000:]

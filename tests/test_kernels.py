@@ -1,0 +1,116 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp/numpy oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.checksum import checksum_u32, digest_bytes
+from repro.kernels.checksum.ref import checksum_ref_np, digest_ref
+from repro.kernels.delta import xor_delta
+from repro.kernels.delta.ref import delta_ref
+from repro.kernels.quantize import dequantize, quantize
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+
+RNG = np.random.default_rng(1234)
+
+
+# ---------------------------------------------------------------------------
+# checksum
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [0, 1, 3, 1023, 1024, 1025, 4096, 100_003])
+def test_checksum_shapes(n):
+    w = RNG.integers(0, 2**32, n, dtype=np.uint32)
+    s, t = np.asarray(checksum_u32(jnp.asarray(w)))
+    rs, rt = checksum_ref_np(w)
+    assert (int(s), int(t)) == (rs, rt)
+
+
+def test_checksum_detects_flip_and_swap():
+    w = RNG.integers(0, 2**32, 5000, dtype=np.uint32)
+    base = digest_ref(w)
+    flip = w.copy()
+    flip[1234] ^= 1
+    assert digest_ref(flip) != base
+    swap = w.copy()
+    swap[10], swap[4000] = swap[4000], swap[10]
+    assert digest_ref(swap) != base  # position track catches moves
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.binary(min_size=0, max_size=4096))
+def test_checksum_bytes_fuzz(data):
+    got = digest_bytes(data)
+    pad = (-len(data)) % 4
+    w = np.frombuffer(data + b"\0" * pad, dtype=np.uint32)
+    assert got == digest_ref(w)
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+@pytest.mark.parametrize("n", [128, 4096, 4096 + 77, 50_000])
+def test_quantize_matches_ref(dtype, n):
+    x = (RNG.standard_normal(n) * 7).astype(dtype)
+    q, s = quantize(jnp.asarray(x))
+    pad = (-n) % 4096
+    ref_q, ref_s = quantize_ref(
+        np.pad(x.astype(np.float32), (0, pad)).reshape(-1, 128)
+    )
+    # XLA and numpy f32 division may differ by 1 ulp exactly at rounding
+    # ties -> allow |q - ref| <= 1 on a vanishing fraction of elements.
+    diff = np.abs(np.asarray(q).astype(np.int32) - ref_q.astype(np.int32))
+    assert diff.max() <= 1
+    assert (diff != 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(s), ref_s, rtol=1e-6)
+    back = np.asarray(dequantize(q, s, n=n))
+    ref_back = dequantize_ref(ref_q, ref_s).reshape(-1)[:n]
+    scale_full = np.repeat(ref_s, 128)[:n]
+    assert np.abs(back - ref_back).max() <= scale_full.max() + 1e-6
+
+
+def test_quantize_error_bound():
+    x = (RNG.standard_normal(10_000) * 100).astype(np.float32)
+    q, s = quantize(jnp.asarray(x))
+    back = np.asarray(dequantize(q, s, n=x.size))
+    blocks = np.pad(x, (0, (-x.size) % 4096)).reshape(-1, 128)
+    bound = (np.abs(blocks).max(1) / 127.0)[:, None] * 0.5 + 1e-7
+    err = np.abs(np.pad(x, (0, (-x.size) % 4096)).reshape(-1, 128)
+                 - np.pad(back, (0, (-x.size) % 4096)).reshape(-1, 128))
+    assert (err <= bound + 1e-6).all()
+
+
+def test_quantize_zero_block():
+    x = np.zeros(256, np.float32)
+    q, s = quantize(jnp.asarray(x))
+    assert np.asarray(q).sum() == 0
+    np.testing.assert_array_equal(np.asarray(dequantize(q, s, n=256)), x)
+
+
+# ---------------------------------------------------------------------------
+# delta
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 1024, 9999, 65536])
+def test_delta_matches_ref(n):
+    a = RNG.integers(0, 2**32, n, dtype=np.uint32)
+    b = a.copy()
+    b[:: max(1, n // 17)] ^= 0xA5A5A5A5
+    d, cnt = xor_delta(jnp.asarray(a), jnp.asarray(b))
+    rd, rcnt = delta_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(d), rd)
+    assert int(cnt) == rcnt
+
+
+def test_delta_roundtrip():
+    a = RNG.integers(0, 2**32, 5000, dtype=np.uint32)
+    b = RNG.integers(0, 2**32, 5000, dtype=np.uint32)
+    d, _ = xor_delta(jnp.asarray(a), jnp.asarray(b))
+    back, _ = xor_delta(d, jnp.asarray(a))
+    np.testing.assert_array_equal(np.asarray(back), b)

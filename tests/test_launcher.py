@@ -1,0 +1,36 @@
+"""End-to-end CLI driver test: train -> kill -> resume, via subprocess."""
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+
+def _run(args, env):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.train"] + args,
+        capture_output=True, text=True, timeout=560, env=env,
+        cwd=str(Path(__file__).resolve().parents[1]),
+    )
+
+
+def test_train_cli_checkpoints_and_resumes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    with tempfile.TemporaryDirectory() as root:
+        common = [
+            "--arch", "tinyllama-1.1b", "--smoke", "--global-batch", "4",
+            "--seq-len", "32", "--ckpt-every", "3", "--root", root,
+            "--strategy", "stripe_aligned", "--codec", "zstd",
+        ]
+        first = _run(common + ["--steps", "6"], env)
+        assert first.returncode == 0, first.stderr[-2000:]
+        assert "step     6" in first.stdout
+        assert "[ckpt]" in first.stdout
+
+        second = _run(common + ["--steps", "9", "--resume"], env)
+        assert second.returncode == 0, second.stderr[-2000:]
+        assert "[resume] restored step 6" in second.stdout
+        assert "step     7" in second.stdout  # continued, not restarted
+        assert "step     9" in second.stdout

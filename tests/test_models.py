@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_config, get_smoke_config
+from repro.models import get_model
+from repro.models import transformer as T
+
+RNG = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=16):
+    batch = {"tokens": jax.random.randint(RNG, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(RNG, (b, cfg.n_patches, cfg.d_model))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(RNG, (b, cfg.enc_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(RNG)
+    batch = make_batch(cfg)
+    logits, _ = model.forward(params, batch)
+    s_expect = 16 + (cfg.n_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, s_expect, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    loss, parts = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+    # one gradient step moves the loss
+    g = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gn = sum(float(jnp.abs(x).sum()) for x in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(RNG)
+    batch = make_batch(cfg, b=2, s=8)
+    cache, logits = model.prefill(params, batch, s_max=12)
+    assert logits.shape == (2, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache = model.decode_step(params, cache, tok)
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize(
+    "arch", ["tinyllama-1.1b", "xlstm-350m", "recurrentgemma-2b", "whisper-small"]
+)
+def test_decode_matches_teacher_forcing(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(RNG)
+    batch = make_batch(cfg, b=2, s=10)
+    full, _ = model.forward(params, batch)
+    cache, last = model.prefill(params, batch, s_max=12)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3
+    )
+    tok = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    lg2, _ = model.decode_step(params, cache, tok)
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], tok], axis=1)
+    full2, _ = model.forward(params, batch2)
+    np.testing.assert_allclose(
+        np.asarray(lg2), np.asarray(full2[:, -1]), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_moe_capacity_drops_tokens_deterministically():
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    model = get_model(cfg)
+    params = model.init(RNG)
+    batch = make_batch(cfg)
+    l1, _ = model.loss(params, batch)
+    l2, _ = model.loss(params, batch)
+    assert float(l1) == float(l2)
+
+
+def test_vlm_patches_change_text_logits():
+    cfg = get_smoke_config("llava-next-mistral-7b")
+    model = get_model(cfg)
+    params = model.init(RNG)
+    batch = make_batch(cfg)
+    lo1, _ = model.forward(params, batch)
+    batch2 = dict(batch)
+    batch2["patches"] = batch["patches"] + 1.0
+    lo2, _ = model.forward(params, batch2)
+    # text positions attend to patch positions -> logits must differ
+    assert float(jnp.abs(lo1[:, -1] - lo2[:, -1]).max()) > 1e-6
+
+
+def test_window_attention_ignores_far_past():
+    cfg = get_smoke_config("recurrentgemma-2b")  # window = 8
+    model = get_model(cfg)
+    params = model.init(RNG)
+    toks = jax.random.randint(RNG, (1, 20), 0, cfg.vocab_size)
+    toks2 = toks.at[:, 0].set((toks[:, 0] + 1) % cfg.vocab_size)
+    f1, _ = model.forward(params, {"tokens": toks})
+    f2, _ = model.forward(params, {"tokens": toks2})
+    # position 0 is outside every window at the last position, but the
+    # RG-LRU recurrence still carries it -> logits differ (hybrid), yet
+    # remain finite and well-formed
+    assert bool(jnp.isfinite(f1).all()) and bool(jnp.isfinite(f2).all())
+
+
+def test_long_500k_applicability_matches_design():
+    expected_runs = {"xlstm-350m", "recurrentgemma-2b"}
+    cell = SHAPES["long_500k"]
+    for arch in ARCHS:
+        ok, why = cell_applicable(get_config(arch), cell)
+        assert ok == (arch in expected_runs), (arch, why)
+
+
+def test_exact_configs_match_table():
+    c = get_config("qwen2-72b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        80, 8192, 64, 8, 29568, 152064,
+    ) and c.qkv_bias
+    c = get_config("llama3-405b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        126, 16384, 128, 8, 53248, 128256,
+    )
+    c = get_config("qwen2-moe-a2.7b")
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.n_shared) == (60, 4, 4)
+    c = get_config("llama4-scout-17b-a16e")
+    assert (c.moe.n_experts, c.moe.top_k) == (16, 1)
+    c = get_config("recurrentgemma-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.window) == (
+        26, 2560, 10, 1, 2048,
+    )
+    c = get_config("whisper-small")
+    assert (c.n_layers, c.n_enc_layers, c.d_model, c.vocab_size) == (12, 12, 768, 51865)

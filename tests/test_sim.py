@@ -1,0 +1,80 @@
+"""Simulator tests: the paper's Figure 1/2 claims hold qualitatively."""
+import dataclasses
+
+import pytest
+
+from repro.core import make_plan, simulate_flush, theta_like
+
+GiB = 1 << 30
+
+
+@pytest.fixture(scope="module")
+def reports():
+    c = theta_like(32, 8)
+    sizes = [GiB] * c.world_size
+    out = {}
+    for strat, kw in [
+        ("file_per_process", {}),
+        ("posix", {}),
+        ("mpiio", {"chunk_stripes": 64}),
+        ("stripe_aligned", {"pipeline_chunk": 256 << 20}),
+        ("gio_sync", {"chunk_stripes": 64}),
+    ]:
+        out[strat] = simulate_flush(make_plan(strat, c, sizes, **kw), io_threads=4)
+    return out
+
+
+def test_fig1_local_phase(reports):
+    # aggregation leaves the local phase unchanged (prefix sum ~ free)
+    base = reports["file_per_process"].local_time
+    for s in ("posix", "mpiio", "stripe_aligned"):
+        assert reports[s].local_time == pytest.approx(base, rel=0.05)
+    # GIO writes synchronously to the PFS: much slower local phase
+    assert reports["gio_sync"].local_time > 4 * base
+
+
+def test_fig2_flush_ordering(reports):
+    fpp = reports["file_per_process"].flush_bw
+    # false sharing collapses POSIX aggregation (paper: §2.1)
+    assert reports["posix"].flush_bw < 0.5 * fpp
+    assert reports["posix"].pfs_lock_eff < 0.5
+    # MPI-IO collective rounds underperform (paper: §2.2)
+    assert reports["mpiio"].flush_bw < 0.8 * fpp
+    # the §3 proposal is within 10% of embarrassingly-parallel flush
+    assert reports["stripe_aligned"].flush_bw > 0.85 * fpp
+    assert reports["stripe_aligned"].pfs_lock_eff > 0.99
+
+
+def test_s3_aggregation_wins_on_metadata(reports):
+    assert reports["stripe_aligned"].n_files == 1
+    assert reports["file_per_process"].n_files == 256
+    assert (
+        reports["stripe_aligned"].metadata_ops
+        < reports["file_per_process"].metadata_ops / 5
+    )
+
+
+def test_io_threads_tradeoff():
+    # Tseng et al.: more flush threads -> more app slowdown
+    c = theta_like(8, 4)
+    plan = make_plan("stripe_aligned", c, [GiB] * 32)
+    slow = [simulate_flush(plan, io_threads=t).app_slowdown for t in (1, 4, 8)]
+    assert slow[0] < slow[1] < slow[2]
+
+
+def test_straggler_derates_node():
+    c = theta_like(8, 2)
+    sizes = [GiB] * 16
+    base = simulate_flush(make_plan("file_per_process", c, sizes)).flush_time
+    c2 = c.with_(node_load=[0.8] + [0.0] * 7)
+    slow = simulate_flush(make_plan("file_per_process", c2, sizes)).flush_time
+    assert slow > 1.5 * base  # straggler dominates the unmitigated flush
+
+
+def test_interference_shrinks_effective_nic():
+    c = theta_like(8, 4)
+    c = c.with_(node=dataclasses.replace(c.node, app_net_load=0.6))
+    sizes = [GiB] * 32
+    busy = simulate_flush(make_plan("file_per_process", c, sizes))
+    quiet = simulate_flush(make_plan("file_per_process", theta_like(8, 4), sizes))
+    assert busy.flush_time > quiet.flush_time
