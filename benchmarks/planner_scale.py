@@ -1,0 +1,129 @@
+"""Planner-scale sweep: plan build / validate / simulate wall times.
+
+The paper's headline experiments run at Theta scale (thousands of nodes
+x 32 ranks/node).  This benchmark times the three planner layers —
+``make_plan`` (which validates internally), an explicit
+``validate_plan`` pass, and ``simulate_flush`` — at paper-adjacent
+scales, and emits JSON rows so the perf trajectory of the columnar
+planner is recorded in-repo (``BENCH_planner.json``).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/planner_scale.py                # full sweep
+    PYTHONPATH=src python benchmarks/planner_scale.py --quick        # CI smoke
+    PYTHONPATH=src python benchmarks/planner_scale.py --only 256x16  # one scale
+    PYTHONPATH=src python benchmarks/planner_scale.py --out BENCH_planner.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import make_plan, simulate_flush, theta_like
+from repro.core.plan import validate_plan
+
+GiB = 1 << 30
+
+# (nodes, ppn, strategy, strategy kwargs)
+FULL_CONFIGS: List[Tuple[int, int, str, Dict[str, object]]] = [
+    (256, 16, "stripe_aligned", {"pipeline_chunk": 256 << 20}),
+    (256, 16, "mpiio", {"chunk_stripes": 64}),
+    (1024, 32, "stripe_aligned", {"pipeline_chunk": 1 << 30}),
+    (1024, 32, "mpiio", {"chunk_stripes": 256}),
+]
+QUICK_CONFIGS: List[Tuple[int, int, str, Dict[str, object]]] = [
+    (16, 8, "stripe_aligned", {"pipeline_chunk": 64 << 20}),
+    (16, 8, "mpiio", {"chunk_stripes": 16}),
+    (16, 8, "posix", {}),
+]
+
+
+def bench_one(
+    nodes: int, ppn: int, strategy: str, kw: Dict[str, object], *,
+    io_threads: int = 4,
+) -> Dict[str, object]:
+    cluster = theta_like(nodes, ppn)
+    rng = np.random.default_rng(0)
+    # heterogeneous checkpoint sizes (0.5-1.5 GiB) + 20% loaded nodes,
+    # matching benchmarks/proposal_scale.py
+    sizes = rng.integers(GiB // 2, 3 * GiB // 2, cluster.world_size).tolist()
+    load = np.where(rng.random(nodes) < 0.2, 0.5, 0.0).tolist()
+    cluster = cluster.with_(node_load=load)
+
+    t0 = time.perf_counter()
+    plan = make_plan(strategy, cluster, sizes, **kw)
+    t1 = time.perf_counter()
+    validate_plan(plan)
+    t2 = time.perf_counter()
+    rep = simulate_flush(plan, io_threads=io_threads)
+    t3 = time.perf_counter()
+
+    arrays = getattr(plan, "arrays", None)  # absent on the pre-columnar seed
+    n_writes = arrays.n_writes if arrays is not None else len(plan.writes)
+    n_sends = arrays.n_sends if arrays is not None else len(plan.sends)
+    return {
+        "config": f"{nodes}x{ppn}/{strategy}",
+        "nodes": nodes,
+        "ppn": ppn,
+        "n_ranks": cluster.world_size,
+        "strategy": strategy,
+        "strategy_kwargs": {k: int(v) if isinstance(v, int) else v for k, v in kw.items()},
+        "build_s": round(t1 - t0, 4),
+        "validate_s": round(t2 - t1, 4),
+        "simulate_s": round(t3 - t2, 4),
+        "total_s": round(t3 - t0, 4),
+        "n_writes": int(n_writes),
+        "n_sends": int(n_sends),
+        "sim_flush_time_s": round(rep.flush_time, 4),
+        "sim_flush_bw_GBps": round(rep.flush_bw / 1e9, 2),
+    }
+
+
+def run(
+    configs: List[Tuple[int, int, str, Dict[str, object]]],
+    *, only: Optional[str] = None, verbose: bool = True,
+) -> List[Dict[str, object]]:
+    rows = []
+    for nodes, ppn, strategy, kw in configs:
+        if only and only not in (f"{nodes}x{ppn}", f"{nodes}x{ppn}/{strategy}"):
+            continue
+        row = bench_one(nodes, ppn, strategy, kw)
+        rows.append(row)
+        if verbose:
+            print(
+                f"{row['config']:>32}  build={row['build_s']:8.3f}s  "
+                f"validate={row['validate_s']:8.3f}s  "
+                f"simulate={row['simulate_s']:8.3f}s  "
+                f"writes={row['n_writes']}",
+                flush=True,
+            )
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true", help="CI smoke configs")
+    p.add_argument("--only", help="restrict to one scale, e.g. 256x16")
+    p.add_argument("--out", help="write JSON rows to this path")
+    args = p.parse_args(argv)
+
+    configs = QUICK_CONFIGS if args.quick else FULL_CONFIGS
+    rows = run(configs, only=args.only)
+    doc = {"benchmark": "planner_scale", "quick": bool(args.quick), "rows": rows}
+    text = json.dumps(doc, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}")
+    else:
+        json.dump(doc, sys.stdout, indent=2)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -14,10 +14,14 @@ from repro.core.cluster import ClusterSpec, NodeSpec, PFSSpec, theta_like
 from repro.core.engine import CheckpointConfig, CheckpointManager, SaveStats
 from repro.core.plan import (
     FlushPlan,
+    PlanArrays,
+    SendColumns,
     SendItem,
+    WriteColumns,
     WriteItem,
     count_false_sharing,
     validate_plan,
+    validate_plan_reference,
 )
 from repro.core.prefix_sum import (
     LeaderAssignment,
@@ -38,9 +42,13 @@ __all__ = [
     "CheckpointManager",
     "SaveStats",
     "FlushPlan",
+    "PlanArrays",
+    "SendColumns",
     "SendItem",
+    "WriteColumns",
     "WriteItem",
     "validate_plan",
+    "validate_plan_reference",
     "count_false_sharing",
     "LeaderAssignment",
     "ScanResult",

@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
+
+import numpy as np
 from typing import List, Optional, Sequence
 
 
@@ -102,6 +104,10 @@ class ClusterSpec:
     def node_of_rank(self, rank: int) -> int:
         return rank // self.procs_per_node
 
+    def nodes_of_ranks(self, ranks) -> np.ndarray:
+        """Vectorized :meth:`node_of_rank` over an int array."""
+        return np.asarray(ranks, dtype=np.int64) // self.procs_per_node
+
     def ranks_of_node(self, node: int) -> List[int]:
         base = node * self.procs_per_node
         return list(range(base, base + self.procs_per_node))
@@ -111,10 +117,22 @@ class ClusterSpec:
             return 0.0
         return float(self.node_load[node])
 
+    def loads(self) -> np.ndarray:
+        """Per-node background load as a float64 vector (len n_nodes)."""
+        if self.node_load is None:
+            return np.zeros(self.n_nodes)
+        return np.asarray(self.node_load, dtype=np.float64)
+
     def coord_of(self, node: int) -> int:
         if self.node_coord is None:
             return node
         return int(self.node_coord[node])
+
+    def coords(self) -> np.ndarray:
+        """Per-node topology coordinate as an int64 vector (len n_nodes)."""
+        if self.node_coord is None:
+            return np.arange(self.n_nodes, dtype=np.int64)
+        return np.asarray(self.node_coord, dtype=np.int64)
 
     def with_(self, **kw) -> "ClusterSpec":
         return dataclasses.replace(self, **kw)

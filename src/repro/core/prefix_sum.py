@@ -12,12 +12,19 @@ Everything here is a pure algorithm (no I/O): the planner uses it
 directly, the simulator prices its message complexity, and a
 ``shard_map`` twin in :mod:`repro.dist.collectives` shows the same scan
 as a device-level JAX collective.
+
+At paper scale the scan and the election inputs are array programs: the
+exclusive scan is one ``np.cumsum``, per-node byte totals are a reshape-
+sum, and the per-(region, node) election scores are computed as
+broadcast NumPy expressions rather than nested Python loops.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.cluster import ClusterSpec
 
@@ -65,17 +72,32 @@ class ScanResult:
     total_bytes: int
     node_summaries: List[NodeSummary]
     meta: ScanMeta = field(default=None)  # type: ignore[assignment]
+    # Columnar twins, populated by piggybacked_scan so the vectorized
+    # planner layers never rebuild them from the Python lists.
+    offsets_np: Optional[np.ndarray] = None   # int64, len world_size
+    node_bytes_np: Optional[np.ndarray] = None  # int64, len n_nodes
+
+    def offsets_array(self) -> np.ndarray:
+        if self.offsets_np is None:
+            self.offsets_np = np.asarray(self.rank_offsets, dtype=np.int64)
+        return self.offsets_np
+
+
+def exclusive_prefix_sum_np(sizes: Sequence[int]) -> Tuple[np.ndarray, int]:
+    """Vectorized exclusive scan: (int64 offsets, total)."""
+    arr = np.asarray(sizes, dtype=np.int64)
+    if arr.size and int(arr.min()) < 0:
+        raise ValueError("checkpoint sizes must be non-negative")
+    offsets = np.zeros(arr.size, dtype=np.int64)
+    if arr.size:
+        np.cumsum(arr[:-1], out=offsets[1:])
+    total = int(arr.sum())
+    return offsets, total
 
 
 def exclusive_prefix_sum(sizes: Sequence[int]) -> Tuple[List[int], int]:
-    offsets: List[int] = []
-    acc = 0
-    for s in sizes:
-        if s < 0:
-            raise ValueError("checkpoint sizes must be non-negative")
-        offsets.append(acc)
-        acc += int(s)
-    return offsets, acc
+    offsets, total = exclusive_prefix_sum_np(sizes)
+    return offsets.tolist(), total
 
 
 def piggybacked_scan(
@@ -93,26 +115,26 @@ def piggybacked_scan(
         raise ValueError(
             f"expected {cluster.world_size} rank sizes, got {len(rank_sizes)}"
         )
-    offsets, total = exclusive_prefix_sum(rank_sizes)
-    summaries = []
-    for node in range(cluster.n_nodes):
-        ranks = cluster.ranks_of_node(node)
-        summaries.append(
-            NodeSummary(
-                node=node,
-                bytes=sum(int(rank_sizes[r]) for r in ranks),
-                load=cluster.load_of(node),
-                coord=cluster.coord_of(node),
-            )
-        )
+    offsets, total = exclusive_prefix_sum_np(rank_sizes)
+    sizes = np.asarray(rank_sizes, dtype=np.int64)
+    node_bytes = sizes.reshape(cluster.n_nodes, cluster.procs_per_node).sum(axis=1)
+    loads = cluster.loads()
+    coords = cluster.coords()
+    summaries = [
+        NodeSummary(node=node, bytes=int(node_bytes[node]),
+                    load=float(loads[node]), coord=int(coords[node]))
+        for node in range(cluster.n_nodes)
+    ]
     meta = ScanMeta.for_participants(
         cluster.n_nodes, payload_bytes=8 + payload_extra_bytes
     )
     return ScanResult(
-        rank_offsets=offsets,
+        rank_offsets=offsets.tolist(),
         total_bytes=total,
         node_summaries=summaries,
         meta=meta,
+        offsets_np=offsets,
+        node_bytes_np=node_bytes,
     )
 
 
@@ -179,8 +201,10 @@ def elect_leaders(
     pfs = cluster.pfs
     stripe = pfs.stripe_size
     total = scan.total_bytes
+    n_nodes = cluster.n_nodes
+    ppn = cluster.procs_per_node
     n_stripes = max(1, pfs.n_stripes(total))
-    m = min(m_leaders, n_stripes, cluster.n_nodes)
+    m = min(m_leaders, n_stripes, n_nodes)
     stripes_per_region = -(-n_stripes // m)
 
     regions: List[Tuple[int, int]] = []
@@ -193,56 +217,58 @@ def elect_leaders(
     m = len(regions)
 
     # Node byte-extent in the aggregate file: [first rank offset, last end).
-    node_extent: List[Tuple[int, int]] = []
-    for node in range(cluster.n_nodes):
-        ranks = cluster.ranks_of_node(node)
-        starts = [scan.rank_offsets[r] for r in ranks]
-        ends = [
-            scan.rank_offsets[r]
-            + (scan.total_bytes - scan.rank_offsets[r]
-               if r == cluster.world_size - 1
-               else scan.rank_offsets[r + 1] - scan.rank_offsets[r])
-            for r in ranks
-        ]
-        node_extent.append((min(starts) if starts else 0, max(ends) if ends else 0))
+    # Ranks of a node are contiguous, so the extent is simply the first
+    # rank's offset up to the next node's first offset (or the total).
+    offsets = scan.offsets_array()
+    if offsets.size:
+        ext_lo = offsets[::ppn]
+        ext_hi = np.append(offsets[ppn::ppn], total)
+    else:
+        ext_lo = np.zeros(n_nodes, np.int64)
+        ext_hi = np.zeros(n_nodes, np.int64)
 
-    max_node_bytes = max(1, max(s.bytes for s in scan.node_summaries))
-    coord_span = max(
-        1, max(s.coord for s in scan.node_summaries) - min(s.coord for s in scan.node_summaries)
+    node_bytes = (
+        scan.node_bytes_np
+        if scan.node_bytes_np is not None
+        else np.asarray([s.bytes for s in scan.node_summaries], np.int64)
     )
+    loads = cluster.loads()
+    coords = cluster.coords().astype(np.float64)
+    max_node_bytes = max(1, int(node_bytes.max(initial=0)))
+    coord_span = max(1.0, float(coords.max() - coords.min()))
 
-    def overlap(a: Tuple[int, int], b: Tuple[int, int]) -> int:
-        return max(0, min(a[1], b[1]) - max(a[0], b[0]))
+    reg_lo = np.asarray([r[0] for r in regions], np.int64)
+    reg_hi = np.asarray([r[1] for r in regions], np.int64)
+    # (m, n_nodes) byte overlap between each region and each node extent.
+    ob = np.maximum(
+        0,
+        np.minimum(ext_hi[None, :], reg_hi[:, None])
+        - np.maximum(ext_lo[None, :], reg_lo[:, None]),
+    ).astype(np.float64)
 
     leaders: List[int] = []
-    taken = set()
-    allow_reuse = m > cluster.n_nodes  # only possible via tiny clusters
-    for j, reg in enumerate(regions):
-        reg_bytes = max(1, reg[1] - reg[0])
+    taken = np.zeros(n_nodes, bool)
+    allow_reuse = m > n_nodes  # only possible via tiny clusters
+    base_score = (
+        w_size * 0.5 * (node_bytes.astype(np.float64) / max_node_bytes)
+        - w_load * loads
+    )
+    for j in range(m):
+        reg_bytes = max(1, int(reg_hi[j] - reg_lo[j]))
         # Topology centroid of the senders feeding this region, weighted by
         # how many of their bytes land here.
-        wsum, csum = 0.0, 0.0
-        for node in range(cluster.n_nodes):
-            ob = overlap(node_extent[node], reg)
-            if ob > 0:
-                wsum += ob
-                csum += ob * cluster.coord_of(node)
-        centroid = csum / wsum if wsum > 0 else cluster.coord_of(0)
-
-        best, best_score = -1, -math.inf
-        for node in range(cluster.n_nodes):
-            if node in taken and not allow_reuse:
-                continue
-            s = scan.node_summaries[node]
-            local_frac = overlap(node_extent[node], reg) / reg_bytes
-            size_term = w_size * (0.5 * local_frac + 0.5 * s.bytes / max_node_bytes)
-            load_term = w_load * s.load
-            topo_term = w_topo * abs(cluster.coord_of(node) - centroid) / coord_span
-            score = size_term - load_term - topo_term
-            if score > best_score or (score == best_score and node < best):
-                best, best_score = node, score
+        wsum = float(ob[j].sum())
+        centroid = float((ob[j] * coords).sum() / wsum) if wsum > 0 else float(coords[0])
+        score = (
+            base_score
+            + w_size * 0.5 * (ob[j] / reg_bytes)
+            - w_topo * np.abs(coords - centroid) / coord_span
+        )
+        if not allow_reuse:
+            score = np.where(taken, -np.inf, score)
+        best = int(np.argmax(score))
         leaders.append(best)
-        taken.add(best)
+        taken[best] = True
 
     if capacity_regions and len(leaders) > 1:
         caps = [max(1e-3, 1.0 - cluster.load_of(nd)) for nd in leaders]

@@ -44,6 +44,15 @@ Lock contention ("false sharing", §2.1) derates PFS capacity:
   switches between adjacent extents conflict, with lockahead (half
   penalty) — near-zero derating, by construction.
 
+The front-end consumes :class:`~repro.core.plan.PlanArrays` columns
+directly: lock-efficiency, the metadata schedule, write coalescing and
+flow construction are array programs, and the fluid engine itself runs
+on flat NumPy state (per-flow resource rows, residual capacities updated
+with ``np.add.at`` scatters).  Flows with identical resource signatures
+receive identical max-min rates, so rates are cached per signature class
+and only recomputed when the active class census actually changes —
+most starts that replace a same-shaped completion reuse the last rates.
+
 Calibration targets (see EXPERIMENTS.md §Calibration): POSIX aggregation
 degrades ~3x vs file-per-process at paper scale (Fig. 2), local phase is
 orders of magnitude faster than GIO-direct (Fig. 1), aggregation leaves
@@ -51,16 +60,19 @@ the local phase unchanged (Fig. 1).
 """
 from __future__ import annotations
 
-import heapq
 import math
-from collections import defaultdict, deque
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.cluster import ClusterSpec
-from repro.core.plan import FlushPlan, SendItem, WriteItem
+from repro.core.plan import (
+    FlushPlan,
+    PlanArrays,
+    coalesce_write_columns,
+)
 
 MAX_RPC = 4 << 20  # Lustre max RPC size (4 MiB)
 
@@ -79,33 +91,33 @@ def pfs_lock_efficiency(
     rpc = min(int(rpc_size or pfs.stripe_size), MAX_RPC)
     penalty = pfs.lock_switch_penalty
 
-    per_file_writers: Dict[str, set] = defaultdict(set)
-    per_file_bytes: Dict[str, int] = defaultdict(int)
-    per_file_extents: Dict[str, List[Tuple[int, int]]] = defaultdict(list)
-    for w in plan.writes:
-        per_file_writers[w.file].add(w.backend)
-        per_file_bytes[w.file] += w.size
-        per_file_extents[w.file].append((w.file_offset, w.backend))
+    pa = plan.ensure_arrays()
+    w = pa.writes
+    n_files = max(1, len(pa.file_names))
+    n_nodes = plan.cluster.n_nodes
+
+    if len(w) == 0:
+        return 1.0, 0.0
 
     if plan.stripe_disjoint:
         # Only extent-ownership switches conflict; stripe-aligned writers
-        # benefit from Lustre lockahead => half penalty.
-        switches = 0
-        for f, ext in per_file_extents.items():
-            if len(per_file_writers[f]) <= 1:
-                continue
-            ext.sort()
-            switches += sum(
-                1 for (_, a), (_, b) in zip(ext, ext[1:]) if a != b
-            )
+        # benefit from Lustre lockahead => half penalty.  A switch is a
+        # backend change between offset-adjacent writes of the same file.
+        order = np.lexsort((w.backend, w.file_offset, w.file_id))
+        f = w.file_id[order]
+        b = w.backend[order]
+        switches = int(np.sum((f[1:] == f[:-1]) & (b[1:] != b[:-1])))
         lock_time = switches / n_srv * (penalty * 0.5)
     else:
-        conflicted = 0.0
-        for f, wset in per_file_writers.items():
-            w_count = len(wset)
-            if w_count <= 1:
-                continue
-            conflicted += per_file_bytes[f] / rpc * (w_count - 1) / w_count
+        # writers per file (distinct backends) and bytes per file
+        pairs = np.unique(w.file_id * n_nodes + w.backend)
+        writers = np.bincount((pairs // n_nodes).astype(np.intp), minlength=n_files)
+        fbytes = np.zeros(n_files, np.int64)
+        np.add.at(fbytes, w.file_id, w.size)
+        multi = writers > 1
+        conflicted = float(
+            (fbytes[multi] / rpc * (writers[multi] - 1) / writers[multi]).sum()
+        )
         lock_time = conflicted / n_srv * penalty
 
     t_pure = plan.total_bytes / pfs.aggregate_bw
@@ -115,48 +127,39 @@ def pfs_lock_efficiency(
     return max(eff, 1e-3), lock_time
 
 
+def _open_schedule(plan: FlushPlan, pa: PlanArrays) -> Tuple[np.ndarray, np.ndarray]:
+    """Unique (backend, file) opens and their MDS completion times.
+
+    File creates (one per file) are serviced first, then opens in
+    (backend, file) order, all by a single metadata server with bounded
+    throughput.  Returns (encoded backend*n_files+file_id, done_time).
+    """
+    pfs = plan.cluster.pfs
+    w = pa.writes
+    n_files = max(1, len(pa.file_names))
+    enc = np.unique(w.backend * n_files + w.file_id)
+    n_creates = len(plan.files)
+    done = pfs.md_latency + (
+        n_creates + np.arange(1, len(enc) + 1, dtype=np.float64)
+    ) / pfs.md_ops_per_sec
+    return enc, done
+
+
 def metadata_schedule(plan: FlushPlan) -> Dict[Tuple[int, str], float]:
     """Completion time of each (backend, file) open through the MDS queue.
 
-    File creates (one per file) are serviced first, then opens, all by a
-    single metadata server with bounded throughput.  The returned times
-    gate the first write of each (backend, file).
+    The returned times gate the first write of each (backend, file).
+    (Opens are ordered by (backend, file_id); strategy builders assign
+    file ids in name order, so this matches the historical name sort.)
     """
-    pfs = plan.cluster.pfs
-    opens = sorted({(w.backend, w.file) for w in plan.writes})
-    n_creates = len(plan.files)
-    done: Dict[Tuple[int, str], float] = {}
-    for i, key in enumerate(opens):
-        ops_before = n_creates + i + 1
-        done[key] = pfs.md_latency + ops_before / pfs.md_ops_per_sec
-    return done
-
-
-def _coalesce_writes_for_sim(writes: List[WriteItem]) -> List[WriteItem]:
-    """Contiguous-run merge per (round, backend, file, src_rank)."""
-    ws = sorted(
-        writes, key=lambda w: (w.round, w.backend, w.file, w.src_rank, w.file_offset)
-    )
-    out: List[WriteItem] = []
-    for w in ws:
-        if out:
-            p = out[-1]
-            if (
-                p.round == w.round
-                and p.backend == w.backend
-                and p.file == w.file
-                and p.src_rank == w.src_rank
-                and p.file_offset + p.size == w.file_offset
-                and p.src_offset + p.size == w.src_offset
-            ):
-                out[-1] = WriteItem(
-                    backend=p.backend, file=p.file, file_offset=p.file_offset,
-                    size=p.size + w.size, src_rank=p.src_rank,
-                    src_offset=p.src_offset, round=p.round,
-                )
-                continue
-        out.append(w)
-    return out
+    pa = plan.ensure_arrays()
+    enc, done = _open_schedule(plan, pa)
+    n_files = max(1, len(pa.file_names))
+    names = pa.file_names
+    return {
+        (int(e // n_files), names[int(e % n_files)]): float(t)
+        for e, t in zip(enc, done)
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -196,161 +199,216 @@ class SimReport:
 # ---------------------------------------------------------------------------
 
 
-@dataclass
-class _Flow:
-    fid: int
-    nbytes: float
-    resources: Tuple[int, ...]
-    slot_nodes: Tuple[int, ...]
-    gate: float = 0.0
-    max_rate: float = math.inf
-    remaining: float = 0.0
-    backend: int = -1
-
-    def __post_init__(self):
-        self.remaining = float(self.nbytes)
-
-
 class _FluidSim:
-    """Max-min fair sharing with per-node worker slots and start gates."""
+    """Max-min fair sharing with per-node worker slots and start gates.
+
+    All flow state is columnar: ``res`` holds each flow's resource ids
+    (-1 padded), ``slot_nodes`` the nodes whose worker slots it occupies.
+    A flow arrives at its gate time, starts when every slot node has a
+    free slot (otherwise it queues on each of them), and finishes when
+    its bytes drain at the max-min fair rate.
+    """
 
     def __init__(self, caps: np.ndarray, io_threads: int, n_nodes: int):
         self.caps = caps
-        self.slots = [io_threads] * n_nodes
-        self.active: List[_Flow] = []
-        self.queues: List[deque] = [deque() for _ in range(n_nodes)]
-        self.arrivals: List[Tuple[float, int, _Flow]] = []
-        self.started: set = set()
-        self.finish_times: Dict[int, float] = {}
+        self.io_threads = io_threads
+        self.n_nodes = n_nodes
 
-    def run(self, flows: List[_Flow], t0: float = 0.0) -> Tuple[float, Dict[int, float]]:
-        if not flows:
+    def run(
+        self,
+        res: np.ndarray,          # (nf, deg) int64, -1 padded
+        slot_nodes: np.ndarray,   # (nf, 2) int64, -1 padded
+        nbytes: np.ndarray,       # (nf,) float64
+        gates: np.ndarray,        # (nf,) float64
+        max_rate: float,
+        backend: np.ndarray,      # (nf,) int64
+        t0: float = 0.0,
+    ) -> Tuple[float, Dict[int, float]]:
+        nf = len(nbytes)
+        if nf == 0:
             return t0, {}
-        for f in flows:
-            heapq.heappush(self.arrivals, (max(f.gate, t0), f.fid, f))
-        now = t0
-        per_backend: Dict[int, float] = {}
-        rates = np.zeros(0)
+        n_nodes = self.n_nodes
+        valid = res >= 0
+        # Signature classes: flows with identical resource rows get equal
+        # max-min rates, so rates are cached per class (see module doc).
+        _, cls = np.unique(res, axis=0, return_inverse=True)
+        cls = cls.astype(np.intp)
 
-        def try_start_from(node: int) -> bool:
-            changed = False
-            q = self.queues[node]
-            n = len(q)
-            for _ in range(n):
-                f = q.popleft()
-                if f.fid in self.started:
-                    changed = changed  # duplicate entry; drop
-                    continue
-                if all(self.slots[nd] > 0 for nd in f.slot_nodes):
-                    for nd in f.slot_nodes:
-                        self.slots[nd] -= 1
-                    self.started.add(f.fid)
-                    self.active.append(f)
-                    changed = True
+        remaining = nbytes.astype(np.float64).copy()
+        started = np.zeros(nf, bool)
+        slots = np.full(n_nodes, self.io_threads, np.int64)
+        queues: List[deque] = [deque() for _ in range(n_nodes)]
+        arrivals = np.argsort(gates, kind="stable")
+        gates_sorted = gates[arrivals]
+        ptr = 0
+
+        active = np.empty(nf, np.intp)
+        n_active = 0
+        per_backend = np.full(n_nodes, -1.0)
+        class_rate = np.zeros(int(cls.max()) + 1)
+        rate_deltas: Dict[int, int] = {}
+
+        slot_rows = slot_nodes  # alias
+        flow_cap = float(max_rate)
+
+        def note(c: int, d: int) -> None:
+            v = rate_deltas.get(c, 0) + d
+            if v:
+                rate_deltas[c] = v
+            else:
+                rate_deltas.pop(c, None)
+
+        def can_start(fid: int) -> bool:
+            a, b = slot_rows[fid]
+            if b == a:  # duplicated row: start() takes (and free returns) two
+                return slots[a] > 1
+            if slots[a] <= 0:
+                return False
+            return b < 0 or slots[b] > 0
+
+        def start(fid: int) -> None:
+            nonlocal n_active
+            a, b = slot_rows[fid]
+            slots[a] -= 1
+            if b >= 0:
+                slots[b] -= 1
+            started[fid] = True
+            active[n_active] = fid
+            n_active += 1
+            note(int(cls[fid]), +1)
+
+        def admit(fid: int) -> None:
+            if can_start(fid):
+                start(fid)
+            else:
+                a, b = slot_rows[fid]
+                queues[a].append(fid)
+                if b >= 0 and b != a:
+                    queues[b].append(fid)
+
+        def try_start_from(node: int) -> None:
+            q = queues[node]
+            for _ in range(len(q)):
+                if slots[node] <= 0:
+                    # every flow queued here needs a slot on this node
+                    break
+                fid = q.popleft()
+                if started[fid]:
+                    continue  # duplicate entry (queued on several slot
+                    # nodes, started via another one): drop, don't requeue
+                if can_start(fid):
+                    start(fid)
                 else:
-                    q.append(f)
-            return changed
+                    q.append(fid)
 
-        def admit(f: _Flow) -> bool:
-            if all(self.slots[nd] > 0 for nd in f.slot_nodes):
-                for nd in f.slot_nodes:
-                    self.slots[nd] -= 1
-                self.started.add(f.fid)
-                self.active.append(f)
-                return True
-            for nd in set(f.slot_nodes):
-                self.queues[nd].append(f)
-            return False
-
-        while self.active or self.arrivals:
-            # admit everything that has arrived by `now`
-            changed = False
-            while self.arrivals and self.arrivals[0][0] <= now + 1e-12:
-                _, _, f = heapq.heappop(self.arrivals)
-                changed |= admit(f)
-            if not self.active:
-                if self.arrivals:
-                    now = self.arrivals[0][0]
+        now = t0
+        eps = 1e-12
+        while True:
+            while ptr < nf and gates_sorted[ptr] <= now + eps:
+                admit(int(arrivals[ptr]))
+                ptr += 1
+            if n_active == 0:
+                if ptr < nf:
+                    now = max(now, float(gates_sorted[ptr]))
                     continue
                 break
-            rates = _maxmin_rates(self.active, self.caps)
-            rem = np.array([f.remaining for f in self.active])
+
+            act = active[:n_active]
+            if rate_deltas:
+                rates_a = _maxmin_rates(
+                    res[act], valid[act], flow_cap, self.caps
+                )
+                class_rate[cls[act]] = rates_a
+                rate_deltas.clear()
+            else:
+                rates_a = class_rate[cls[act]]
+
+            rem_a = remaining[act]
             with np.errstate(divide="ignore"):
-                ttf = np.where(rates > 0, rem / np.maximum(rates, 1e-30), np.inf)
+                ttf = np.where(rates_a > 0, rem_a / np.maximum(rates_a, 1e-30), np.inf)
             dt = float(ttf.min())
-            next_arrival = self.arrivals[0][0] if self.arrivals else math.inf
+            next_arrival = float(gates_sorted[ptr]) if ptr < nf else math.inf
             dt = min(dt, next_arrival - now)
             if not math.isfinite(dt):
                 raise RuntimeError("simulation stalled: active flows with zero rate")
             dt = max(dt, 0.0)
             now += dt
-            # progress + completions
-            new_active: List[_Flow] = []
-            freed_nodes: List[int] = []
-            for f, r in zip(self.active, rates):
-                f.remaining -= r * dt
-                if f.remaining <= 1e-6:
-                    self.finish_times[f.fid] = now
-                    per_backend[f.backend] = max(per_backend.get(f.backend, 0.0), now)
-                    for nd in f.slot_nodes:
-                        self.slots[nd] += 1
-                        freed_nodes.append(nd)
-                else:
-                    new_active.append(f)
-            self.active = new_active
-            for nd in set(freed_nodes):
-                try_start_from(nd)
-        return now, per_backend
+
+            rem_a = rem_a - rates_a * dt
+            remaining[act] = rem_a
+            comp = rem_a <= 1e-6
+            if comp.any():
+                done = act[comp]
+                per_backend[backend[done]] = now  # monotone: later is larger
+                freed = slot_rows[done]
+                freed = freed[freed >= 0]
+                np.add.at(slots, freed, 1)
+                for c in cls[done].tolist():
+                    note(int(c), -1)
+                keep = act[~comp]
+                n_active = len(keep)
+                active[:n_active] = keep
+                for nd in np.unique(freed).tolist():
+                    try_start_from(int(nd))
+
+        out = {int(b): float(t) for b, t in enumerate(per_backend) if t >= 0.0}
+        return now, out
 
 
-def _maxmin_rates(active: List[_Flow], caps: np.ndarray) -> np.ndarray:
-    """Progressive-filling max-min fair rates (vectorized)."""
-    nf = len(active)
-    max_deg = max(len(f.resources) for f in active)
-    res = np.full((nf, max_deg), -1, dtype=np.int64)
-    for i, f in enumerate(active):
-        res[i, : len(f.resources)] = f.resources
-    flow_cap = np.array([f.max_rate for f in active])
+def _maxmin_rates(
+    res: np.ndarray, valid: np.ndarray, flow_cap: float, caps: np.ndarray
+) -> np.ndarray:
+    """Progressive-filling max-min fair rates.
+
+    ``res``/``valid`` are the active flows' resource rows, flattened once
+    into (flow, resource) incidence arrays; residual capacities are
+    updated with ``np.add.at`` scatters (no per-flow Python loops).  All
+    resources whose share ties the bottleneck saturate at the same water
+    level, so they freeze together in one iteration — with symmetric
+    node groups this collapses the iteration count to the number of
+    *distinct* bottleneck levels.
+    """
+    nf = len(res)
     rates = np.zeros(nf)
-    frozen = np.zeros(nf, dtype=bool)
+    frozen = np.zeros(nf, bool)
     res_cap = caps.astype(np.float64).copy()
     nres = len(caps)
+    valid_flat = valid.ravel()
+    flat_res = res.ravel()[valid_flat].astype(np.intp)
+    flat_flow = np.repeat(np.arange(nf, dtype=np.intp), res.shape[1])[valid_flat]
 
-    valid = res >= 0
     for _ in range(nres + nf + 1):
         if frozen.all():
             break
         un = ~frozen
-        # per-resource count of unfrozen flows
-        idx = res[un][valid[un]]
+        live = un[flat_flow]
+        idx = flat_res[live]
         if idx.size == 0:
-            rates[un] = np.minimum(flow_cap[un], np.inf)
+            rates[un] = flow_cap
             break
         counts = np.bincount(idx, minlength=nres)
         with np.errstate(divide="ignore", invalid="ignore"):
             share = np.where(counts > 0, res_cap / np.maximum(counts, 1), np.inf)
-        bottleneck = int(np.argmin(share))
-        b_share = float(share[bottleneck])
+        b_share = float(share.min())
         # flows capped below the bottleneck share freeze at their own cap
-        capped = un & (flow_cap <= b_share + 1e-9)
-        if capped.any():
-            rates[capped] = flow_cap[capped]
-            frozen |= capped
-            for i in np.where(capped)[0]:
-                for r in active[i].resources:
-                    res_cap[r] -= rates[i]
+        if flow_cap <= b_share + 1e-9:
+            rates[un] = flow_cap
+            frozen |= un
+            np.add.at(res_cap, idx, -flow_cap)
             continue
         if not math.isfinite(b_share):
-            rates[un] = flow_cap[un]
+            rates[un] = flow_cap
             break
-        touch = un & (res == bottleneck).any(axis=1)
+        bmask = share == b_share
+        touch = np.zeros(nf, bool)
+        touch[flat_flow[live][bmask[idx]]] = True
         rates[touch] = b_share
         frozen |= touch
-        for i in np.where(touch)[0]:
-            for r in active[i].resources:
-                if r != bottleneck:
-                    res_cap[r] -= b_share
-        res_cap[bottleneck] = 0.0
+        flat_t = touch[flat_flow]
+        sub_idx = flat_res[flat_t]
+        keep = ~bmask[sub_idx]
+        np.add.at(res_cap, sub_idx[keep], -b_share)
+        res_cap[bmask] = 0.0
     return np.maximum(rates, 0.0)
 
 
@@ -378,12 +436,11 @@ class FlushSimulator:
     def _caps(self, pfs_eff: float) -> np.ndarray:
         c = self.cluster
         n = c.n_nodes
+        derate = np.maximum(1e-3, 1.0 - c.loads())
         caps = np.empty(3 * n + 1)
-        for i in range(n):
-            derate = max(1e-3, 1.0 - c.load_of(i))
-            caps[i] = c.node.nic_bw * (1.0 - c.node.app_net_load) * derate
-            caps[n + i] = c.node.nic_bw * derate
-            caps[2 * n + i] = c.node.local_read_bw * derate
+        caps[:n] = c.node.nic_bw * (1.0 - c.node.app_net_load) * derate
+        caps[n: 2 * n] = c.node.nic_bw * derate
+        caps[2 * n: 3 * n] = c.node.local_read_bw * derate
         caps[3 * n] = c.pfs.aggregate_bw * pfs_eff
         return caps
 
@@ -391,8 +448,9 @@ class FlushSimulator:
         plan = self.plan
         c = self.cluster
         pfs_eff, lock_time = pfs_lock_efficiency(plan, rpc_size=self.rpc_size)
-        md_gate = metadata_schedule(plan)
-        md_max = max(md_gate.values(), default=0.0)
+        pa = plan.ensure_arrays()
+        enc_opens, open_done = _open_schedule(plan, pa)
+        md_max = float(open_done[-1]) if len(open_done) else 0.0
 
         scan_time = 0.0
         if plan.scan_meta is not None:
@@ -404,24 +462,20 @@ class FlushSimulator:
         if plan.barrier_per_round:
             flush_time, per_backend = self._analytic_rounds(pfs_eff, md_max)
         else:
-            flush_time, per_backend = self._event_driven(pfs_eff, md_gate)
+            flush_time, per_backend = self._event_driven(
+                pfs_eff, enc_opens, open_done
+            )
         flush_time += scan_time
 
         total = plan.total_bytes
         if plan.synchronous:
             local_time = flush_time  # GIO: app blocked for the whole write
         else:
-            per_node_bytes: Dict[int, int] = defaultdict(int)
-            for r, s in enumerate(plan.rank_sizes):
-                per_node_bytes[c.node_of_rank(r)] += s
+            sizes = np.asarray(plan.rank_sizes, np.int64)
+            node_bytes = sizes.reshape(c.n_nodes, c.procs_per_node).sum(axis=1)
+            derate = np.maximum(1e-3, 1.0 - c.loads())
             local_time = (
-                max(
-                    (
-                        b / (c.node.local_bw * max(1e-3, 1.0 - c.load_of(nd)))
-                        for nd, b in per_node_bytes.items()
-                    ),
-                    default=0.0,
-                )
+                float((node_bytes / (c.node.local_bw * derate)).max(initial=0.0))
                 + scan_time
             )
 
@@ -461,40 +515,43 @@ class FlushSimulator:
 
     # -- asynchronous strategies: event loop --------------------------------
     def _event_driven(
-        self, pfs_eff: float, md_gate: Dict[Tuple[int, str], float]
+        self, pfs_eff: float, opens: np.ndarray, open_done: np.ndarray
     ) -> Tuple[float, Dict[int, float]]:
         plan = self.plan
         c = self.cluster
         n = c.n_nodes
-        R_TX, R_RX, R_SSD, R_PFS = 0, n, 2 * n, 3 * n
         stream_cap = c.pfs.client_stream_bw
-        writes = _coalesce_writes_for_sim(plan.writes)
-        flows: List[_Flow] = []
-        for fid, w in enumerate(writes):
-            home = c.node_of_rank(w.src_rank)
-            gate = md_gate.get((w.backend, w.file), 0.0)
-            if w.backend == home:
-                flows.append(
-                    _Flow(
-                        fid, w.size,
-                        (R_SSD + home, R_TX + home, R_PFS),
-                        slot_nodes=(home,),
-                        gate=gate, max_rate=stream_cap, backend=w.backend,
-                    )
-                )
-            else:
-                # pipelined cut-through gather+write (paper §3 streaming)
-                flows.append(
-                    _Flow(
-                        fid, w.size,
-                        (R_SSD + home, R_TX + home, R_RX + w.backend,
-                         R_TX + w.backend, R_PFS),
-                        slot_nodes=(home, w.backend),
-                        gate=gate, max_rate=stream_cap, backend=w.backend,
-                    )
-                )
+        pa = plan.ensure_arrays()
+        w = coalesce_write_columns(pa.writes)
+        nf = len(w)
+        if nf == 0:
+            return 0.0, {}
+        n_files = max(1, len(pa.file_names))
+        enc = w.backend * n_files + w.file_id
+        gates = open_done[np.searchsorted(opens, enc)]
+
+        home = c.nodes_of_ranks(w.src_rank)
+        direct = w.backend == home
+        remote = ~direct
+        # direct: [SSD(home), TX(home), PFS]
+        # remote: pipelined cut-through gather+write (paper §3 streaming)
+        #         [SSD(home), TX(home), RX(leader), TX(leader), PFS]
+        res = np.full((nf, 5), -1, np.int64)
+        res[:, 0] = 2 * n + home
+        res[:, 1] = home
+        res[direct, 2] = 3 * n
+        res[remote, 2] = n + w.backend[remote]
+        res[remote, 3] = w.backend[remote]
+        res[remote, 4] = 3 * n
+        slot_nodes = np.full((nf, 2), -1, np.int64)
+        slot_nodes[:, 0] = home
+        slot_nodes[remote, 1] = w.backend[remote]
+
         sim = _FluidSim(self._caps(pfs_eff), self.io_threads, n)
-        return sim.run(flows)
+        return sim.run(
+            res, slot_nodes, w.size.astype(np.float64), gates,
+            stream_cap, w.backend,
+        )
 
     # -- collective strategies: closed-form barrier rounds -------------------
     def _analytic_rounds(
@@ -502,60 +559,55 @@ class FlushSimulator:
     ) -> Tuple[float, Dict[int, float]]:
         plan = self.plan
         c = self.cluster
+        n = c.n_nodes
         stream_cap = c.pfs.client_stream_bw
         nic_tx_eff = c.node.nic_bw * (1.0 - c.node.app_net_load)
+        pa = plan.ensure_arrays()
+        w, s = pa.writes, pa.sends
 
-        rounds = sorted({w.round for w in plan.writes} | {s.round for s in plan.sends})
-        sends_by_round: Dict[int, List[SendItem]] = defaultdict(list)
-        for s in plan.sends:
-            sends_by_round[s.round].append(s)
-        writes_by_round: Dict[int, List[WriteItem]] = defaultdict(list)
-        for w in plan.writes:
-            writes_by_round[w.round].append(w)
+        rounds = np.union1d(np.unique(w.round), np.unique(s.round))
+        R = len(rounds)
+        if R == 0:
+            return md_max, {}
+        ri_w = np.searchsorted(rounds, w.round)
+        ri_s = np.searchsorted(rounds, s.round)
 
-        t = md_max  # all backends must open before the first collective
+        out_b = np.zeros((R, n), np.int64)
+        in_b = np.zeros((R, n), np.int64)
+        read_b = np.zeros((R, n), np.int64)
+        wr_b = np.zeros((R, n), np.int64)
+        np.add.at(out_b, (ri_s, s.src_backend), s.size)
+        np.add.at(in_b, (ri_s, s.dst_backend), s.size)
+        if not plan.synchronous:
+            np.add.at(read_b, (ri_s, s.src_backend), s.size)
+            home_w = c.nodes_of_ranks(w.src_rank)
+            local = home_w == w.backend
+            np.add.at(read_b, (ri_w[local], home_w[local]), w.size[local])
+        np.add.at(wr_b, (ri_w, w.backend), w.size)
+        round_bytes = wr_b.sum(axis=1)
+
+        derate = np.maximum(1e-3, 1.0 - c.loads())
+        t_gather = np.maximum(
+            out_b / (nic_tx_eff * derate),
+            np.maximum(in_b / (c.node.nic_bw * derate),
+                       read_b / (c.node.local_read_bw * derate)),
+        ).max(axis=1)
+        t_write = np.where(
+            round_bytes > 0, round_bytes / (c.pfs.aggregate_bw * pfs_eff), 0.0
+        )
+        per_node_write = wr_b / np.minimum(
+            nic_tx_eff * derate, stream_cap * self.io_threads
+        )
+        t_write = np.maximum(t_write, per_node_write.max(axis=1))
+
+        cum = md_max + np.cumsum(t_gather + t_write)
         per_backend: Dict[int, float] = {}
-        for rnd in rounds:
-            out_b: Dict[int, int] = defaultdict(int)
-            in_b: Dict[int, int] = defaultdict(int)
-            read_b: Dict[int, int] = defaultdict(int)
-            for s in sends_by_round.get(rnd, []):
-                out_b[s.src_backend] += s.size
-                in_b[s.dst_backend] += s.size
-                if not plan.synchronous:
-                    read_b[s.src_backend] += s.size
-            wr_b: Dict[int, int] = defaultdict(int)
-            round_bytes = 0
-            for w in writes_by_round.get(rnd, []):
-                wr_b[w.backend] += w.size
-                round_bytes += w.size
-                home = c.node_of_rank(w.src_rank)
-                if home == w.backend and not plan.synchronous:
-                    read_b[home] += w.size
-
-            def _derate(nd: int) -> float:
-                return max(1e-3, 1.0 - c.load_of(nd))
-
-            t_gather = 0.0
-            for nd in set(out_b) | set(in_b) | set(read_b):
-                d = _derate(nd)
-                t_gather = max(
-                    t_gather,
-                    out_b.get(nd, 0) / (nic_tx_eff * d),
-                    in_b.get(nd, 0) / (c.node.nic_bw * d),
-                    read_b.get(nd, 0) / (c.node.local_read_bw * d),
-                )
-            t_write = round_bytes / (c.pfs.aggregate_bw * pfs_eff) if round_bytes else 0.0
-            for nd, b in wr_b.items():
-                t_write = max(
-                    t_write,
-                    b / min(nic_tx_eff * _derate(nd),
-                            stream_cap * self.io_threads),
-                )
-            t += t_gather + t_write
-            for nd in wr_b:
-                per_backend[nd] = t
-        return t, per_backend
+        writes_in_round = wr_b > 0
+        any_write = writes_in_round.any(axis=0)
+        last_round = R - 1 - np.argmax(writes_in_round[::-1, :], axis=0)
+        for nd in np.flatnonzero(any_write).tolist():
+            per_backend[int(nd)] = float(cum[last_round[nd]])
+        return float(cum[-1]), per_backend
 
 
 def simulate_flush(

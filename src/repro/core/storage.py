@@ -33,6 +33,8 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.plan import FlushPlan, WriteItem
 from repro.core.serialize import Manifest
 
@@ -161,14 +163,18 @@ class RealExecutor:
             # Global worker pool == work stealing across backends: idle
             # backends' threads drain the shared queue (the straggler
             # mitigation used by our §3 implementation; see DESIGN.md).
-            n_backends = len({w.backend for w in plan.writes}) or 1
+            if plan.arrays is not None:
+                n_backends = len(np.unique(plan.arrays.writes.backend)) or 1
+            else:
+                n_backends = len({w.backend for w in plan.writes}) or 1
             workers = min(16, self.io_threads * n_backends)
 
             if plan.barrier_per_round:
-                rounds = sorted({w.round for w in plan.writes})
-                for rnd in rounds:
-                    batch = [w for w in plan.writes if w.round == rnd]
-                    self._run_batch(batch, do_write, workers)
+                by_round: Dict[int, List[WriteItem]] = {}
+                for w in plan.writes:
+                    by_round.setdefault(w.round, []).append(w)
+                for rnd in sorted(by_round):
+                    self._run_batch(by_round[rnd], do_write, workers)
             else:
                 self._run_batch(list(plan.writes), do_write, workers)
 
@@ -229,7 +235,21 @@ class RealExecutor:
 
 
 def placement_from_plan(plan: FlushPlan) -> Dict[int, List[Tuple[str, int, int, int]]]:
-    out: Dict[int, List[Tuple[str, int, int, int]]] = {}
+    """rank -> [(file, file_offset, src_offset, size)], ordered by src_offset."""
+    if plan.arrays is not None:
+        pa = plan.arrays
+        w = pa.writes
+        order = np.lexsort((w.src_offset, w.src_rank))
+        out: Dict[int, List[Tuple[str, int, int, int]]] = {}
+        names = pa.file_names
+        for r, f, fo, so, sz in zip(
+            w.src_rank[order].tolist(), w.file_id[order].tolist(),
+            w.file_offset[order].tolist(), w.src_offset[order].tolist(),
+            w.size[order].tolist(),
+        ):
+            out.setdefault(r, []).append((names[f], fo, so, sz))
+        return out
+    out = {}
     for w in plan.writes:
         out.setdefault(w.src_rank, []).append(
             (w.file, w.file_offset, w.src_offset, w.size)

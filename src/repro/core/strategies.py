@@ -20,17 +20,34 @@ Implemented strategies (paper section in brackets):
   application; used for the Fig. 1/2 comparison).
 
 Every strategy returns a validated :class:`~repro.core.plan.FlushPlan`.
+
+All builders are *columnar*: they emit :class:`~repro.core.plan.PlanArrays`
+int64 columns via vectorized interval splitting (``np.searchsorted`` over
+merged stripe/region/chunk boundary arrays) instead of per-chunk Python
+loops, so plan construction at 100k+ ranks is an array program.  The
+original item-loop builders are preserved verbatim in
+:mod:`repro.core.strategies_ref` and the equivalence test suite
+(tests/test_plan_arrays.py) asserts byte-identical write/send sets.
 """
 from __future__ import annotations
 
-import math
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.cluster import ClusterSpec
-from repro.core.plan import FlushPlan, SendItem, WriteItem, validate_plan
+from repro.core.plan import (
+    FlushPlan,
+    PlanArrays,
+    SendColumns,
+    WriteColumns,
+    coalesce_send_columns,
+    coalesce_write_columns,
+    validate_plan,
+)
 from repro.core.prefix_sum import (
     elect_leaders,
-    exclusive_prefix_sum,
+    exclusive_prefix_sum_np,
     piggybacked_scan,
 )
 
@@ -41,6 +58,30 @@ def _rank_file(rank: int) -> str:
     return f"rank_{rank:06d}.dat"
 
 
+def _split_at_multiples(
+    starts: np.ndarray, sizes: np.ndarray, step: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Split intervals [starts, starts+sizes) at absolute multiples of step.
+
+    Returns (interval_index, piece_start, piece_size); pieces are emitted
+    in interval order, ascending within each interval — the same order a
+    per-interval ``while`` loop would produce.
+    """
+    starts = starts.astype(np.int64)
+    sizes = sizes.astype(np.int64)
+    ends = starts + sizes
+    n_pieces = (ends - 1) // step - starts // step + 1
+    n_pieces = np.where(sizes > 0, n_pieces, 0)
+    total = int(n_pieces.sum())
+    idx = np.repeat(np.arange(len(starts), dtype=np.int64), n_pieces)
+    first = np.cumsum(n_pieces) - n_pieces
+    within = np.arange(total, dtype=np.int64) - np.repeat(first, n_pieces)
+    bases = starts[idx] // step
+    p_start = np.where(within == 0, starts[idx], (bases + within) * step)
+    p_end = np.minimum(ends[idx], (bases + within + 1) * step)
+    return idx, p_start, p_end - p_start
+
+
 # ---------------------------------------------------------------------------
 # Baseline: one file per process (VELOC default)
 # ---------------------------------------------------------------------------
@@ -49,29 +90,26 @@ def _rank_file(rank: int) -> str:
 def plan_file_per_process(
     cluster: ClusterSpec, rank_sizes: Sequence[int], **_: object
 ) -> FlushPlan:
-    writes: List[WriteItem] = []
-    files: Dict[str, int] = {}
-    for rank, size in enumerate(rank_sizes):
-        if size == 0:
-            continue
-        fname = _rank_file(rank)
-        files[fname] = int(size)
-        writes.append(
-            WriteItem(
-                backend=cluster.node_of_rank(rank),
-                file=fname,
-                file_offset=0,
-                size=int(size),
-                src_rank=rank,
-                src_offset=0,
-            )
-        )
+    sizes = np.asarray(rank_sizes, dtype=np.int64)
+    nz = np.flatnonzero(sizes > 0)
+    file_names = [_rank_file(int(r)) for r in nz]
+    zeros = np.zeros(len(nz), np.int64)
+    writes = WriteColumns(
+        backend=cluster.nodes_of_ranks(nz),
+        file_id=np.arange(len(nz), dtype=np.int64),
+        file_offset=zeros,
+        size=sizes[nz],
+        src_rank=nz,
+        src_offset=zeros,
+        round=zeros,
+    )
+    files = {nm: int(sz) for nm, sz in zip(file_names, sizes[nz].tolist())}
     plan = FlushPlan(
         strategy="file_per_process",
         cluster=cluster,
         rank_sizes=[int(s) for s in rank_sizes],
         files=files,
-        writes=writes,
+        arrays=PlanArrays(file_names, writes, SendColumns.empty()),
         scan_meta=None,  # embarrassingly parallel: no coordination at all
         stripe_disjoint=True,  # distinct files => distinct OST objects
     )
@@ -99,35 +137,37 @@ def plan_posix(
     correctness.  No attempt is made to align to stripes: that is
     precisely the false-sharing bug this strategy exhibits.
     """
-    offsets, total = exclusive_prefix_sum(rank_sizes)
+    offsets, total = exclusive_prefix_sum_np(rank_sizes)
     scan = piggybacked_scan(cluster, rank_sizes, payload_extra_bytes=0)
-    writes: List[WriteItem] = []
-    for rank, size in enumerate(rank_sizes):
-        size = int(size)
-        if size == 0:
-            continue
-        backend = cluster.node_of_rank(rank)
-        step = size if not write_chunk else max(1, int(write_chunk))
-        pos = 0
-        while pos < size:
-            n = min(step, size - pos)
-            writes.append(
-                WriteItem(
-                    backend=backend,
-                    file=AGGREGATE_FILE,
-                    file_offset=offsets[rank] + pos,
-                    size=n,
-                    src_rank=rank,
-                    src_offset=pos,
-                )
-            )
-            pos += n
+    sizes = np.asarray(rank_sizes, dtype=np.int64)
+    nz = np.flatnonzero(sizes > 0)
+    if write_chunk:
+        step = max(1, int(write_chunk))
+        # Chunk boundaries are relative to each blob start: split [0, size)
+        # at multiples of step.
+        idx, pos, psize = _split_at_multiples(
+            np.zeros(len(nz), np.int64), sizes[nz], step
+        )
+        ranks = nz[idx]
+    else:
+        ranks = nz
+        pos = np.zeros(len(nz), np.int64)
+        psize = sizes[nz]
+    writes = WriteColumns(
+        backend=cluster.nodes_of_ranks(ranks),
+        file_id=np.zeros(len(ranks), np.int64),
+        file_offset=offsets[ranks] + pos,
+        size=psize,
+        src_rank=ranks,
+        src_offset=pos,
+        round=np.zeros(len(ranks), np.int64),
+    )
     plan = FlushPlan(
         strategy="posix",
         cluster=cluster,
         rank_sizes=[int(s) for s in rank_sizes],
         files={AGGREGATE_FILE: total},
-        writes=writes,
+        arrays=PlanArrays([AGGREGATE_FILE], writes, SendColumns.empty()),
         scan_meta=scan.meta,
         stripe_disjoint=False,  # the whole point of §2.1's finding
     )
@@ -169,7 +209,7 @@ def plan_mpiio(
     values to keep plan sizes tractable; correctness is unaffected (the
     plan validator enforces coverage either way).
     """
-    offsets, total = exclusive_prefix_sum(rank_sizes)
+    offsets, total = exclusive_prefix_sum_np(rank_sizes)
     scan = piggybacked_scan(cluster, rank_sizes, payload_extra_bytes=0)
     pfs = cluster.pfs
     stripe = pfs.stripe_size * max(1, int(chunk_stripes))
@@ -178,64 +218,57 @@ def plan_mpiio(
         cluster.n_nodes,
         max(1, pfs.n_stripes(total)),
     )
-    # Interleaved static stripe ownership: stripe s -> leader (s % m).
-    leader_nodes = list(range(m))  # ADIO-style: first M backends aggregate
+    sizes = np.asarray(rank_sizes, dtype=np.int64)
+    nodes = np.arange(cluster.n_nodes, dtype=np.int64)
 
-    writes: List[WriteItem] = []
-    sends: List[SendItem] = []
+    w_parts: List[WriteColumns] = []
+    s_parts: List[SendColumns] = []
     for local_idx in range(cluster.procs_per_node):  # one collective / round
         rnd = local_idx + 1
-        for node in range(cluster.n_nodes):
-            rank = node * cluster.procs_per_node + local_idx
-            size = int(rank_sizes[rank])
-            if size == 0:
-                continue
-            base = offsets[rank]
-            pos = 0
-            while pos < size:
-                off = base + pos
-                s_idx = off // stripe
-                stripe_end = (s_idx + 1) * stripe
-                n = min(size - pos, stripe_end - off)
-                leader = leader_nodes[s_idx % m]
-                if leader != node:
-                    sends.append(
-                        SendItem(
-                            src_backend=node,
-                            dst_backend=leader,
-                            src_rank=rank,
-                            src_offset=pos,
-                            size=n,
-                            round=rnd,
-                        )
-                    )
-                writes.append(
-                    WriteItem(
-                        backend=leader,
-                        file=AGGREGATE_FILE,
-                        file_offset=off,
-                        size=n,
-                        src_rank=rank,
-                        src_offset=pos,
-                        round=rnd,
-                    )
-                )
-                pos += n
-    writes = _coalesce_writes(writes)
-    sends = _coalesce_sends(sends)
+        ranks = nodes * cluster.procs_per_node + local_idx
+        idx, p_start, p_size = _split_at_multiples(offsets[ranks], sizes[ranks], stripe)
+        # Interleaved static stripe ownership: stripe s -> leader (s % m).
+        leader = (p_start // stripe) % m
+        src_rank = ranks[idx]
+        src_off = p_start - offsets[src_rank]
+        rnd_col = np.full(len(idx), rnd, np.int64)
+        w_parts.append(
+            WriteColumns(
+                backend=leader,
+                file_id=np.zeros(len(idx), np.int64),
+                file_offset=p_start,
+                size=p_size,
+                src_rank=src_rank,
+                src_offset=src_off,
+                round=rnd_col,
+            )
+        )
+        remote = leader != nodes[idx]
+        s_parts.append(
+            SendColumns(
+                src_backend=nodes[idx][remote],
+                dst_backend=leader[remote],
+                src_rank=src_rank[remote],
+                src_offset=src_off[remote],
+                size=p_size[remote],
+                round=rnd_col[remote],
+            )
+        )
+    writes = coalesce_write_columns(WriteColumns.concat(w_parts))
+    sends = coalesce_send_columns(SendColumns.concat(s_parts))
     plan = FlushPlan(
         strategy="mpiio",
         cluster=cluster,
         rank_sizes=[int(s) for s in rank_sizes],
         files={AGGREGATE_FILE: total},
-        writes=writes,
-        sends=sends,
+        arrays=PlanArrays([AGGREGATE_FILE], writes, sends),
         scan_meta=scan.meta,
         n_rounds=cluster.procs_per_node,
         barrier_per_round=True,  # collective semantics: all ready, together
         leaders=None,  # interleaved stripe ownership, not contiguous regions
         stripe_disjoint=True,
-        meta={"interleaved_stripes": True, "m": m, "leader_nodes": leader_nodes},
+        meta={"interleaved_stripes": True, "m": m,
+              "leader_nodes": list(range(m))},
     )
     validate_plan(plan)
     return plan
@@ -265,6 +298,11 @@ def plan_stripe_aligned(
     ``pipeline_chunk`` (default: 8 stripes) controls the granularity at
     which sends/writes are decomposed so leaders can overlap receive and
     write, and so the work-stealing executor has units to steal.
+
+    Construction is one global subdivision: the rank offsets (prefix sum),
+    leader-region starts and absolute pipeline-chunk multiples are merged
+    into a single sorted cut array; each resulting segment maps to its
+    source rank and owning leader with two ``np.searchsorted`` calls.
     """
     scan = piggybacked_scan(cluster, rank_sizes)
     pfs = cluster.pfs
@@ -279,52 +317,51 @@ def plan_stripe_aligned(
     )
     chunk = int(pipeline_chunk) if pipeline_chunk else 8 * stripe
 
-    writes: List[WriteItem] = []
-    sends: List[SendItem] = []
-    for rank, size in enumerate(rank_sizes):
-        size = int(size)
-        if size == 0:
-            continue
-        home = cluster.node_of_rank(rank)
-        base = scan.rank_offsets[rank]
-        pos = 0
-        while pos < size:
-            off = base + pos
-            leader = assign.leader_of_offset(off)
-            # Slice ends at the first of: blob end, leader-region end,
-            # pipeline-chunk boundary (aligned to absolute file offsets so
-            # chunk edges coincide with stripe edges).
-            region_end = next(e for (s, e) in assign.regions if s <= off < e)
-            chunk_end = (off // chunk + 1) * chunk
-            n = min(size - pos, region_end - off, chunk_end - off)
-            if leader != home:
-                sends.append(
-                    SendItem(
-                        src_backend=home,
-                        dst_backend=leader,
-                        src_rank=rank,
-                        src_offset=pos,
-                        size=n,
-                    )
-                )
-            writes.append(
-                WriteItem(
-                    backend=leader,
-                    file=AGGREGATE_FILE,
-                    file_offset=off,
-                    size=n,
-                    src_rank=rank,
-                    src_offset=pos,
-                )
-            )
-            pos += n
+    offsets = scan.offsets_array()
+    sizes = np.asarray(rank_sizes, dtype=np.int64)
+    region_starts = np.asarray([s for s, _ in assign.regions], np.int64)
+    region_leaders = np.asarray(assign.leaders, np.int64)
+
+    # Every write is a maximal segment between consecutive cuts: rank blob
+    # boundaries, leader-region starts, and absolute chunk multiples.
+    cuts = np.unique(np.concatenate([
+        offsets[sizes > 0],
+        region_starts,
+        np.arange(chunk, total, chunk, dtype=np.int64),
+    ]))
+    cuts = cuts[(cuts >= 0) & (cuts < total)]
+    seg_a = cuts
+    seg_b = np.append(cuts[1:], total) if len(cuts) else cuts
+    src_rank = np.searchsorted(offsets, seg_a, side="right") - 1
+    leader = region_leaders[np.searchsorted(region_starts, seg_a, side="right") - 1]
+    home = cluster.nodes_of_ranks(src_rank)
+    src_off = seg_a - offsets[src_rank]
+    seg_size = seg_b - seg_a
+
+    writes = WriteColumns(
+        backend=leader,
+        file_id=np.zeros(len(seg_a), np.int64),
+        file_offset=seg_a,
+        size=seg_size,
+        src_rank=src_rank,
+        src_offset=src_off,
+        round=np.zeros(len(seg_a), np.int64),
+    )
+    remote = leader != home
+    sends = SendColumns(
+        src_backend=home[remote],
+        dst_backend=leader[remote],
+        src_rank=src_rank[remote],
+        src_offset=src_off[remote],
+        size=seg_size[remote],
+        round=np.zeros(int(remote.sum()), np.int64),
+    )
     plan = FlushPlan(
         strategy="stripe_aligned",
         cluster=cluster,
         rank_sizes=[int(s) for s in rank_sizes],
         files={AGGREGATE_FILE: total},
-        writes=writes,
-        sends=sends,
+        arrays=PlanArrays([AGGREGATE_FILE], writes, sends),
         scan_meta=scan.meta,
         leaders=assign,
         stripe_disjoint=True,
@@ -358,36 +395,17 @@ def plan_gio_sync(
     inner = plan_mpiio(
         cluster, rank_sizes, n_leaders=n_leaders, chunk_stripes=chunk_stripes
     )
-    writes = [
-        WriteItem(
-            backend=w.backend,
-            file=w.file,
-            file_offset=w.file_offset,
-            size=w.size,
-            src_rank=w.src_rank,
-            src_offset=w.src_offset,
-            round=1,
-        )
-        for w in inner.writes
-    ]
-    sends = [
-        SendItem(
-            src_backend=s.src_backend,
-            dst_backend=s.dst_backend,
-            src_rank=s.src_rank,
-            src_offset=s.src_offset,
-            size=s.size,
-            round=1,
-        )
-        for s in inner.sends
-    ]
+    ia = inner.arrays
     plan = FlushPlan(
         strategy="gio_sync",
         cluster=cluster,
         rank_sizes=list(inner.rank_sizes),
         files=dict(inner.files),
-        writes=writes,
-        sends=sends,
+        arrays=PlanArrays(
+            list(ia.file_names),
+            ia.writes.with_round(1),
+            ia.sends.with_round(1),
+        ),
         scan_meta=inner.scan_meta,
         n_rounds=1,
         barrier_per_round=True,
@@ -401,69 +419,8 @@ def plan_gio_sync(
 
 
 # ---------------------------------------------------------------------------
-# Helpers + registry
+# Registry
 # ---------------------------------------------------------------------------
-
-
-def _coalesce_writes(items: List[WriteItem]) -> List[WriteItem]:
-    """Merge adjacent stripe-chunk writes with identical (backend, file,
-    rank, round) and contiguous offsets into maximal runs."""
-    items = sorted(
-        items, key=lambda w: (w.round, w.backend, w.file, w.src_rank, w.file_offset)
-    )
-    out: List[WriteItem] = []
-    for w in items:
-        if out:
-            p = out[-1]
-            if (
-                p.round == w.round
-                and p.backend == w.backend
-                and p.file == w.file
-                and p.src_rank == w.src_rank
-                and p.file_offset + p.size == w.file_offset
-                and p.src_offset + p.size == w.src_offset
-            ):
-                out[-1] = WriteItem(
-                    backend=p.backend,
-                    file=p.file,
-                    file_offset=p.file_offset,
-                    size=p.size + w.size,
-                    src_rank=p.src_rank,
-                    src_offset=p.src_offset,
-                    round=p.round,
-                )
-                continue
-        out.append(w)
-    return out
-
-
-def _coalesce_sends(items: List[SendItem]) -> List[SendItem]:
-    items = sorted(
-        items,
-        key=lambda s: (s.round, s.src_backend, s.dst_backend, s.src_rank, s.src_offset),
-    )
-    out: List[SendItem] = []
-    for s in items:
-        if out:
-            p = out[-1]
-            if (
-                p.round == s.round
-                and p.src_backend == s.src_backend
-                and p.dst_backend == s.dst_backend
-                and p.src_rank == s.src_rank
-                and p.src_offset + p.size == s.src_offset
-            ):
-                out[-1] = SendItem(
-                    src_backend=p.src_backend,
-                    dst_backend=p.dst_backend,
-                    src_rank=p.src_rank,
-                    src_offset=p.src_offset,
-                    size=p.size + s.size,
-                    round=p.round,
-                )
-                continue
-        out.append(s)
-    return out
 
 
 StrategyFn = Callable[..., FlushPlan]

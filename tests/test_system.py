@@ -6,6 +6,7 @@ elastic restart on a different geometry -> training continues bit-exact.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import CheckpointConfig, CheckpointManager, theta_like
@@ -17,6 +18,7 @@ from repro.train import OptConfig, TrainConfig, init_train_state, make_train_ste
 
 
 def test_full_lifecycle(tmp_path):
+    pytest.importorskip("zstandard")
     cfg = get_smoke_config("qwen1.5-0.5b")
     model = get_model(cfg)
     mesh = make_host_mesh()
