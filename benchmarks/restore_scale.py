@@ -1,0 +1,260 @@
+"""Restore-scale sweep: read-plan build / validate wall times + a real
+elastic-restore micro-benchmark.
+
+The read-side twin of ``benchmarks/planner_scale.py``: the paper's
+complaint about one-file-per-process checkpoints is that they are
+"difficult to transfer and access as a whole" — so the restore path has
+to *read* aggregated layouts as aggregated files.  This benchmark times
+the read planner's three layers at paper-adjacent scales:
+
+* ``invert_s``   — ``FileLayout.from_flush_plan``: flush-plan writes ->
+  stored-space extent table;
+* ``build_s``    — ``build_read_plan``: a consumer geometry's byte-range
+  requests (one per producer blob, readers assigned elastically over M
+  consumer nodes) cut at extent boundaries;
+* ``validate_s`` — ``validate_read_plan`` with full layout-consistency
+  checking.
+
+Each scale also times a *partial* plan (scattered ~1 MiB leaf-style
+requests — the serving workload), and the suite ends with a real
+end-to-end elastic restore (N-node save -> M-node restore through
+``CheckpointManager``) at toy scale so the ranged-pread executor is
+exercised, not just priced.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/restore_scale.py                 # full sweep
+    PYTHONPATH=src python benchmarks/restore_scale.py --quick         # CI smoke
+    PYTHONPATH=src python benchmarks/restore_scale.py --only 1024x32  # one scale
+    PYTHONPATH=src python benchmarks/restore_scale.py --out BENCH_restore.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import make_plan, theta_like
+from repro.core.plan import (
+    FileLayout,
+    assign_readers,
+    build_read_plan,
+    stored_space_offsets,
+    validate_read_plan,
+)
+
+GiB = 1 << 30
+MiB = 1 << 20
+
+# (nodes, ppn, strategy, strategy kwargs, consumer node counts)
+FULL_CONFIGS: List[Tuple[int, int, str, Dict[str, object], List[int]]] = [
+    (256, 16, "stripe_aligned", {"pipeline_chunk": 256 << 20}, [256, 64]),
+    (256, 16, "mpiio", {"chunk_stripes": 64}, [256, 64]),
+    (1024, 32, "stripe_aligned", {"pipeline_chunk": 1 << 30}, [1024, 256]),
+    (1024, 32, "mpiio", {"chunk_stripes": 256}, [1024, 256]),
+    (1024, 32, "file_per_process", {}, [256]),
+]
+QUICK_CONFIGS: List[Tuple[int, int, str, Dict[str, object], List[int]]] = [
+    (16, 8, "stripe_aligned", {"pipeline_chunk": 64 << 20}, [16, 4]),
+    (16, 8, "mpiio", {"chunk_stripes": 16}, [4]),
+    (16, 8, "posix", {}, [4]),
+]
+
+
+def bench_one(
+    nodes: int, ppn: int, strategy: str, kw: Dict[str, object],
+    consumers: List[int],
+) -> List[Dict[str, object]]:
+    cluster = theta_like(nodes, ppn)
+    rng = np.random.default_rng(0)
+    # heterogeneous checkpoint sizes (0.5-1.5 GiB), matching planner_scale
+    sizes = rng.integers(GiB // 2, 3 * GiB // 2, cluster.world_size).tolist()
+    plan = make_plan(strategy, cluster, sizes, **kw)
+
+    t0 = time.perf_counter()
+    layout = FileLayout.from_flush_plan(plan)
+    invert_s = time.perf_counter() - t0
+    offsets = stored_space_offsets(sizes)
+
+    rows: List[Dict[str, object]] = []
+    for m in consumers:
+        # full elastic restore: one request per producer blob, readers
+        # balanced over the *consumer* geometry (m nodes)
+        t1 = time.perf_counter()
+        readers = assign_readers(sizes, m)
+        rp = build_read_plan(
+            layout, offsets[:-1], sizes, readers, validate=False
+        )
+        t2 = time.perf_counter()
+        validate_read_plan(rp, layout)
+        t3 = time.perf_counter()
+        rows.append({
+            "config": f"{nodes}x{ppn}/{strategy}->M{m}",
+            "kind": "full_restore",
+            "nodes": nodes,
+            "ppn": ppn,
+            "n_ranks": cluster.world_size,
+            "strategy": strategy,
+            "consumer_nodes": m,
+            "invert_s": round(invert_s, 4),
+            "build_s": round(t2 - t1, 4),
+            "validate_s": round(t3 - t2, 4),
+            "total_s": round(invert_s + (t3 - t1), 4),
+            "n_extents": len(layout),
+            "n_reads": rp.n_reads,
+            "read_bytes": rp.total_bytes,
+        })
+
+    # partial restore: scattered ~1 MiB leaf-style requests (serving
+    # fleets pulling params out of a multi-GB train-state checkpoint)
+    n_req = min(4096, cluster.world_size)
+    starts = np.sort(
+        rng.integers(0, layout.total - MiB, n_req).astype(np.int64)
+    )
+    req_sizes = np.full(n_req, MiB, np.int64)
+    t1 = time.perf_counter()
+    rp = build_read_plan(
+        layout, starts, req_sizes,
+        np.arange(n_req, dtype=np.int64) % max(1, consumers[-1]),
+        validate=False,
+    )
+    t2 = time.perf_counter()
+    validate_read_plan(rp, layout)
+    t3 = time.perf_counter()
+    rows.append({
+        "config": f"{nodes}x{ppn}/{strategy}->partial{n_req}",
+        "kind": "partial_restore",
+        "nodes": nodes,
+        "ppn": ppn,
+        "n_ranks": cluster.world_size,
+        "strategy": strategy,
+        "consumer_nodes": consumers[-1],
+        "invert_s": round(invert_s, 4),
+        "build_s": round(t2 - t1, 4),
+        "validate_s": round(t3 - t2, 4),
+        "total_s": round(invert_s + (t3 - t1), 4),
+        "n_extents": len(layout),
+        "n_reads": rp.n_reads,
+        "read_bytes": rp.total_bytes,
+    })
+    return rows
+
+
+def bench_real(tmp_root: str) -> Dict[str, object]:
+    """Real end-to-end elastic restore at toy scale (executor included)."""
+    import jax.numpy as jnp
+
+    from repro.core import CheckpointConfig, CheckpointManager
+
+    state = {
+        "params": {"w": jnp.arange(1 << 20, dtype=jnp.float32)},
+        "opt": {"mu": jnp.ones((1 << 18,), jnp.float32)},
+    }
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            root=tmp_root, cluster=theta_like(8, 2),
+            strategy="stripe_aligned", async_flush=False,
+        )
+    )
+    mgr.save(1, state)
+    mgr.close()
+    target = {
+        "params": {"w": np.zeros(1 << 20, np.float32)},
+        "opt": {"mu": np.zeros(1 << 18, np.float32)},
+    }
+    mgr2 = CheckpointManager(
+        CheckpointConfig(root=tmp_root, cluster=theta_like(3, 1),
+                         strategy="posix")
+    )
+    for n in range(8):
+        mgr2.local.drop_node(n)
+    t0 = time.perf_counter()
+    step, restored = mgr2.restore(target)
+    restore_s = time.perf_counter() - t0
+    assert step == 1
+    np.testing.assert_array_equal(
+        restored["params"]["w"], np.arange(1 << 20, dtype=np.float32)
+    )
+    rr = mgr2.last_read_result
+    t1 = time.perf_counter()
+    _, params = mgr2.restore_subtree(target["params"], "['params']")
+    partial_s = time.perf_counter() - t1
+    np.testing.assert_array_equal(
+        params["w"], np.arange(1 << 20, dtype=np.float32)
+    )
+    pr = mgr2.last_read_result
+    mgr2.close()
+    return {
+        "kind": "real_elastic_restore",
+        "save_geometry": "8x2",
+        "restore_geometry": "3x1",
+        "restore_s": round(restore_s, 4),
+        "restore_reads": rr.n_reads,
+        "restore_bytes": rr.bytes_read,
+        "partial_restore_s": round(partial_s, 4),
+        "partial_reads": pr.n_reads,
+        "partial_bytes": pr.bytes_read,
+    }
+
+
+def run(
+    configs: List[Tuple[int, int, str, Dict[str, object], List[int]]],
+    *, only: Optional[str] = None, verbose: bool = True, real: bool = True,
+) -> List[Dict[str, object]]:
+    rows: List[Dict[str, object]] = []
+    for nodes, ppn, strategy, kw, consumers in configs:
+        if only and only not in (f"{nodes}x{ppn}", f"{nodes}x{ppn}/{strategy}"):
+            continue
+        for row in bench_one(nodes, ppn, strategy, kw, consumers):
+            rows.append(row)
+            if verbose:
+                print(
+                    f"{row['config']:>40}  invert={row['invert_s']:7.3f}s  "
+                    f"build={row['build_s']:7.3f}s  "
+                    f"validate={row['validate_s']:7.3f}s  "
+                    f"reads={row['n_reads']}",
+                    flush=True,
+                )
+    if real and not only:
+        import tempfile
+
+        with tempfile.TemporaryDirectory() as root:
+            row = bench_real(root)
+        rows.append(row)
+        if verbose:
+            print(
+                f"{'real 8x2 -> 3x1':>40}  restore={row['restore_s']:7.3f}s  "
+                f"partial={row['partial_restore_s']:7.3f}s",
+                flush=True,
+            )
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true", help="CI smoke configs")
+    p.add_argument("--only", help="restrict to one scale, e.g. 1024x32")
+    p.add_argument("--no-real", action="store_true",
+                   help="skip the real end-to-end restore micro-benchmark")
+    p.add_argument("--out", help="write JSON rows to this path")
+    args = p.parse_args(argv)
+
+    configs = QUICK_CONFIGS if args.quick else FULL_CONFIGS
+    rows = run(configs, only=args.only, real=not args.no_real)
+    doc = {"benchmark": "restore_scale", "quick": bool(args.quick), "rows": rows}
+    text = json.dumps(doc, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}")
+    else:
+        json.dump(doc, sys.stdout, indent=2)
+        print()
+
+
+if __name__ == "__main__":
+    main()

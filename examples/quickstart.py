@@ -4,7 +4,9 @@
 
 1. Builds a FlushPlan with the paper's §3 stripe-aligned strategy.
 2. Prices the same plan at Theta scale on the simulator (Fig. 2 setup).
-3. Saves/restores a real pytree through the multi-level engine.
+3. Saves/restores a real pytree through the multi-level engine —
+   including an elastic restore on a *different* cluster geometry and a
+   partial (params-only) restore through the columnar read planner.
 """
 import tempfile
 
@@ -39,21 +41,47 @@ for strat in ("file_per_process", "posix", "mpiio", "stripe_aligned"):
     print(f"{strat:18s} local {rep.local_bw/1e9:7.1f} GB/s   "
           f"flush {rep.flush_bw/1e9:6.1f} GB/s   files {rep.n_files}")
 
-# --- 3. the real engine: save + restore a pytree -------------------------
-state = {"w": jnp.arange(1 << 18, dtype=jnp.float32), "step": jnp.array(3)}
+# --- 3. the real engine: save + elastic/partial restore ------------------
+try:
+    import zstandard  # noqa: F401  (optional dep; CI installs it)
+
+    codec = "zstd"
+except ImportError:
+    codec = "none"
+
+state = {"params": {"w": jnp.arange(1 << 18, dtype=jnp.float32)},
+         "step": jnp.array(3)}
 with tempfile.TemporaryDirectory() as root:
     mgr = CheckpointManager(
         CheckpointConfig(root=root, cluster=cluster, strategy="stripe_aligned",
-                         codec="zstd")
+                         codec=codec)
     )
     st = mgr.save(1, state)
     mgr.wait()
+    mgr.close()
     print(f"saved {st.raw_bytes/1e6:.1f} MB -> {st.stored_bytes/1e6:.1f} MB "
-          f"(local {st.local_time*1e3:.1f} ms)")
-    step, restored = mgr.restore(
-        {"w": np.zeros(1 << 18, np.float32), "step": np.array(0)}
+          f"(local {st.local_time*1e3:.1f} ms, codec={codec})")
+
+    # elastic restart: the machine shrank to 3x1, L1 is gone — the PFS
+    # checkpoint restores through one aggregated ReadPlan.
+    mgr2 = CheckpointManager(
+        CheckpointConfig(root=root, cluster=theta_like(3, 1))
+    )
+    for n in range(cluster.n_nodes):
+        mgr2.local.drop_node(n)
+    step, restored = mgr2.restore(
+        {"params": {"w": np.zeros(1 << 18, np.float32)}, "step": np.array(0)}
     )
     assert step == 1 and int(restored["step"]) == 3
-    np.testing.assert_array_equal(restored["w"], np.asarray(state["w"]))
-    mgr.close()
-    print("restore OK")
+    np.testing.assert_array_equal(restored["params"]["w"], np.asarray(state["params"]["w"]))
+    rr = mgr2.last_read_result
+    print(f"elastic restore OK on 3x1 "
+          f"({rr.n_reads} ranged reads, {rr.bytes_read/1e6:.1f} MB)")
+
+    # partial restore: just the params subtree (the serving workload)
+    _, params = mgr2.restore_subtree(
+        {"w": np.zeros(1 << 18, np.float32)}, "['params']"
+    )
+    np.testing.assert_array_equal(params["w"], np.asarray(state["params"]["w"]))
+    mgr2.close()
+    print("partial (params-only) restore OK")

@@ -13,15 +13,22 @@ Public API:
 from repro.core.cluster import ClusterSpec, NodeSpec, PFSSpec, theta_like
 from repro.core.engine import CheckpointConfig, CheckpointManager, SaveStats
 from repro.core.plan import (
+    FileLayout,
     FlushPlan,
     PlanArrays,
+    ReadColumns,
+    ReadPlan,
     SendColumns,
     SendItem,
     WriteColumns,
     WriteItem,
+    assign_readers,
+    build_read_plan,
     count_false_sharing,
+    stored_space_offsets,
     validate_plan,
     validate_plan_reference,
+    validate_read_plan,
 )
 from repro.core.prefix_sum import (
     LeaderAssignment,
@@ -41,14 +48,21 @@ __all__ = [
     "CheckpointConfig",
     "CheckpointManager",
     "SaveStats",
+    "FileLayout",
     "FlushPlan",
     "PlanArrays",
+    "ReadColumns",
+    "ReadPlan",
     "SendColumns",
     "SendItem",
     "WriteColumns",
     "WriteItem",
+    "assign_readers",
+    "build_read_plan",
+    "stored_space_offsets",
     "validate_plan",
     "validate_plan_reference",
+    "validate_read_plan",
     "count_false_sharing",
     "LeaderAssignment",
     "ScanResult",

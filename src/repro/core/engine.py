@@ -20,6 +20,14 @@ mid-flush therefore cost at most one checkpoint interval.
 Elasticity: L2 checkpoints are mesh-agnostic (logical byte stream +
 manifest); a checkpoint saved under one cluster geometry restores under
 any other, and onto any jax mesh via ``sharding_fn``.
+
+The PFS level is read through aggregated :class:`~repro.core.plan.
+ReadPlan`\\ s (manifest placement inverted into a ``FileLayout``, reads
+balanced over the *restoring* cluster's nodes), and partial restore —
+:meth:`CheckpointManager.restore_leaves` /
+:meth:`CheckpointManager.restore_subtree` — pulls single leaves or
+subtrees (e.g. just the params, for serving) out of an aggregated
+checkpoint without reading the rest.
 """
 from __future__ import annotations
 
@@ -33,9 +41,10 @@ from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.cluster import ClusterSpec
-from repro.core.plan import FlushPlan
+from repro.core.plan import FlushPlan, assign_readers, build_read_plan
 from repro.core.serialize import (
     EncodedState,
     Manifest,
@@ -47,6 +56,7 @@ from repro.core.serialize import (
 from repro.core.storage import (
     FlushResult,
     LocalStore,
+    ReadResult,
     RealExecutor,
     placement_from_plan,
 )
@@ -115,6 +125,8 @@ class CheckpointManager:
         self._worker: Optional[threading.Thread] = None
         self._flush_errors: List[Tuple[int, str]] = []
         self._lock = threading.Lock()
+        # Stats of the most recent aggregated PFS read (restore telemetry).
+        self.last_read_result: Optional[ReadResult] = None
         if config.async_flush:
             self._worker = threading.Thread(
                 target=self._flush_loop, name="active-backend", daemon=True
@@ -339,11 +351,39 @@ class CheckpointManager:
             return dequantize_tree(tree, target)
         return tree
 
+    def _read_blobs_pfs(
+        self, man: Manifest, step: int, ranks: Optional[List[int]] = None,
+        *, record: bool = True,
+    ) -> Dict[int, bytes]:
+        """Fetch stored rank blobs through ONE aggregated :class:`ReadPlan`.
+
+        The read-side twin of the flush: the manifest's placement is
+        inverted into a :class:`FileLayout`, each requested producer blob
+        becomes a byte-range request, and the *current* cluster geometry
+        (``self.cluster`` — not the one that saved the checkpoint)
+        supplies the reader assignment, so an N-rank save restores onto M
+        consumer nodes with balanced ranged preads instead of N
+        sequential whole-blob fetches.
+        """
+        layout = man.file_layout()
+        offsets = man.stored_offsets()
+        sizes = np.asarray([r.stored_size for r in man.ranks], np.int64)
+        readers = assign_readers(sizes, self.cluster.n_nodes)
+        sel = (
+            np.arange(man.world_size, dtype=np.int64)
+            if ranks is None
+            else np.asarray(sorted(ranks), np.int64)
+        )
+        rp = build_read_plan(layout, offsets[sel], sizes[sel], readers[sel])
+        bufs, res = self.executor.execute_read_plan(rp, step)
+        if record:  # the scrub passes False so restore telemetry survives
+            self.last_read_result = res
+        return {int(r): bytes(b) for r, b in zip(sel.tolist(), bufs)}
+
     def _restore_from_pfs(self, step: int, target: Any) -> Any:
         man = self._manifest_pfs(step)
-        blobs = [
-            self.executor.read_rank_blob(man, step, r) for r in range(man.world_size)
-        ]
+        by_rank = self._read_blobs_pfs(man, step)
+        blobs = [by_rank[r] for r in range(man.world_size)]
         base_stream = (
             self._load_stream(man.base_step) if man.base_step is not None else None
         )
@@ -365,21 +405,37 @@ class CheckpointManager:
         )
         return self._maybe_dequant(man, tree, target)
 
+    def _local_location(
+        self, man: Manifest, step: int, rank: int
+    ) -> Tuple[int, bool]:
+        """(node, is_partner) of the surviving L1 copy of ``rank``'s blob.
+
+        The single definition of the partner-replication invariant: the
+        home node first, else the replica on node+1.  Both full and
+        partial local restore resolve through here.
+        """
+        node = rank // man.procs_per_node
+        if self.local.has_blob(node, step, rank):
+            return node, False
+        partner = (node + 1) % max(1, man.world_size // man.procs_per_node)
+        if self.local.has_blob(partner, step, rank, partner=True):
+            return partner, True
+        raise IOError(f"rank {rank}: no local or partner copy for step {step}")
+
+    def _local_blob(self, man: Manifest, step: int, rank: int) -> bytes:
+        node, partner = self._local_location(man, step, rank)
+        return self.local.read_blob(node, step, rank, partner=partner)
+
     def _local_blobs(self, man: Manifest, step: int) -> List[bytes]:
-        ppn = man.procs_per_node
-        blobs: List[bytes] = []
-        for r in range(man.world_size):
-            node = r // ppn
-            if self.local.has_blob(node, step, r):
-                blobs.append(self.local.read_blob(node, step, r))
-                continue
-            # node lost: try the partner replica on node+1
-            partner = (node + 1) % max(1, man.world_size // ppn)
-            if self.local.has_blob(partner, step, r, partner=True):
-                blobs.append(self.local.read_blob(partner, step, r, partner=True))
-                continue
-            raise IOError(f"rank {r}: no local or partner copy for step {step}")
-        return blobs
+        return [self._local_blob(man, step, r) for r in range(man.world_size)]
+
+    def _local_slice(
+        self, man: Manifest, step: int, rank: int, offset: int, size: int
+    ) -> bytes:
+        node, partner = self._local_location(man, step, rank)
+        return self.local.read_slice(
+            node, step, rank, offset, size, partner=partner
+        )
 
     def _load_stream(self, step: int) -> bytes:
         """Raw logical stream of ``step`` (resolving delta chains)."""
@@ -389,9 +445,8 @@ class CheckpointManager:
             if self._last_full is not None and self._last_full.step == step:
                 return self._last_full.stream
         for getter, blobber in (
-            (self._manifest_pfs, lambda m, s: [
-                self.executor.read_rank_blob(m, s, r) for r in range(m.world_size)
-            ]),
+            (self._manifest_pfs,
+             lambda m, s: list(self._read_blobs_pfs(m, s).values())),
             (self._manifest_local, self._local_blobs),
         ):
             try:
@@ -418,6 +473,154 @@ class CheckpointManager:
             return b"".join(parts)
         raise IOError(f"cannot load base stream for step {step}")
 
+    # -------------------------------------------------------- partial restore
+
+    def restore_leaves(
+        self, names: List[str], step: Optional[int] = None
+    ) -> Tuple[int, Dict[str, np.ndarray]]:
+        """Restore only the named leaves (manifest leaf names) as numpy
+        arrays, without touching the rest of the checkpoint.
+
+        With ``codec="none"`` this reads *exactly* the leaves' byte
+        ranges from the aggregated files (a partial :class:`ReadPlan`) —
+        the serving-fleet workload: pull just the params out of a
+        multi-GB train-state checkpoint.  With a compression codec, only
+        whole stored blobs decode, so the covering producer blobs are
+        read (still one aggregated plan) and sliced after decoding.
+
+        Integrity: whole-blob paths verify the per-blob CRC; sub-blob
+        ranged reads cannot (CRCs are per stored blob) — run
+        :meth:`validate` scrubs for cold-checkpoint assurance.
+
+        Falls back PFS -> L1 like :meth:`restore`.  Checkpoints saved
+        with a ``precodec`` are rejected (the stored leaves are the
+        transformed tree; restore them with :meth:`restore`).
+        """
+        candidates = (
+            [step]
+            if step is not None
+            else sorted(set(self.steps("pfs")) | set(self.steps("local")), reverse=True)
+        )
+        errors: List[str] = []
+        for s in candidates:
+            for getter, pfs in (
+                (self._manifest_pfs, True),
+                (self._manifest_local, False),
+            ):
+                try:
+                    man = getter(s)
+                    return s, self._leaves_from(man, s, names, pfs=pfs)
+                except Exception as e:
+                    errors.append(
+                        f"step {s} via {'pfs' if pfs else 'local'}: {e!r}"
+                    )
+        raise FileNotFoundError(
+            "no checkpoint with the requested leaves; attempts: "
+            + "; ".join(errors[:8])
+        )
+
+    def restore_subtree(
+        self,
+        target: Any,
+        prefix: str,
+        step: Optional[int] = None,
+        *,
+        sharding_fn: Optional[Callable[[str, Any], Any]] = None,
+    ) -> Tuple[int, Any]:
+        """Restore the subtree saved under ``prefix`` into ``target``.
+
+        ``prefix`` is the leaf-name prefix in the saved tree: a snapshot
+        saved as ``{"params": P, "opt": O}`` yields leaf names like
+        ``"['params']['w']"``, so ``restore_subtree(params_template,
+        "['params']")`` rebuilds P alone — the elastic-serving entry
+        point (:meth:`repro.serve.engine.Server.from_checkpoint`).
+        """
+        from repro.utils.treelib import flatten_with_names
+
+        named, treedef = flatten_with_names(target)
+        names = [prefix + n for n, _ in named]
+        step_out, vals = self.restore_leaves(names, step=step)
+        tree = jax.tree_util.tree_unflatten(treedef, [vals[n] for n in names])
+        return step_out, self._place(tree, sharding_fn)
+
+    def _leaves_from(
+        self, man: Manifest, step: int, names: List[str], *, pfs: bool
+    ) -> Dict[str, np.ndarray]:
+        if man.precodec != "none":
+            raise IOError(
+                f"partial restore unsupported with precodec {man.precodec!r}"
+            )
+        entries = {l.name: l for l in man.leaves}
+        ranges = man.leaf_ranges(names)
+        raw: Dict[str, bytes] = {}
+        if man.codec == "none":
+            # stored == raw byte for byte: read exactly the leaf ranges.
+            if pfs:
+                offs = [a for _, a, _ in ranges]
+                szs = [s for _, _, s in ranges]
+                readers = assign_readers(szs, self.cluster.n_nodes)
+                rp = build_read_plan(man.file_layout(), offs, szs, readers)
+                bufs, res = self.executor.execute_read_plan(rp, step)
+                self.last_read_result = res
+                for (n, _, _), b in zip(ranges, bufs):
+                    raw[n] = bytes(b)
+            else:
+                for n, a, size in ranges:
+                    parts = []
+                    for rk in man.ranks_covering(a, a + size):
+                        e = man.ranks[rk]
+                        lo = max(a, e.offset)
+                        hi = min(a + size, e.offset + e.raw_size)
+                        parts.append(
+                            self._local_slice(man, step, rk, lo - e.offset, hi - lo)
+                        )
+                    raw[n] = b"".join(parts)
+        else:
+            # compression: whole covering blobs, one aggregated plan.
+            need = sorted(
+                {rk for _, a, s in ranges for rk in man.ranks_covering(a, a + s)}
+            )
+            if pfs:
+                blobs = self._read_blobs_pfs(man, step, ranks=need)
+            else:
+                blobs = {rk: self._local_blob(man, step, rk) for rk in need}
+            base = (
+                self._load_stream(man.base_step)
+                if man.base_step is not None
+                else None
+            )
+            seg: Dict[int, bytes] = {}
+            for rk in need:
+                e = man.ranks[rk]
+                if self.cfg.verify_on_restore and crc32(blobs[rk]) != e.crc:
+                    raise IOError(f"rank {rk}: checksum mismatch")
+                seg_base = (
+                    base[e.offset : e.offset + e.raw_size]
+                    if base is not None
+                    else None
+                )
+                seg[rk] = decode_blob(
+                    blobs[rk], man.codec, e.raw_size, seg_base,
+                    has_base=man.base_step is not None,
+                )
+            for n, a, size in ranges:
+                parts = []
+                for rk in man.ranks_covering(a, a + size):
+                    e = man.ranks[rk]
+                    lo = max(a, e.offset)
+                    hi = min(a + size, e.offset + e.raw_size)
+                    parts.append(seg[rk][lo - e.offset : hi - e.offset])
+                raw[n] = b"".join(parts)
+        out: Dict[str, np.ndarray] = {}
+        for n, _, size in ranges:
+            e = entries[n]
+            if len(raw[n]) != size:
+                raise IOError(f"leaf {n}: read {len(raw[n])} of {size} bytes")
+            out[n] = (
+                np.frombuffer(raw[n], np.dtype(e.dtype)).reshape(e.shape).copy()
+            )
+        return out
+
     # ----------------------------------------------------------------- scrub
 
     def validate(self, step: int) -> Dict[str, Any]:
@@ -431,12 +634,22 @@ class CheckpointManager:
         report: Dict[str, Any] = {"pfs": {}, "local": {}}
         try:
             man = self._manifest_pfs(step)
+            try:
+                layout = man.file_layout()
+            except Exception:
+                layout = None
+            # Aggregated read plans in byte-bounded batches: one plan per
+            # ~256 MiB of blobs keeps the ranged-pread win without
+            # materializing a paper-scale checkpoint in memory at once.
+            batch_limit = 256 << 20
+            batch: List[int] = []
+            batch_bytes = 0
             for r in range(man.world_size):
-                try:
-                    blob = self.executor.read_rank_blob(man, step, r)
-                    report["pfs"][r] = crc32(blob) == man.ranks[r].crc
-                except Exception:
-                    report["pfs"][r] = False
+                batch.append(r)
+                batch_bytes += man.ranks[r].stored_size
+                if batch_bytes >= batch_limit or r == man.world_size - 1:
+                    self._scrub_batch(man, step, batch, layout, report["pfs"])
+                    batch, batch_bytes = [], 0
         except Exception:
             pass
         try:
@@ -451,6 +664,31 @@ class CheckpointManager:
         except Exception:
             pass
         return report
+
+    def _scrub_batch(
+        self,
+        man: Manifest,
+        step: int,
+        batch: List[int],
+        layout,
+        out: Dict[int, bool],
+    ) -> None:
+        """CRC-check one batch of ranks; a damaged file fails the batch's
+        aggregated read, so degrade to per-rank reads (sharing the
+        already-inverted layout) and keep intact ranks reporting healthy."""
+        try:
+            if layout is None:
+                raise IOError("placement does not invert")
+            blobs = self._read_blobs_pfs(man, step, ranks=batch, record=False)
+            for r in batch:
+                out[r] = crc32(blobs[r]) == man.ranks[r].crc
+        except Exception:
+            for r in batch:
+                try:
+                    blob = self.executor.read_rank_blob(man, step, r, layout)
+                    out[r] = crc32(blob) == man.ranks[r].crc
+                except Exception:
+                    out[r] = False
 
     # ------------------------------------------------------------------- gc
 

@@ -1,4 +1,8 @@
-"""FlushPlan: the executable description of one asynchronous flush.
+"""Flush *and* read plans: the executable descriptions of one
+asynchronous flush (write side) and one restore/reshard (read side).
+
+Write side
+==========
 
 An aggregation *strategy* is a pure function
 ``(ClusterSpec, rank_sizes) -> FlushPlan``.  The plan lists every byte
@@ -19,17 +23,74 @@ the item-level view — ``plan.writes``/``plan.sends`` materialize them
 lazily for the real executor and small-scale consumers, and
 ``PlanArrays.from_items`` converts back, losslessly.
 
+Column semantics (all parallel int64 arrays; one row per movement):
+
+:class:`WriteColumns`
+    * ``backend``     — node id of the active backend issuing the write
+    * ``file_id``     — index into ``PlanArrays.file_names``
+    * ``file_offset`` — destination byte offset inside that file (>= 0)
+    * ``size``        — bytes moved (> 0)
+    * ``src_rank``    — whose stored checkpoint blob the bytes come from
+    * ``src_offset``  — offset inside that rank's stored blob (>= 0)
+    * ``round``       — barrier round (MPI-IO multi-phase); 0 = free-running
+
+:class:`SendColumns`
+    * ``src_backend`` — the source rank's home node (must hold the blob)
+    * ``dst_backend`` — the leader/aggregator node receiving the bytes
+    * ``src_rank`` / ``src_offset`` / ``size`` / ``round`` — as above
+
+Invariants, enforced by :func:`validate_plan` (columnar) and its
+executable spec :func:`validate_plan_reference` (item-loop):
+
+1. *source coverage* — per rank, write ``src`` slices tile
+   ``[0, stored_size)`` exactly (no gap, no overlap, no double write);
+2. *destination disjointness* — per file, ``[file_offset, +size)``
+   intervals never overlap and stay within the declared file size;
+3. *send coverage* — every write issued by a backend other than the
+   source rank's home node is fed by sends covering exactly those bytes,
+   and every send originates at the source rank's home node;
+4. *stripe disjointness* (when ``plan.stripe_disjoint``) — no PFS stripe
+   has two distinct writers.
+
+Read side
+=========
+
+The restore path inverts the write side.  :class:`FileLayout` is the
+extent table of where every *stored-space* byte landed (stored space =
+the concatenation of all rank blobs in rank order); it is derived either
+from a ``FlushPlan`` (:meth:`FileLayout.from_flush_plan`) or from a
+saved manifest's placement (``Manifest.file_layout()``).  A *consumer* —
+a restore onto an arbitrary new geometry, or a partial (per-leaf)
+restore for serving — states byte-range *requests* against stored space,
+and :func:`build_read_plan` maps them onto file extents as an array
+program (``np.searchsorted`` over the layout's ``start`` column — no
+per-item Python loops), so planning a 100k-rank restore is milliseconds.
+
+:class:`ReadColumns` (parallel int64; one row per ranged ``pread``):
+    * ``reader``      — consumer-side node issuing the read (work unit
+      owner for the thread pool; the read twin of ``backend``)
+    * ``file_id``     — index into ``ReadPlan.file_names``
+    * ``file_offset`` — source byte offset inside that file (>= 0)
+    * ``size``        — bytes read (> 0)
+    * ``dst_req``     — index of the request this piece satisfies
+    * ``dst_offset``  — destination offset inside that request's buffer
+
+Invariants, enforced by :func:`validate_read_plan`:
+
+1. *request coverage* — per request, ``dst`` slices tile
+   ``[0, req_size)`` exactly (restore never invents or drops a byte);
+2. *in-bounds reads* — every ``[file_offset, +size)`` stays inside the
+   declared file size;
+3. *layout consistency* (when the layout is supplied) — each read's file
+   extent is exactly where the layout says the request's stored bytes
+   live.
+
 Executors (real files / discrete-event simulator) consume plans without
 knowing which strategy produced them — this is the co-design seam the
 paper argues for: strategy decides *who writes what where*, the executor
-and its contention model price/perform it.
-
-Plans are also the verification surface: :func:`validate_plan` checks
-conservation (every checkpoint byte written exactly once), send/write
-consistency, and — for stripe-disjoint strategies — single-writer-per-
-stripe, all as sorted-array/difference assertions.  The original
-item-loop validator survives as :func:`validate_plan_reference`: it is
-the executable spec that the columnar checks are tested against.
+and its contention model price/perform it.  The read side keeps the same
+seam: layout inversion decides *who reads what from where*, and
+``RealExecutor.execute_read_plan`` performs it.
 """
 from __future__ import annotations
 
@@ -716,6 +777,440 @@ def validate_plan_reference(plan: FlushPlan) -> None:
                         f"stripe ({w.file},{st}) written by backends "
                         f"{prev} and {w.backend} despite stripe_disjoint"
                     )
+
+
+# ---------------------------------------------------------------------------
+# Read side: FileLayout (the inverse of a flush) + columnar ReadPlan
+# ---------------------------------------------------------------------------
+
+
+def stored_space_offsets(stored_sizes: Sequence[int]) -> np.ndarray:
+    """Exclusive prefix sum of per-rank stored sizes: rank -> global
+    stored-space offset of that rank's blob (len = n_ranks + 1; the last
+    entry is the total stored bytes)."""
+    sizes = _i64(stored_sizes)
+    out = np.zeros(len(sizes) + 1, np.int64)
+    np.cumsum(sizes, out=out[1:])
+    return out
+
+
+@dataclass
+class FileLayout:
+    """Extent table: where every stored-space byte lives on the PFS.
+
+    The inverse view of a flush — each row maps a contiguous stored-space
+    interval onto a contiguous file extent.  Columns (parallel int64,
+    sorted by ``start`` after construction):
+
+    * ``start``       — global stored-space offset of the extent
+    * ``size``        — extent length (> 0)
+    * ``file_id``     — index into ``file_names``
+    * ``file_offset`` — byte offset inside that file
+
+    Invariant: the extents tile ``[0, total)`` exactly — sorted by
+    ``start``, each extent begins where the previous ends.  This is the
+    read-side restatement of the flush validator's *source coverage*
+    rule, and ``__post_init__`` enforces it, so any FlushPlan that
+    passed :func:`validate_plan` inverts to a valid layout.
+    """
+
+    file_names: List[str]
+    files: Dict[str, int]
+    start: np.ndarray
+    size: np.ndarray
+    file_id: np.ndarray
+    file_offset: np.ndarray
+    total: int
+
+    def __post_init__(self):
+        self.start = _i64(self.start)
+        self.size = _i64(self.size)
+        self.file_id = _i64(self.file_id)
+        self.file_offset = _i64(self.file_offset)
+        self.total = int(self.total)
+        n = len(self.start)
+        if len({n, len(self.size), len(self.file_id), len(self.file_offset)}) != 1:
+            raise PlanError("FileLayout columns must have identical length")
+        if n == 0:
+            if self.total != 0:
+                raise PlanError("empty layout must cover 0 bytes")
+            return
+        order = np.argsort(self.start, kind="stable")
+        for c in ("start", "size", "file_id", "file_offset"):
+            setattr(self, c, getattr(self, c)[order])
+        if int(self.size.min()) <= 0:
+            raise PlanError("layout extent sizes must be positive")
+        if int(self.start[0]) != 0:
+            raise PlanError("layout does not start at stored offset 0")
+        ends = self.start + self.size
+        if (self.start[1:] != ends[:-1]).any():
+            i = int(np.flatnonzero(self.start[1:] != ends[:-1])[0])
+            raise PlanError(
+                f"layout gap/overlap at stored offset {int(ends[i])} "
+                f"(next extent {int(self.start[i + 1])})"
+            )
+        if int(ends[-1]) != self.total:
+            raise PlanError(
+                f"layout covers {int(ends[-1])} of {self.total} stored bytes"
+            )
+
+    def __len__(self) -> int:
+        return len(self.start)
+
+    @staticmethod
+    def from_flush_plan(plan: FlushPlan) -> "FileLayout":
+        """Invert a flush: writes become extents keyed by stored offset.
+
+        Works for every strategy — the write columns already carry
+        ``(src_rank, src_offset)``; adding the rank's stored-space base
+        offset turns them into global stored coordinates.
+        """
+        pa = plan.ensure_arrays()
+        w = pa.writes
+        offsets = stored_space_offsets(plan.rank_sizes)
+        return FileLayout(
+            file_names=list(pa.file_names),
+            files=dict(plan.files),
+            start=offsets[w.src_rank] + w.src_offset,
+            size=w.size.copy(),
+            file_id=w.file_id.copy(),
+            file_offset=w.file_offset.copy(),
+            total=int(offsets[-1]),
+        )
+
+    @staticmethod
+    def from_placement(
+        placement: Dict[int, List[Tuple[str, int, int, int]]],
+        stored_sizes: Sequence[int],
+        files: Dict[str, int],
+    ) -> "FileLayout":
+        """Build from a manifest's rank -> [(file, file_offset,
+        src_offset, size)] placement table (the persisted form of a
+        flush's write set)."""
+        offsets = stored_space_offsets(stored_sizes)
+        names: List[str] = []
+        fid: Dict[str, int] = {}
+        start: List[int] = []
+        size: List[int] = []
+        file_id: List[int] = []
+        file_offset: List[int] = []
+        for rank, entries in placement.items():
+            base = int(offsets[rank])
+            for fname, foff, soff, n in entries:
+                j = fid.get(fname)
+                if j is None:
+                    j = fid[fname] = len(names)
+                    names.append(fname)
+                start.append(base + soff)
+                size.append(n)
+                file_id.append(j)
+                file_offset.append(foff)
+        return FileLayout(
+            file_names=names,
+            files=dict(files),
+            start=start,
+            size=size,
+            file_id=file_id,
+            file_offset=file_offset,
+            total=int(offsets[-1]),
+        )
+
+
+_R_COLS = ("reader", "file_id", "file_offset", "size", "dst_req", "dst_offset")
+
+
+@dataclass
+class ReadColumns:
+    """Parallel int64 columns, one row per ranged read (see module doc)."""
+
+    reader: np.ndarray
+    file_id: np.ndarray
+    file_offset: np.ndarray
+    size: np.ndarray
+    dst_req: np.ndarray
+    dst_offset: np.ndarray
+
+    def __post_init__(self):
+        for name in _R_COLS:
+            setattr(self, name, _i64(getattr(self, name)))
+        if len({getattr(self, c).shape for c in _R_COLS}) != 1:
+            raise ValueError("ReadColumns columns must have identical length")
+
+    def __len__(self) -> int:
+        return len(self.reader)
+
+    @staticmethod
+    def empty() -> "ReadColumns":
+        z = np.empty(0, np.int64)
+        return ReadColumns(z, z, z, z, z, z)
+
+    def take(self, idx: np.ndarray) -> "ReadColumns":
+        return ReadColumns(*(getattr(self, c)[idx] for c in _R_COLS))
+
+
+def coalesce_read_columns(r: ReadColumns) -> ReadColumns:
+    """Merge runs contiguous in both file and destination coordinates.
+
+    The read twin of :func:`coalesce_write_columns`: one ``np.lexsort``
+    plus a boundary-difference pass.  Two sorted rows merge when they
+    serve the same (reader, request, file) and both the file offset and
+    the destination offset chain."""
+    if len(r) <= 1:
+        return r
+    order = np.lexsort((r.dst_offset, r.file_id, r.dst_req, r.reader))
+    b = r.take(order)
+    same = (
+        (b.reader[1:] == b.reader[:-1])
+        & (b.dst_req[1:] == b.dst_req[:-1])
+        & (b.file_id[1:] == b.file_id[:-1])
+        & (b.dst_offset[1:] == b.dst_offset[:-1] + b.size[:-1])
+        & (b.file_offset[1:] == b.file_offset[:-1] + b.size[:-1])
+    )
+    starts = np.flatnonzero(np.concatenate(([True], ~same)))
+    return ReadColumns(
+        reader=b.reader[starts],
+        file_id=b.file_id[starts],
+        file_offset=b.file_offset[starts],
+        size=np.add.reduceat(b.size, starts),
+        dst_req=b.dst_req[starts],
+        dst_offset=b.dst_offset[starts],
+    )
+
+
+@dataclass
+class ReadPlan:
+    """One restore/reshard, columnar: ranged reads + the request table.
+
+    ``req_start``/``req_size``/``req_reader`` describe the consumer's
+    byte-range requests against stored space (one destination buffer per
+    request); ``reads`` lists the ranged ``pread``s that fill them.
+    """
+
+    file_names: List[str]
+    files: Dict[str, int]
+    reads: ReadColumns
+    req_start: np.ndarray
+    req_size: np.ndarray
+    req_reader: np.ndarray
+    meta: Dict[str, object]
+
+    def __post_init__(self):
+        self.req_start = _i64(self.req_start)
+        self.req_size = _i64(self.req_size)
+        self.req_reader = _i64(self.req_reader)
+
+    @property
+    def n_reads(self) -> int:
+        return len(self.reads)
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.req_start)
+
+    @property
+    def total_bytes(self) -> int:
+        return int(self.req_size.sum())
+
+    def reads_per_reader(self) -> Dict[int, int]:
+        u, c = np.unique(self.reads.reader, return_counts=True)
+        return dict(zip(u.tolist(), c.tolist()))
+
+
+def assign_readers(stored_sizes: Sequence[int], n_readers: int) -> np.ndarray:
+    """Balanced contiguous assignment of producer ranks to consumer nodes.
+
+    Rank r goes to the reader whose byte share contains the midpoint of
+    r's blob, so each of the ``n_readers`` consumers pulls ~equal bytes
+    even when blob sizes are skewed.  Pure array program."""
+    sizes = _i64(stored_sizes)
+    n_readers = max(1, int(n_readers))
+    offsets = stored_space_offsets(sizes)
+    total = int(offsets[-1])
+    if total == 0:
+        return np.zeros(len(sizes), np.int64)
+    mid = offsets[:-1] + sizes // 2
+    return np.minimum(mid * n_readers // total, n_readers - 1)
+
+
+def _cut_at_extents(
+    layout: FileLayout, a: np.ndarray, b: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Subdivide stored-space intervals ``[a_i, b_i)`` at layout extent
+    boundaries (two ``np.searchsorted`` calls + the repeat/arange trick).
+
+    Returns ``(idx, eidx, p_start, p_end)`` per piece: source-interval
+    index, extent index, piece bounds.  Zero-length intervals produce no
+    pieces.  Callers guarantee intervals lie within ``[0, layout.total]``
+    — this is the single subdivision used by both the builder and the
+    validator, so they can never disagree about where extents cut.
+    """
+    nz = b > a
+    first = np.searchsorted(layout.start, a, side="right") - 1
+    last = np.searchsorted(layout.start, b - 1, side="right") - 1
+    n_pieces = np.where(nz, last - first + 1, 0)
+    total = int(n_pieces.sum())
+    idx = np.repeat(np.arange(len(a), dtype=np.int64), n_pieces)
+    base = np.cumsum(n_pieces) - n_pieces
+    within = np.arange(total, dtype=np.int64) - np.repeat(base, n_pieces)
+    eidx = first[idx] + within
+    p_start = np.maximum(a[idx], layout.start[eidx])
+    p_end = np.minimum(b[idx], layout.start[eidx] + layout.size[eidx])
+    return idx, eidx, p_start, p_end
+
+
+def build_read_plan(
+    layout: FileLayout,
+    req_start: Sequence[int],
+    req_size: Sequence[int],
+    req_reader: Optional[Sequence[int]] = None,
+    *,
+    coalesce: bool = True,
+    validate: bool = True,
+) -> ReadPlan:
+    """Map consumer byte-range requests onto aggregated-file extents.
+
+    The read-side twin of the columnar strategy builders: requests are
+    cut at layout-extent boundaries with two ``np.searchsorted`` calls
+    plus the repeat/arange subdivision trick — no per-request Python
+    loop — so planning a paper-scale restore (10^5 requests against 10^5
+    extents) is an array program.
+
+    Requests may target any subset of stored space, in any order, with
+    any consumer geometry (this is what makes N-rank save -> M-rank
+    restore and partial per-leaf restore the same operation); zero-size
+    requests are legal and produce no reads.
+    """
+    qa = _i64(req_start)
+    qs = _i64(req_size)
+    n_req = len(qa)
+    if len(qs) != n_req:
+        raise PlanError("req_start and req_size must have identical length")
+    readers = (
+        np.zeros(n_req, np.int64) if req_reader is None else _i64(req_reader)
+    )
+    if len(readers) != n_req:
+        raise PlanError("req_reader must have one entry per request")
+    if n_req:
+        if int(qs.min()) < 0:
+            raise PlanError("request sizes must be non-negative")
+        if int(qa.min()) < 0 or int((qa + qs).max()) > layout.total:
+            raise PlanError("request outside stored space")
+    qb = qa + qs
+    if not len(layout) or not (qs > 0).any():
+        reads = ReadColumns.empty()
+    else:
+        ridx, eidx, p_start, p_end = _cut_at_extents(layout, qa, qb)
+        reads = ReadColumns(
+            reader=readers[ridx],
+            file_id=layout.file_id[eidx],
+            file_offset=layout.file_offset[eidx] + (p_start - layout.start[eidx]),
+            size=p_end - p_start,
+            dst_req=ridx,
+            dst_offset=p_start - qa[ridx],
+        )
+        if coalesce:
+            reads = coalesce_read_columns(reads)
+    rp = ReadPlan(
+        file_names=list(layout.file_names),
+        files=dict(layout.files),
+        reads=reads,
+        req_start=qa,
+        req_size=qs,
+        req_reader=readers,
+        meta={"n_extents": len(layout), "stored_total": layout.total},
+    )
+    if validate:
+        validate_read_plan(rp, layout)
+    return rp
+
+
+def validate_read_plan(rp: ReadPlan, layout: Optional[FileLayout] = None) -> None:
+    """Structural invariants of a read plan (columnar throughout).
+
+    Checks the three rules from the module doc: per-request destination
+    coverage (tile ``[0, req_size)`` exactly), in-bounds file reads, and
+    — when ``layout`` is given — that every read's file extent is where
+    the layout places the request's stored bytes."""
+    r = rp.reads
+    nr = len(r)
+    n_req = rp.n_requests
+    n_files = len(rp.file_names)
+
+    if nr:
+        if int(r.size.min()) <= 0:
+            raise PlanError("read size must be positive")
+        if int(r.file_offset.min()) < 0 or int(r.dst_offset.min()) < 0:
+            raise PlanError("read offsets must be non-negative")
+        if int(r.dst_req.min()) < 0 or int(r.dst_req.max()) >= n_req:
+            raise PlanError("read references request outside the request table")
+        if int(r.file_id.min()) < 0 or int(r.file_id.max()) >= n_files:
+            raise PlanError("read references file id outside the file table")
+
+    # 1. Destination coverage: per request, dst slices tile [0, req_size).
+    covered = np.zeros(n_req, np.int64)
+    if nr:
+        np.add.at(covered, r.dst_req, r.size)
+        order = np.lexsort((r.dst_offset, r.dst_req))
+        q = r.dst_req[order]
+        a = r.dst_offset[order]
+        b = a + r.size[order]
+        firstrow = np.empty(nr, bool)
+        firstrow[0] = True
+        firstrow[1:] = q[1:] != q[:-1]
+        if (a[firstrow] != 0).any():
+            bad = int(q[firstrow][np.flatnonzero(a[firstrow] != 0)[0]])
+            raise PlanError(f"request {bad}: dst gap/overlap at 0")
+        chain = ~firstrow[1:]
+        bad_chain = chain & (a[1:] != b[:-1])
+        if bad_chain.any():
+            i = int(np.flatnonzero(bad_chain)[0])
+            raise PlanError(
+                f"request {int(q[i + 1])}: dst gap/overlap at {int(b[i])} "
+                f"(next piece {int(a[i + 1])})"
+            )
+    short = covered != rp.req_size
+    if short.any():
+        bad = int(np.flatnonzero(short)[0])
+        raise PlanError(
+            f"request {bad}: reads cover {int(covered[bad])} of "
+            f"{int(rp.req_size[bad])} bytes"
+        )
+
+    # 2. In-bounds file reads.
+    if nr:
+        fsizes = _i64([rp.files.get(nm, 0) for nm in rp.file_names])
+        over = r.file_offset + r.size > fsizes[r.file_id]
+        if over.any():
+            i = int(np.flatnonzero(over)[0])
+            raise PlanError(
+                f"file {rp.file_names[int(r.file_id[i])]}: read past declared size"
+            )
+
+    # 3. Layout consistency: the stored position each read claims to fill
+    #    must resolve (through the layout) to exactly the file extent the
+    #    read targets.  Coalesced reads may legally span several extents
+    #    that happen to be contiguous in the same file, so each read is
+    #    first subdivided at extent boundaries (the builder's own
+    #    :func:`_cut_at_extents`), then every piece is checked.
+    if layout is not None and nr and len(layout):
+        pos = rp.req_start[r.dst_req] + r.dst_offset
+        end = pos + r.size
+        if int(pos.min()) < 0 or int(end.max()) > layout.total:
+            i = int(np.flatnonzero((pos < 0) | (end > layout.total))[0])
+            raise PlanError(
+                f"read {i} outside stored space at offset {int(pos[i])}"
+            )
+        ridx, eidx, p_start, _ = _cut_at_extents(layout, pos, end)
+        ok = (layout.file_id[eidx] == r.file_id[ridx]) & (
+            layout.file_offset[eidx] + (p_start - layout.start[eidx])
+            == r.file_offset[ridx] + (p_start - pos[ridx])
+        )
+        if not ok.all():
+            i = int(ridx[np.flatnonzero(~ok)[0]])
+            raise PlanError(
+                f"read {i} disagrees with the layout about stored offset "
+                f"{int(pos[i])}"
+            )
 
 
 def count_false_sharing(plan: FlushPlan) -> Dict[str, int]:

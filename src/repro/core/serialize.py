@@ -77,6 +77,71 @@ class Manifest:
     placement: Dict[int, List[Tuple[str, int, int, int]]] = field(default_factory=dict)
     status: str = "pending"           # pending | local_done | flush_done
 
+    # -- read-side views ---------------------------------------------------
+    #
+    # "Stored space" is the concatenation of every rank's *stored*
+    # (encoded) blob in rank order; "raw space" is the logical stream the
+    # pytree serialized to.  With codec "none" the two coincide byte for
+    # byte; with compression they differ and only whole stored blobs can
+    # be decoded.  The read planner always works in stored space.
+
+    def stored_offsets(self) -> "np.ndarray":
+        """rank -> stored-space offset of its blob (len world_size + 1)."""
+        from repro.core.plan import stored_space_offsets
+
+        return stored_space_offsets([r.stored_size for r in self.ranks])
+
+    @property
+    def total_stored_bytes(self) -> int:
+        return sum(r.stored_size for r in self.ranks)
+
+    def file_layout(self) -> "FileLayout":
+        """Invert the persisted placement into a :class:`FileLayout`
+        extent table (requires ``status == "flush_done"``)."""
+        from repro.core.plan import FileLayout
+
+        return FileLayout.from_placement(
+            self.placement, [r.stored_size for r in self.ranks], self.files
+        )
+
+    def leaf_ranges(
+        self, names: Sequence[str]
+    ) -> List[Tuple[str, int, int]]:
+        """(name, raw_offset, size) for the named leaves, in saved order.
+
+        Raises ``KeyError`` on unknown names — partial restore must not
+        silently return fewer leaves than asked for."""
+        by_name = {l.name: l for l in self.leaves}
+        missing = [n for n in names if n not in by_name]
+        if missing:
+            raise KeyError(f"leaves not in checkpoint: {missing[:5]}")
+        return [(n, by_name[n].offset, by_name[n].size) for n in names]
+
+    def _raw_bounds(self) -> Tuple["np.ndarray", "np.ndarray"]:
+        """Cached (starts, ends) of each rank's raw segment — both
+        non-decreasing because ranks slice the stream contiguously."""
+        cached = self.__dict__.get("_raw_bounds_cache")
+        if cached is None:
+            starts = np.asarray([r.offset for r in self.ranks], np.int64)
+            ends = starts + np.asarray(
+                [r.raw_size for r in self.ranks], np.int64
+            )
+            cached = self.__dict__["_raw_bounds_cache"] = (starts, ends)
+        return cached
+
+    def ranks_covering(self, raw_a: int, raw_b: int) -> List[int]:
+        """Ranks whose raw segment intersects ``[raw_a, raw_b)``.
+
+        Two ``np.searchsorted`` calls over the cached prefix arrays — a
+        partial restore of thousands of leaves at paper-scale world
+        sizes must not do a linear Python scan per leaf."""
+        if raw_b <= raw_a:
+            return []
+        starts, ends = self._raw_bounds()
+        lo = int(np.searchsorted(ends, raw_a, side="right"))
+        hi = int(np.searchsorted(starts, raw_b, side="left"))
+        return [r for r in range(lo, hi) if ends[r] > starts[r]]
+
     def to_json(self) -> str:
         d = asdict(self)
         d["placement"] = {str(k): v for k, v in d["placement"].items()}

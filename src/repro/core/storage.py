@@ -21,6 +21,13 @@ Fault injection: ``fault_hook(write_item)`` may raise to simulate an
 active-backend crash mid-flush; partially written PFS state is left
 behind with the manifest still at ``local_done`` — restart logic must
 (and does, see tests) fall back to L1.
+
+The read side mirrors the write side: :meth:`RealExecutor.
+execute_read_plan` runs a columnar :class:`~repro.core.plan.ReadPlan`
+as ranged ``pread``\\ s through the same work-stealing thread pool, so
+aggregated checkpoints are *read* as aggregated files — full elastic
+restores, reshards and partial (per-leaf) restores all go through one
+plan instead of per-rank whole-blob loops.
 """
 from __future__ import annotations
 
@@ -35,7 +42,13 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.plan import FlushPlan, WriteItem
+from repro.core.plan import (
+    FileLayout,
+    FlushPlan,
+    ReadPlan,
+    WriteItem,
+    build_read_plan,
+)
 from repro.core.serialize import Manifest
 
 
@@ -71,9 +84,10 @@ class LocalStore:
         return self.blob_path(node, step, rank, partner).read_bytes()
 
     def read_slice(
-        self, node: int, step: int, rank: int, offset: int, size: int
+        self, node: int, step: int, rank: int, offset: int, size: int,
+        *, partner: bool = False,
     ) -> bytes:
-        with open(self.blob_path(node, step, rank), "rb") as f:
+        with open(self.blob_path(node, step, rank, partner), "rb") as f:
             f.seek(offset)
             return f.read(size)
 
@@ -105,6 +119,17 @@ class FlushResult:
     n_writes: int
     failed: bool = False
     error: Optional[str] = None
+
+
+@dataclass
+class ReadResult:
+    """Aggregate stats of one executed :class:`ReadPlan`."""
+
+    step: int
+    duration: float
+    bytes_read: int
+    n_reads: int
+    n_readers: int
 
 
 class RealExecutor:
@@ -212,26 +237,99 @@ class RealExecutor:
 
     # ---- read side --------------------------------------------------------
 
-    def read_rank_blob(self, manifest: Manifest, step: int, rank: int) -> bytes:
-        """Reassemble one rank's stored blob from the PFS placement."""
-        entries = manifest.placement.get(rank, [])
-        size = manifest.ranks[rank].stored_size
-        buf = bytearray(size)
-        got = 0
+    def execute_read_plan(
+        self, rp: ReadPlan, step: int
+    ) -> Tuple[List[bytearray], ReadResult]:
+        """Run a :class:`ReadPlan` as ranged ``pread``s via the thread pool.
+
+        Returns one buffer per request (``rp.req_size[i]`` bytes each)
+        plus aggregate stats.  The worker-pool sizing mirrors the write
+        side: idle readers steal from the shared queue, so one straggling
+        consumer node does not serialize the restore.  Short reads raise
+        ``IOError`` — corruption is then surfaced by the caller's CRC
+        check, truncation right here.
+        """
+        t0 = time.perf_counter()
         sdir = self.step_dir(step)
-        for fname, file_off, src_off, n in entries:
-            with open(sdir / fname, "rb") as f:
-                f.seek(file_off)
-                data = f.read(n)
-            if len(data) != n:
-                raise IOError(f"short PFS read for rank {rank}")
-            buf[src_off : src_off + n] = data
-            got += n
-        if got != size:
-            raise IOError(
-                f"rank {rank}: placement covers {got} of {size} stored bytes"
+        bufs = [bytearray(int(n)) for n in rp.req_size.tolist()]
+        r = rp.reads
+        if not len(r):
+            return bufs, ReadResult(
+                step=step, duration=time.perf_counter() - t0,
+                bytes_read=0, n_reads=0, n_readers=0,
             )
-        return bytes(buf)
+        fds: Dict[int, int] = {}
+        lock = threading.Lock()
+        total = {"bytes": 0, "reads": 0}
+        try:
+            for f in np.unique(r.file_id).tolist():
+                fds[f] = os.open(str(sdir / rp.file_names[f]), os.O_RDONLY)
+
+            rows = list(
+                zip(
+                    r.file_id.tolist(), r.file_offset.tolist(), r.size.tolist(),
+                    r.dst_req.tolist(), r.dst_offset.tolist(),
+                )
+            )
+
+            def do_read(row: Tuple[int, int, int, int, int]) -> None:
+                fid, foff, size, req, doff = row
+                data = os.pread(fds[fid], size, foff)
+                if len(data) != size:
+                    raise IOError(
+                        f"short PFS read: {rp.file_names[fid]} "
+                        f"[{foff}:{foff + size})"
+                    )
+                bufs[req][doff : doff + size] = data
+                with lock:
+                    total["bytes"] += size
+                    total["reads"] += 1
+
+            n_readers = len(np.unique(r.reader))
+            workers = min(16, self.io_threads * max(1, n_readers))
+            if workers <= 1 or len(rows) == 1:
+                for row in rows:
+                    do_read(row)
+            else:
+                with ThreadPoolExecutor(max_workers=workers) as ex:
+                    futs = [ex.submit(do_read, row) for row in rows]
+                    for f in as_completed(futs):
+                        f.result()
+            return bufs, ReadResult(
+                step=step,
+                duration=time.perf_counter() - t0,
+                bytes_read=total["bytes"],
+                n_reads=total["reads"],
+                n_readers=n_readers,
+            )
+        finally:
+            for fd in fds.values():
+                try:
+                    os.close(fd)
+                except OSError:
+                    pass
+
+    def read_rank_blob(
+        self, manifest: Manifest, step: int, rank: int,
+        layout: Optional["FileLayout"] = None,
+    ) -> bytes:
+        """Reassemble one rank's stored blob from the PFS placement.
+
+        Kept as the single-rank convenience view; it is now a one-request
+        :class:`ReadPlan` so the ranged-pread path is the only read path.
+        Callers looping over many ranks should pass a pre-built
+        ``layout`` (``manifest.file_layout()``) — or better, batch the
+        ranks into one plan — instead of re-inverting the placement per
+        call.
+        """
+        offsets = manifest.stored_offsets()
+        rp = build_read_plan(
+            layout if layout is not None else manifest.file_layout(),
+            [int(offsets[rank])],
+            [manifest.ranks[rank].stored_size],
+        )
+        bufs, _ = self.execute_read_plan(rp, step)
+        return bytes(bufs[0])
 
 
 def placement_from_plan(plan: FlushPlan) -> Dict[int, List[Tuple[str, int, int, int]]]:

@@ -28,6 +28,20 @@ loops, so plan construction at 100k+ ranks is an array program.  The
 original item-loop builders are preserved verbatim in
 :mod:`repro.core.strategies_ref` and the equivalence test suite
 (tests/test_plan_arrays.py) asserts byte-identical write/send sets.
+
+The column-by-column meaning of the emitted ``WriteColumns`` /
+``SendColumns`` (``backend``, ``file_id``, ``file_offset``, ``size``,
+``src_rank``, ``src_offset``, ``round`` / ``src_backend``,
+``dst_backend``, …) and the invariants :func:`~repro.core.plan.
+validate_plan` holds every builder to — source coverage, destination
+disjointness, send coverage, stripe disjointness — are documented in the
+:mod:`repro.core.plan` module docstring, which is the validator's source
+of truth.  Because every builder satisfies *source coverage* (each
+rank's stored bytes written exactly once), any plan built here inverts
+losslessly into the read-side extent table
+(:meth:`~repro.core.plan.FileLayout.from_flush_plan`): strategies only
+ever decide the *write* layout, and restore planning works uniformly on
+the inverse, whatever strategy wrote the checkpoint.
 """
 from __future__ import annotations
 

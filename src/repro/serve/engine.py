@@ -32,6 +32,34 @@ class Server:
             lambda p, c, t: self.model.decode_step(p, c, t)
         )
 
+    @classmethod
+    def from_checkpoint(
+        cls,
+        model: Model,
+        manager: Any,
+        params_template: Any,
+        *,
+        step: Optional[int] = None,
+        prefix: str = "['params']",
+        cfg: ServeConfig = ServeConfig(),
+        sharding_fn: Optional[Any] = None,
+    ) -> Tuple["Server", int]:
+        """Boot a server straight from a checkpoint's params subtree.
+
+        Uses the manager's partial-restore path
+        (:meth:`~repro.core.engine.CheckpointManager.restore_subtree`),
+        so only the params' byte ranges are read from the aggregated
+        files — an inference fleet pulls weights out of a multi-GB
+        train-state checkpoint without touching optimizer state, and
+        without the training geometry existing anymore.  ``prefix`` is
+        the leaf-name prefix the params were saved under (``"['params']"``
+        for both train states and :meth:`snapshot_state` snapshots).
+        """
+        step_out, params = manager.restore_subtree(
+            params_template, prefix, step=step, sharding_fn=sharding_fn
+        )
+        return cls(model, params, cfg), step_out
+
     def generate(self, batch: Dict[str, Any]) -> Tuple[np.ndarray, Any]:
         """Greedy decode; returns (generated tokens (B, T_new), final cache)."""
         prompt = batch["tokens"]

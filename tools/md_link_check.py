@@ -1,0 +1,64 @@
+"""Markdown link checker (stdlib only; CI gate).
+
+Verifies that every relative link / image target in the repo's markdown
+files points at a file or directory that exists.  External links
+(http/https/mailto) are only syntax-checked, not fetched — CI must not
+depend on the network.
+
+Usage::
+
+    python tools/md_link_check.py [FILES...]   # default: README, *.md, docs/
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+DEFAULT_GLOBS = ["*.md", "docs/*.md"]
+
+
+def check_file(path: Path, root: Path) -> list:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):  # intra-document anchor
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        try:
+            resolved.relative_to(root.resolve())
+        except ValueError:
+            errors.append(f"{path}: link escapes the repo: {target}")
+            continue
+        if not resolved.exists():
+            errors.append(f"{path}: broken link: {target}")
+    return errors
+
+
+def main(argv) -> int:
+    root = Path(__file__).resolve().parents[1]
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = sorted({p for g in DEFAULT_GLOBS for p in root.glob(g)})
+    errors = []
+    for f in files:
+        if f.is_file():
+            errors.extend(check_file(f, root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
