@@ -1,0 +1,175 @@
+"""Save-phase bench: the *blocking* cost of ``save()`` — fast path vs
+the seed reference path, on real files.
+
+The paper's headline metric is how long the application is blocked per
+checkpoint: the local phase must run at node-local hardware speed while
+aggregation proceeds asynchronously.  PRs 1–2 made *planning* an array
+program; this bench times the write-side *execution* pipeline that
+ISSUE 3 rebuilt:
+
+* ``reference`` — the seed path, preserved verbatim
+  (``zero_copy=False, parallel_local=False``): per-leaf ``tobytes`` +
+  join recopy, per-rank ``bytes`` slices, sequential CRC + L1 writes,
+  one fsync per rank file.
+* ``fast`` — the zero-copy twin (``zero_copy=True,
+  parallel_local=True``): leaves serialized straight into one buffer,
+  codec-``none`` blobs are memoryview slices of it, per-rank CRC + L1
+  writes drain through the shared worker pool, fsyncs batched per node
+  directory.
+
+Each geometry reports the wall time of the ``save()`` call itself (the
+blocking window; the async flush is excluded but drained between
+repeats) plus its encode/local split, and fast rows carry
+``speedup`` = reference ``save_s`` / fast ``save_s``.  The committed
+``BENCH_save.json`` extends the bench trajectory (planner → restore →
+save); ``tools/bench_check.py`` gates its schema in CI.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/save_phase.py                # full sweep
+    PYTHONPATH=src python benchmarks/save_phase.py --quick        # CI smoke
+    PYTHONPATH=src python benchmarks/save_phase.py --out BENCH_save.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import CheckpointConfig, CheckpointManager, theta_like
+
+MiB = 1 << 20
+
+# (nodes, ppn, state MiB, strategy, repeats).  The last geometry is the
+# paper-style shape — many ranks per node, ~1 MiB blobs — where the
+# seed's per-rank Python loop + per-file fsync dominate the blocking
+# window; it is the acceptance geometry for the >=3x bar.
+FULL_CONFIGS: List[Tuple[int, int, int, str, int]] = [
+    (4, 2, 64, "stripe_aligned", 3),
+    (8, 4, 256, "stripe_aligned", 3),
+    (16, 8, 512, "stripe_aligned", 3),
+    (64, 16, 128, "stripe_aligned", 3),
+]
+QUICK_CONFIGS: List[Tuple[int, int, int, str, int]] = [
+    (2, 2, 16, "stripe_aligned", 2),
+]
+
+
+def make_state(total_bytes: int, n_leaves: int = 8) -> Dict[str, np.ndarray]:
+    """A float32 pytree of ``n_leaves`` leaves summing to total_bytes."""
+    rng = np.random.default_rng(0)
+    per = total_bytes // n_leaves // 4
+    return {
+        f"layer_{i:02d}": rng.standard_normal(per).astype(np.float32)
+        for i in range(n_leaves)
+    }
+
+
+def bench_path(
+    root: str, nodes: int, ppn: int, strategy: str, state, repeats: int,
+    *, fast: bool,
+) -> Dict[str, float]:
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            root=root, cluster=theta_like(nodes, ppn), strategy=strategy,
+            parallel_local=fast, zero_copy=fast,
+        )
+    )
+    save_s: List[float] = []
+    try:
+        for step in range(1, repeats + 1):
+            t0 = time.perf_counter()
+            st = mgr.save(step, state)
+            save_s.append(time.perf_counter() - t0)
+            mgr.wait()  # drain the async flush so repeats don't backpressure
+            assert not mgr.flush_errors, mgr.flush_errors
+        best = int(np.argmin(save_s))
+        return {
+            "save_s": round(min(save_s), 4),
+            "encode_s": round(mgr.stats[best].encode_time, 4),
+            "local_s": round(mgr.stats[best].local_time, 4),
+        }
+    finally:
+        mgr.close()
+
+
+def bench_one(
+    nodes: int, ppn: int, state_mib: int, strategy: str, repeats: int,
+    *, verbose: bool = True,
+) -> List[Dict[str, object]]:
+    state = make_state(state_mib * MiB)
+    rows: List[Dict[str, object]] = []
+    timings: Dict[str, Dict[str, float]] = {}
+    for path in ("reference", "fast"):
+        with tempfile.TemporaryDirectory() as root:
+            timings[path] = bench_path(
+                root, nodes, ppn, strategy, state, repeats,
+                fast=(path == "fast"),
+            )
+    for path in ("reference", "fast"):
+        row: Dict[str, object] = {
+            "config": f"{nodes}x{ppn}/{state_mib}MiB/{strategy}",
+            "kind": "save_phase",
+            "nodes": nodes,
+            "ppn": ppn,
+            "n_ranks": nodes * ppn,
+            "strategy": strategy,
+            "state_bytes": state_mib * MiB,
+            "path": path,
+            **timings[path],
+        }
+        if path == "fast":
+            row["speedup"] = round(
+                timings["reference"]["save_s"] / timings["fast"]["save_s"], 2
+            )
+        rows.append(row)
+        if verbose:
+            extra = f"  speedup={row['speedup']:5.2f}x" if path == "fast" else ""
+            print(
+                f"{row['config']:>32} {path:>9}  save={row['save_s']:7.3f}s  "
+                f"encode={row['encode_s']:7.3f}s  local={row['local_s']:7.3f}s"
+                f"{extra}",
+                flush=True,
+            )
+    return rows
+
+
+def run(
+    configs: List[Tuple[int, int, int, str, int]],
+    *, only: Optional[str] = None, verbose: bool = True,
+) -> List[Dict[str, object]]:
+    rows: List[Dict[str, object]] = []
+    for nodes, ppn, mib, strategy, repeats in configs:
+        if only and only not in (f"{nodes}x{ppn}",):
+            continue
+        rows.extend(bench_one(nodes, ppn, mib, strategy, repeats, verbose=verbose))
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true", help="CI smoke configs")
+    p.add_argument("--only", help="restrict to one geometry, e.g. 8x4")
+    p.add_argument("--out", help="write JSON rows to this path")
+    args = p.parse_args(argv)
+
+    configs = QUICK_CONFIGS if args.quick else FULL_CONFIGS
+    rows = run(configs, only=args.only)
+    doc = {"benchmark": "save_phase", "quick": bool(args.quick), "rows": rows}
+    text = json.dumps(doc, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}")
+    else:
+        json.dump(doc, sys.stdout, indent=2)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,7 @@ from repro.core.prefix_sum import (
     exclusive_prefix_sum,
     piggybacked_scan,
 )
+from repro.core.serialize import EncodedState, Manifest, Placement, encode_state, serialize_tree
 from repro.core.sim import FlushSimulator, SimReport, simulate_flush
 from repro.core.strategies import STRATEGIES, make_plan
 
@@ -64,6 +65,11 @@ __all__ = [
     "validate_plan_reference",
     "validate_read_plan",
     "count_false_sharing",
+    "EncodedState",
+    "Manifest",
+    "Placement",
+    "encode_state",
+    "serialize_tree",
     "LeaderAssignment",
     "ScanResult",
     "elect_leaders",

@@ -6,7 +6,13 @@ Levels (VELOC semantics):
 * **L0** — in-memory twin of the last encoded checkpoint (instant
   restart after a soft fault, survives nothing);
 * **L1** — node-local files, written *blockingly* in the local phase
-  (fast: node-local storage), optionally replicated to a partner node;
+  (fast: node-local storage), optionally replicated to a partner node.
+  The local phase is **fused and parallel**: per-rank encode + CRC + L1
+  write run as one task each on the manager's local worker pool (its
+  own pool — never queued behind async flush traffic), with fsyncs
+  batched per node directory — the blocking window is parallel
+  node-local bandwidth, not a per-rank Python loop
+  (``parallel_local=False`` keeps the seed sequential path);
 * **L2** — external PFS, written *asynchronously* by the active backend
   through one of the aggregation strategies (``file_per_process`` |
   ``posix`` | ``mpiio`` | ``stripe_aligned`` | ``gio_sync``).
@@ -32,10 +38,12 @@ checkpoint without reading the rest.
 from __future__ import annotations
 
 import logging
+import os
 import queue
 import shutil
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field as dfield
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -84,10 +92,30 @@ class CheckpointConfig:
     # save() blocks in the local phase once the PFS falls this far behind
     # (VELOC semantics: never let the async channel grow unboundedly).
     max_pending_flushes: int = 2
+    # Local-phase execution.  parallel_local runs per-rank encode + CRC
+    # + L1 write (+ partner replica) through the manager's own local
+    # worker pool (kept separate from the executor's flush pool so the
+    # blocking window never queues behind async PFS writes), with
+    # fsyncs batched per node directory; zero_copy uses the
+    # preallocated-buffer serializer whose codec-none blobs are
+    # memoryview slices of the stream.  Turning either off selects the
+    # seed reference path (sequential item loop, per-file fsync) that
+    # the equivalence tests and benchmarks/save_phase.py compare against.
+    parallel_local: bool = True
+    zero_copy: bool = True
+    local_workers: int = 0             # 0 = auto: min(16, max(8, 2*cpus))
 
 
 @dataclass
 class SaveStats:
+    """Per-save telemetry.  On the fused fast path (``zero_copy`` +
+    ``parallel_local``) the per-rank L1 writes happen *inside* the
+    encode tasks, so ``encode_time`` covers serialize+encode+CRC+drain
+    and ``local_time`` is the durability tail (batched directory fsyncs
+    + local manifest).  On the reference path they keep the seed split:
+    encode vs sequential L1 writes.  ``encode_time + local_time`` is the
+    blocking window either way."""
+
     step: int
     local_time: float
     raw_bytes: int
@@ -120,9 +148,18 @@ class CheckpointManager:
         self._last_full: Optional[EncodedState] = None
         self._saves_since_full = 0
         self.stats: List[SaveStats] = []
+        # Flush results are delivered by step through this index (under
+        # _lock) — the flush worker never scans the list save() appends to.
+        self._stats_by_step: Dict[int, SaveStats] = {}
+        # Parsed-manifest cache keyed by (ino, mtime_ns, size) per path:
+        # steps() runs per save (via _gc) and per restore candidate scan,
+        # and must not re-parse every manifest JSON each time.
+        self._man_cache: Dict[str, Tuple[Tuple[int, int, int], Manifest]] = {}
+        self._MAN_CACHE_CAP = 128  # bounds RAM when keep_n is None
         self._q: "queue.Queue[Optional[Tuple[EncodedState, FlushPlan]]]" = queue.Queue()
         self._slots = threading.BoundedSemaphore(max(1, config.max_pending_flushes))
         self._worker: Optional[threading.Thread] = None
+        self._local_exec: Optional[ThreadPoolExecutor] = None
         self._flush_errors: List[Tuple[int, str]] = []
         self._lock = threading.Lock()
         # Stats of the most recent aggregated PFS read (restore telemetry).
@@ -148,30 +185,64 @@ class CheckpointManager:
         if cfg.codec == "zstd+delta" and self._last_full is not None:
             if self._saves_since_full < cfg.delta_every - 1:
                 base = self._l0 or self._last_full
-        enc = encode_state(step, state, self.cluster, codec=cfg.codec, base=base)
+        c = self.cluster
+        pool = self._local_pool() if cfg.parallel_local else None
+        replicate = cfg.partner_replication and c.n_nodes > 1
+
+        def drain_rank(rank: int, blob: Any) -> None:
+            # non-atomic, unsynced writes: the local manifest written
+            # after the batch is the commit point, sync_dir the
+            # durability point
+            node = c.node_of_rank(rank)
+            self.local.write_blob(
+                node, step, rank, blob, sync=False, atomic=False
+            )
+            if replicate:
+                partner = (node + 1) % c.n_nodes
+                self.local.write_blob(
+                    partner, step, rank, blob, partner=True,
+                    sync=False, atomic=False,
+                )
+
+        fused = cfg.zero_copy and pool is not None
+        if cfg.zero_copy:
+            # fused parallel local phase: each pooled rank task encodes,
+            # CRCs and writes its L1 blob (+ partner replica) in one go —
+            # CRC of one rank overlaps the file write of another
+            enc = encode_state(
+                step, state, self.cluster, codec=cfg.codec, base=base,
+                pool=pool, rank_sink=drain_rank if fused else None,
+            )
+        else:
+            from repro.core.serialize_ref import encode_state_reference
+
+            enc = encode_state_reference(
+                step, state, self.cluster, codec=cfg.codec, base=base
+            )
         enc.manifest.precodec = cfg.precodec
         t_enc = time.perf_counter() - t0
 
         # ---- local phase (blocking) ----
         t1 = time.perf_counter()
-        c = self.cluster
-        for rank, blob in enumerate(enc.blobs):
-            node = c.node_of_rank(rank)
-            self.local.write_blob(node, step, rank, blob)
-            if cfg.partner_replication and c.n_nodes > 1:
-                partner = (node + 1) % c.n_nodes
-                self.local.write_blob(partner, step, rank, blob, partner=True)
+        if pool is None:
+            # seed reference path: sequential writes, fsync per file
+            for rank, blob in enumerate(enc.blobs):
+                node = c.node_of_rank(rank)
+                self.local.write_blob(node, step, rank, blob)
+                if cfg.partner_replication and c.n_nodes > 1:
+                    partner = (node + 1) % c.n_nodes
+                    self.local.write_blob(partner, step, rank, blob, partner=True)
+        else:
+            if not fused:  # reference encode + parallel drain
+                list(pool.map(lambda j: drain_rank(*j), enumerate(enc.blobs)))
+            # batched durability: one fsync per node directory (the
+            # blobs span every rank, hence every node — replicas too)
+            list(pool.map(
+                lambda n: self.local.sync_dir(n, step), range(c.n_nodes)
+            ))
         enc.manifest.status = "local_done"
         self._write_manifest_local(enc.manifest)
         t_local = time.perf_counter() - t1
-
-        with self._lock:
-            self._l0 = enc
-            if enc.manifest.base_step is None:
-                self._last_full = enc
-                self._saves_since_full = 0
-            else:
-                self._saves_since_full += 1
 
         st = SaveStats(
             step=step,
@@ -180,7 +251,15 @@ class CheckpointManager:
             stored_bytes=sum(r.stored_size for r in enc.manifest.ranks),
             encode_time=t_enc,
         )
-        self.stats.append(st)
+        with self._lock:
+            self._l0 = enc
+            if enc.manifest.base_step is None:
+                self._last_full = enc
+                self._saves_since_full = 0
+            else:
+                self._saves_since_full += 1
+            self.stats.append(st)
+            self._stats_by_step[step] = st
 
         # ---- flush phase (async) ----
         sizes = [r.stored_size for r in enc.manifest.ranks]
@@ -194,6 +273,24 @@ class CheckpointManager:
 
     # ----------------------------------------------------------------- flush
 
+    def _local_pool(self) -> ThreadPoolExecutor:
+        """One shared pool for the whole local phase — serialize leaf
+        copies, fused encode+CRC+L1 tasks, batched directory fsyncs.
+
+        Deliberately **not** the executor's flush pool: ``save()`` is
+        the blocking window, and its tasks must never queue in FIFO
+        order behind a backlog of async PFS writes from earlier steps.
+        Sized for I/O latency rather than CPU count — the fused rank
+        tasks spend most of their time in GIL-free file writes."""
+        if self._local_exec is None:
+            workers = self.cfg.local_workers or min(
+                16, max(8, 2 * (os.cpu_count() or 4))
+            )
+            self._local_exec = ThreadPoolExecutor(
+                max_workers=workers, thread_name_prefix="ckpt-local"
+            )
+        return self._local_exec
+
     def _flush_loop(self) -> None:
         while True:
             job = self._q.get()
@@ -203,9 +300,12 @@ class CheckpointManager:
             enc, plan = job
             try:
                 res = self._do_flush(enc, plan)
-                for s in self.stats:
-                    if s.step == enc.step:
-                        s.flush = res
+                # deliver by step, under the lock save() appends under —
+                # never scan the list a concurrent save() is growing
+                with self._lock:
+                    st = self._stats_by_step.get(enc.step)
+                    if st is not None:
+                        st.flush = res
             except Exception as e:  # crash of the active backend
                 log.exception("flush for step %d failed", enc.step)
                 with self._lock:
@@ -239,6 +339,10 @@ class CheckpointManager:
             self._q.put(None)
             self._worker.join(timeout=60)
             self._worker = None
+        if self._local_exec is not None:
+            self._local_exec.shutdown(wait=True)
+            self._local_exec = None
+        self.executor.close()
 
     @property
     def flush_errors(self) -> List[Tuple[int, str]]:
@@ -247,12 +351,40 @@ class CheckpointManager:
 
     # --------------------------------------------------------------- restore
 
+    def _cached_manifest(self, p: Path) -> Manifest:
+        """Parse a manifest JSON through a stat-keyed cache.
+
+        ``steps()`` runs on every save (via ``_gc``) and on every restore
+        candidate scan; re-parsing an unchanged 32k-rank manifest each
+        time would dominate those paths.  Manifests are replaced
+        atomically (``os.replace``), which allocates a fresh inode, so
+        (ino, mtime_ns, size) identifies the content even on
+        coarse-mtime filesystems; anything else falls through to a
+        fresh parse.  The cache is insertion-order bounded (paper-scale
+        manifests hold MBs of placement columns, and with the default
+        ``keep_n=None`` the step count is unbounded); ``_gc`` also
+        evicts deleted steps eagerly."""
+        stat = p.stat()
+        sig = (stat.st_ino, stat.st_mtime_ns, stat.st_size)
+        key = str(p)
+        with self._lock:
+            hit = self._man_cache.get(key)
+            if hit is not None and hit[0] == sig:
+                return hit[1]
+        man = Manifest.from_json(p.read_text())
+        with self._lock:
+            self._man_cache.pop(key, None)   # reinsert at the newest slot
+            self._man_cache[key] = (sig, man)
+            while len(self._man_cache) > self._MAN_CACHE_CAP:
+                self._man_cache.pop(next(iter(self._man_cache)))
+        return man
+
     def steps(self, level: str = "pfs") -> List[int]:
         if level == "pfs":
             out = []
             for p in sorted(self.pfs_dir.glob("step_*/manifest.json")):
                 try:
-                    man = Manifest.from_json(p.read_text())
+                    man = self._cached_manifest(p)
                     if man.status == "flush_done":
                         out.append(man.step)
                 except Exception:
@@ -262,7 +394,7 @@ class CheckpointManager:
             out = []
             for p in sorted((self.root / "local" / "manifests").glob("step_*.json")):
                 try:
-                    out.append(Manifest.from_json(p.read_text()).step)
+                    out.append(self._cached_manifest(p).step)
                 except Exception:
                     continue
             return out
@@ -326,14 +458,14 @@ class CheckpointManager:
 
     def _manifest_pfs(self, step: int) -> Manifest:
         p = self.pfs_dir / f"step_{step:08d}" / "manifest.json"
-        man = Manifest.from_json(p.read_text())
+        man = self._cached_manifest(p)
         if man.status != "flush_done":
             raise IOError(f"step {step}: flush incomplete")
         return man
 
     def _manifest_local(self, step: int) -> Manifest:
         p = self.root / "local" / "manifests" / f"step_{step:08d}.json"
-        return Manifest.from_json(p.read_text())
+        return self._cached_manifest(p)
 
     @staticmethod
     def _decode_target(man: Manifest, target: Any) -> Any:
@@ -721,6 +853,12 @@ class CheckpointManager:
             mp = self.root / "local" / "manifests" / f"step_{s:08d}.json"
             if mp.exists():
                 mp.unlink()
+            # evict the deleted step's parsed manifests — at paper scale
+            # each caches MBs of placement columns, and a long run with
+            # GC must not accumulate one dead entry per checkpoint taken
+            with self._lock:
+                self._man_cache.pop(str(sdir / "manifest.json"), None)
+                self._man_cache.pop(str(mp), None)
 
     # ------------------------------------------------------------- manifests
 

@@ -15,7 +15,21 @@ _MOD = (1 << 32) - 1
 
 
 def crc32(data) -> int:
-    return zlib.crc32(bytes(data)) & 0xFFFFFFFF
+    """CRC-32 of any C-contiguous buffer — bytes, bytearray, memoryview,
+    ndarray — hashed in place via the buffer protocol.
+
+    The zero-copy encode path hands out memoryview slices of one shared
+    stream buffer; hashing them must not materialize a ``bytes`` copy of
+    every rank blob.  Non-contiguous objects (strided array views) fall
+    back to a compacting copy, which is the only case that needs one.
+    """
+    try:
+        return zlib.crc32(data) & 0xFFFFFFFF
+    except (TypeError, BufferError, ValueError):
+        if isinstance(data, np.ndarray):
+            data = np.ascontiguousarray(data)
+            return zlib.crc32(data.view(np.uint8)) & 0xFFFFFFFF
+        return zlib.crc32(bytes(data)) & 0xFFFFFFFF
 
 
 def fletcher64_np(words: np.ndarray) -> int:

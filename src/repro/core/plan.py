@@ -880,14 +880,26 @@ class FileLayout:
 
     @staticmethod
     def from_placement(
-        placement: Dict[int, List[Tuple[str, int, int, int]]],
+        placement,
         stored_sizes: Sequence[int],
         files: Dict[str, int],
     ) -> "FileLayout":
-        """Build from a manifest's rank -> [(file, file_offset,
-        src_offset, size)] placement table (the persisted form of a
-        flush's write set)."""
+        """Build from a manifest placement (the persisted form of a
+        flush's write set): either the columnar
+        :class:`~repro.core.serialize.Placement` (one gather, no loop)
+        or the legacy rank -> [(file, file_offset, src_offset, size)]
+        dict of tuples."""
         offsets = stored_space_offsets(stored_sizes)
+        if hasattr(placement, "rank"):  # columnar Placement
+            return FileLayout(
+                file_names=list(placement.file_names),
+                files=dict(files),
+                start=offsets[placement.rank] + placement.src_offset,
+                size=placement.size.copy(),
+                file_id=placement.file_id.copy(),
+                file_offset=placement.file_offset.copy(),
+                total=int(offsets[-1]),
+            )
         names: List[str] = []
         fid: Dict[str, int] = {}
         start: List[int] = []

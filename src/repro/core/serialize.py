@@ -25,8 +25,9 @@ flush plan sees; raw sizes are preserved in the manifest.
 from __future__ import annotations
 
 import json
+from concurrent.futures import Executor
 from dataclasses import asdict, dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 import jax
@@ -59,6 +60,121 @@ class RankEntry:
     crc: int             # crc of the *stored* blob
 
 
+@dataclass(eq=False)
+class Placement:
+    """Columnar PFS placement: where each rank's stored blob landed.
+
+    Parallel int64 columns, one row per write extent, sorted by
+    ``(rank, src_offset)``.  This is the persisted form of a flush's
+    write set: a 32k-rank manifest JSON-encodes as six flat lists
+    instead of a rank-keyed dict of tuples, so manifest serialization
+    no longer dominates the async flush tail at paper scale.
+
+    * ``rank``        — producer rank whose stored blob the extent is from
+    * ``file_id``     — index into ``file_names``
+    * ``file_offset`` — destination byte offset inside that file
+    * ``src_offset``  — offset inside the rank's stored blob
+    * ``size``        — extent length (> 0)
+    """
+
+    file_names: List[str]
+    rank: np.ndarray
+    file_id: np.ndarray
+    file_offset: np.ndarray
+    src_offset: np.ndarray
+    size: np.ndarray
+
+    _COLS = ("rank", "file_id", "file_offset", "src_offset", "size")
+
+    def __post_init__(self):
+        for c in self._COLS:
+            setattr(self, c, np.asarray(getattr(self, c), dtype=np.int64))
+        if len({getattr(self, c).shape for c in self._COLS}) != 1:
+            raise ValueError("Placement columns must have identical length")
+        if len(self.rank) > 1:
+            order = np.lexsort((self.src_offset, self.rank))
+            for c in self._COLS:
+                setattr(self, c, getattr(self, c)[order])
+
+    def __len__(self) -> int:
+        return len(self.rank)
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, Placement):
+            return NotImplemented
+        return self.file_names == other.file_names and all(
+            np.array_equal(getattr(self, c), getattr(other, c))
+            for c in self._COLS
+        )
+
+    @staticmethod
+    def empty() -> "Placement":
+        z = np.empty(0, np.int64)
+        return Placement([], z, z, z, z, z)
+
+    def by_rank(self) -> Dict[int, List[Tuple[str, int, int, int]]]:
+        """Legacy item view: rank -> [(file, file_offset, src_offset,
+        size)], ordered by src_offset.  Debug/test convenience only —
+        hot paths stay on the columns."""
+        out: Dict[int, List[Tuple[str, int, int, int]]] = {}
+        for r, f, fo, so, sz in zip(
+            self.rank.tolist(), self.file_id.tolist(),
+            self.file_offset.tolist(), self.src_offset.tolist(),
+            self.size.tolist(),
+        ):
+            out.setdefault(r, []).append((self.file_names[f], fo, so, sz))
+        return out
+
+    def to_json_obj(self) -> Dict[str, Any]:
+        return {
+            "file_names": list(self.file_names),
+            "rank": self.rank.tolist(),
+            "file_id": self.file_id.tolist(),
+            "file_offset": self.file_offset.tolist(),
+            "src_offset": self.src_offset.tolist(),
+            "size": self.size.tolist(),
+        }
+
+    @staticmethod
+    def from_json_obj(obj: Any) -> "Placement":
+        """Parse either the columnar form or the legacy rank-keyed dict
+        ``{rank: [(file, file_offset, src_offset, size), ...]}`` written
+        by pre-columnar manifests."""
+        if not obj:
+            return Placement.empty()
+        if isinstance(obj, dict) and "rank" in obj and "file_names" in obj:
+            return Placement(
+                file_names=list(obj["file_names"]),
+                rank=obj["rank"],
+                file_id=obj["file_id"],
+                file_offset=obj["file_offset"],
+                src_offset=obj["src_offset"],
+                size=obj["size"],
+            )
+        names: List[str] = []
+        fid: Dict[str, int] = {}
+        rank: List[int] = []
+        file_id: List[int] = []
+        file_offset: List[int] = []
+        src_offset: List[int] = []
+        size: List[int] = []
+        for r, entries in obj.items():
+            for fname, foff, soff, n in entries:
+                j = fid.get(fname)
+                if j is None:
+                    j = fid[fname] = len(names)
+                    names.append(fname)
+                rank.append(int(r))
+                file_id.append(j)
+                file_offset.append(foff)
+                src_offset.append(soff)
+                size.append(n)
+        return Placement(names, rank, file_id, file_offset, src_offset, size)
+
+
 @dataclass
 class Manifest:
     step: int
@@ -72,9 +188,8 @@ class Manifest:
     precodec: str = "none"            # device-side transform (e.g. int8)
     strategy: str = ""
     files: Dict[str, int] = field(default_factory=dict)
-    # file layout of each rank's stored blob on the PFS:
-    # rank -> list of (file, file_offset, src_offset, size)
-    placement: Dict[int, List[Tuple[str, int, int, int]]] = field(default_factory=dict)
+    # columnar file layout of every rank's stored blob on the PFS
+    placement: Placement = field(default_factory=Placement.empty)
     status: str = "pending"           # pending | local_done | flush_done
 
     # -- read-side views ---------------------------------------------------
@@ -97,7 +212,8 @@ class Manifest:
 
     def file_layout(self) -> "FileLayout":
         """Invert the persisted placement into a :class:`FileLayout`
-        extent table (requires ``status == "flush_done"``)."""
+        extent table (requires ``status == "flush_done"``).  Columnar
+        placements invert with one gather — no Python loop."""
         from repro.core.plan import FileLayout
 
         return FileLayout.from_placement(
@@ -143,20 +259,32 @@ class Manifest:
         return [r for r in range(lo, hi) if ends[r] > starts[r]]
 
     def to_json(self) -> str:
-        d = asdict(self)
-        d["placement"] = {str(k): v for k, v in d["placement"].items()}
-        return json.dumps(d)
+        d = {
+            "step": self.step,
+            "total_raw_bytes": self.total_raw_bytes,
+            "codec": self.codec,
+            "base_step": self.base_step,
+            "world_size": self.world_size,
+            "procs_per_node": self.procs_per_node,
+            "leaves": [asdict(l) for l in self.leaves],
+            "ranks": [asdict(r) for r in self.ranks],
+            "precodec": self.precodec,
+            "strategy": self.strategy,
+            "files": self.files,
+            "placement": self.placement.to_json_obj(),
+            "status": self.status,
+        }
+        return json.dumps(d, separators=(",", ":"))
 
     @staticmethod
     def from_json(s: str) -> "Manifest":
         d = json.loads(s)
+        d.pop("_raw_bounds_cache", None)  # legacy manifests may carry it
         d["leaves"] = [LeafEntry(name=l["name"], dtype=l["dtype"],
                                  shape=tuple(l["shape"]), offset=l["offset"],
                                  size=l["size"]) for l in d["leaves"]]
         d["ranks"] = [RankEntry(**r) for r in d["ranks"]]
-        d["placement"] = {
-            int(k): [tuple(x) for x in v] for k, v in d["placement"].items()
-        }
+        d["placement"] = Placement.from_json_obj(d.get("placement"))
         return Manifest(**d)
 
 
@@ -171,26 +299,58 @@ def _leaf_to_np(leaf: Any) -> np.ndarray:
     return np.asarray(leaf)
 
 
-def serialize_tree(state: Any) -> Tuple[bytes, List[LeafEntry]]:
+Buffer = Union[bytes, bytearray, memoryview]
+
+
+def serialize_tree(
+    state: Any, *, pool: Optional[Executor] = None
+) -> Tuple[memoryview, List[LeafEntry]]:
+    """Pytree -> one logical byte stream, written in place.
+
+    Leaf sizes are computed first, then every leaf is copied *directly*
+    into its slice of one preallocated buffer (``np.copyto`` through a
+    dtype view — C-order, like ``tobytes()``): one copy per leaf total,
+    no per-leaf ``tobytes`` temporaries, no ``b"".join`` recopy of the
+    whole stream.  Leaf slices are disjoint, so with ``pool`` the copies
+    run concurrently (``np.copyto`` releases the GIL on large arrays).
+    Returns a read-only :class:`memoryview`; downstream consumers
+    (:func:`encode_state`, CRC, L1 writes) slice it without copying.
+    The seed item-loop implementation survives as
+    :func:`repro.core.serialize_ref.serialize_tree_reference` and the
+    equivalence tests prove the streams byte-identical.
+    """
     named, _ = flatten_with_names(state)
-    chunks: List[bytes] = []
+    arrs = [_leaf_to_np(leaf) for _, leaf in named]
     leaves: List[LeafEntry] = []
     off = 0
-    for name, leaf in named:
-        arr = _leaf_to_np(leaf)  # tobytes() emits C-order regardless of layout
-        raw = arr.tobytes()
+    for (name, _), arr in zip(named, arrs):
+        size = int(arr.nbytes)
         leaves.append(
             LeafEntry(
                 name=name, dtype=str(arr.dtype), shape=tuple(arr.shape),
-                offset=off, size=len(raw),
+                offset=off, size=size,
             )
         )
-        chunks.append(raw)
-        off += len(raw)
-    return b"".join(chunks), leaves
+        off += size
+    buf = np.empty(off, np.uint8)
+
+    def copy_leaf(job: Tuple[LeafEntry, np.ndarray]) -> None:
+        entry, arr = job
+        if entry.size == 0:
+            return
+        dst = buf[entry.offset : entry.offset + entry.size]
+        np.copyto(dst.view(arr.dtype).reshape(arr.shape), arr, casting="no")
+
+    jobs = list(zip(leaves, arrs))
+    if pool is not None and len(jobs) > 1:
+        list(pool.map(copy_leaf, jobs))
+    else:
+        for j in jobs:
+            copy_leaf(j)
+    return memoryview(buf).toreadonly(), leaves
 
 
-def deserialize_tree(stream: bytes, leaves: Sequence[LeafEntry], target: Any) -> Any:
+def deserialize_tree(stream: Buffer, leaves: Sequence[LeafEntry], target: Any) -> Any:
     """Fill `target`'s structure with leaf values from the stream.
 
     `target` may contain arrays or jax.ShapeDtypeStructs; only the
@@ -251,8 +411,8 @@ def _zstd_d(data: bytes, raw_size: int) -> bytes:
 
 
 def encode_blob(
-    raw: bytes, codec: str, base: Optional[bytes] = None
-) -> bytes:
+    raw: Buffer, codec: str, base: Optional[Buffer] = None
+) -> Buffer:
     if codec == "none":
         return raw
     if codec == "zstd":
@@ -289,11 +449,19 @@ def decode_blob(
 
 @dataclass
 class EncodedState:
-    """One checkpoint, serialized + split + encoded, ready to plan/flush."""
+    """One checkpoint, serialized + split + encoded, ready to plan/flush.
+
+    Buffer ownership: with codec ``none`` every entry of ``blobs`` is a
+    read-only :class:`memoryview` slice of ``stream`` — the pytree's
+    bytes exist exactly once between serialization and the L1 files.
+    Compression codecs materialize per-rank ``bytes`` (unavoidably: the
+    stored bytes differ from the raw ones).  ``stream`` is kept alive by
+    the L0 twin and by delta bases; the views never outlive it.
+    """
 
     step: int
-    stream: bytes                   # raw logical stream (kept for L0/delta)
-    blobs: List[bytes]              # stored (encoded) blob per rank
+    stream: Buffer                  # raw logical stream (kept for L0/delta)
+    blobs: List[Buffer]             # stored (encoded) blob per rank
     manifest: Manifest
 
 
@@ -305,8 +473,24 @@ def encode_state(
     codec: str = "none",
     base: Optional[EncodedState] = None,
     rank_sizes: Optional[Sequence[int]] = None,
+    pool: Optional[Executor] = None,
+    rank_sink: Optional[Any] = None,
 ) -> EncodedState:
-    stream, leaves = serialize_tree(state)
+    """Serialize + split + encode one checkpoint.
+
+    Zero-copy contract: rank blobs are memoryview slices of the stream
+    (codec ``none`` stores them as-is — zero extra copies between the
+    pytree and the L1 files), and :func:`~repro.core.integrity.crc32`
+    hashes the views in place.
+
+    ``pool`` runs the per-rank work concurrently; ``rank_sink(rank,
+    blob)``, when given, is called inside each rank's task right after
+    its CRC — the engine injects the L1 write here, so encode + CRC +
+    node-local drain are **one fused parallel phase**: CRC (holding the
+    GIL) of one rank overlaps the file write (GIL released) of another
+    instead of running as two barriers.
+    """
+    stream, leaves = serialize_tree(state, pool=pool)
     total = len(stream)
     parts = split_ranks(total, cluster.world_size, sizes=rank_sizes)
     base_ok = (
@@ -317,20 +501,28 @@ def encode_state(
             (r.offset, r.raw_size) for r in base.manifest.ranks
         ] == list(parts)
     )
-    blobs: List[bytes] = []
-    ranks: List[RankEntry] = []
-    for r, (off, size) in enumerate(parts):
+
+    def encode_rank(job: Tuple[int, int, int]) -> Tuple[Buffer, RankEntry]:
+        r, off, size = job
         raw = stream[off : off + size]
         b = encode_blob(
             raw, codec, base.stream[off : off + size] if base_ok else None
         )
-        blobs.append(b)
-        ranks.append(
-            RankEntry(
-                rank=r, offset=off, raw_size=size, stored_size=len(b),
-                crc=crc32(b),
-            )
+        entry = RankEntry(
+            rank=r, offset=off, raw_size=size, stored_size=len(b),
+            crc=crc32(b),
         )
+        if rank_sink is not None:
+            rank_sink(r, b)
+        return b, entry
+
+    jobs = [(r, off, size) for r, (off, size) in enumerate(parts)]
+    if pool is not None and len(jobs) > 1:
+        results = list(pool.map(encode_rank, jobs))
+    else:
+        results = [encode_rank(j) for j in jobs]
+    blobs = [b for b, _ in results]
+    ranks = [e for _, e in results]
     man = Manifest(
         step=step,
         total_raw_bytes=total,

@@ -161,7 +161,7 @@ def test_validate_scrub_flags_corrupt_rank_only(tmp_path):
     assert all(rep["pfs"].values()) and all(rep["local"].values())
     # flip a byte in rank 2's file: exactly that rank goes unhealthy
     man = mgr._manifest_pfs(1)
-    fname = man.placement[2][0][0]
+    fname = man.placement.by_rank()[2][0][0]
     p = mgr.pfs_dir / "step_00000001" / fname
     data = bytearray(p.read_bytes())
     data[0] ^= 0xFF

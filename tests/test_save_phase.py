@@ -1,0 +1,491 @@
+"""Write-side execution pipeline: zero-copy encode, parallel local
+phase, columnar flush execution.
+
+The equivalence half mirrors tests/test_plan_arrays.py: the seed
+item-loop paths survive as executable specs
+(`repro.core.serialize_ref`, `RealExecutor.execute_reference`,
+`parallel_local=False`) and every fast path must be byte-identical to
+them.  The concurrency half exercises what the seed never could:
+overlapping saves up to the backpressure bound, flush-stat delivery
+races, and faults raised mid-parallel-flush.
+"""
+import itertools
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CheckpointConfig,
+    CheckpointManager,
+    Manifest,
+    Placement,
+    make_plan,
+    theta_like,
+)
+from repro.core.integrity import crc32
+from repro.core.serialize import encode_state, serialize_tree
+from repro.core.serialize_ref import (
+    encode_state_reference,
+    serialize_tree_reference,
+)
+from repro.core.storage import LocalStore, RealExecutor
+
+ALL_STRATEGIES = ["file_per_process", "posix", "mpiio", "stripe_aligned", "gio_sync"]
+
+
+def state_tree(step=0):
+    return {
+        "params": {
+            "w": jnp.arange(3000, dtype=jnp.float32).reshape(60, 50) + step,
+            "b": jnp.full((64,), step, jnp.bfloat16),
+        },
+        "opt": {"mu": jnp.ones((40, 50), jnp.float32) * step,
+                "count": jnp.array(step, jnp.int32)},
+    }
+
+
+def np_target():
+    return jax.tree_util.tree_map(np.asarray, state_tree())
+
+
+def assert_tree_equal(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)),
+        a, b,
+    )
+
+
+# ---------------------------------------------------------------------------
+# crc32 buffer regression (satellite: no bytes() copy to hash a view)
+# ---------------------------------------------------------------------------
+
+
+def test_crc32_accepts_buffers_without_copy_semantics_change():
+    payload = b"checkpoint bytes " * 4096
+    ref = crc32(payload)
+    assert crc32(memoryview(payload)) == ref
+    assert crc32(bytearray(payload)) == ref
+    assert crc32(np.frombuffer(payload, np.uint8)) == ref
+    # read-only views of a numpy-backed stream (the encode path's shape)
+    buf = np.frombuffer(payload, np.uint8).copy()
+    assert crc32(memoryview(buf).toreadonly()) == ref
+    # non-contiguous arrays still hash (via the compacting fallback)
+    arr = np.arange(999, dtype=np.int64)
+    assert crc32(arr[::3]) == crc32(arr[::3].copy().tobytes())
+
+
+# ---------------------------------------------------------------------------
+# zero-copy serialization equivalence
+# ---------------------------------------------------------------------------
+
+
+def mixed_tree():
+    return {
+        "f32": np.arange(501, dtype=np.float32),
+        "f64_odd": np.ones((33,), np.float64),      # unaligned offsets downstream
+        "i8": np.arange(7, dtype=np.int8),
+        "fortran": np.asfortranarray(np.arange(24.0).reshape(4, 6)),
+        "scalar": np.float32(2.5),
+        "empty": np.empty((0, 3), np.float32),
+        "bf16": jnp.full((11,), 1.25, jnp.bfloat16),
+    }
+
+
+def test_serialize_tree_matches_seed_reference():
+    fast_stream, fast_leaves = serialize_tree(mixed_tree())
+    ref_stream, ref_leaves = serialize_tree_reference(mixed_tree())
+    assert fast_leaves == ref_leaves
+    assert bytes(fast_stream) == ref_stream
+    assert fast_stream.readonly
+
+
+@pytest.mark.parametrize("codec", ["none", "zstd", "zstd+delta"])
+def test_encode_state_matches_seed_reference(codec):
+    if codec != "none":
+        pytest.importorskip("zstandard")
+    c = theta_like(3, 2)
+    fast = encode_state(1, mixed_tree(), c, codec=codec)
+    ref = encode_state_reference(1, mixed_tree(), c, codec=codec)
+    assert fast.manifest == ref.manifest
+    assert [bytes(b) for b in fast.blobs] == [bytes(b) for b in ref.blobs]
+    # delta against a prior step
+    base_f = fast
+    base_r = ref
+    fast2 = encode_state(2, mixed_tree(), c, codec=codec, base=base_f)
+    ref2 = encode_state_reference(2, mixed_tree(), c, codec=codec, base=base_r)
+    assert fast2.manifest == ref2.manifest
+    assert [bytes(b) for b in fast2.blobs] == [bytes(b) for b in ref2.blobs]
+
+
+def test_codec_none_performs_zero_stream_copies():
+    """The acceptance bar: with codec none, the state's bytes exist
+    exactly once between the pytree and L1 — every rank blob is a
+    read-only memoryview aliasing the one stream buffer."""
+    c = theta_like(4, 2)
+    enc = encode_state(3, mixed_tree(), c, codec="none")
+    assert isinstance(enc.stream, memoryview) and enc.stream.readonly
+    for blob in enc.blobs:
+        assert isinstance(blob, memoryview)
+        assert blob.obj is enc.stream.obj          # zero-copy: same buffer
+    assert sum(len(b) for b in enc.blobs) == len(enc.stream)
+
+
+def test_encode_pool_matches_sequential():
+    from concurrent.futures import ThreadPoolExecutor
+
+    c = theta_like(8, 4)
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        pooled = encode_state(5, mixed_tree(), c, pool=pool)
+    seq = encode_state(5, mixed_tree(), c)
+    assert pooled.manifest == seq.manifest
+    assert [bytes(b) for b in pooled.blobs] == [bytes(b) for b in seq.blobs]
+
+
+# ---------------------------------------------------------------------------
+# parallel local phase ≡ sequential reference, through the whole manager
+# ---------------------------------------------------------------------------
+
+
+def _tree_files(root):
+    return sorted(
+        p.relative_to(root).as_posix()
+        for p in root.rglob("*")
+        if p.is_file() and p.suffix != ".json"
+    )
+
+
+def _assert_checkpoint_dirs_identical(root_a, root_b):
+    files_a, files_b = _tree_files(root_a), _tree_files(root_b)
+    assert files_a == files_b
+    for rel in files_a:
+        assert (root_a / rel).read_bytes() == (root_b / rel).read_bytes(), rel
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+@pytest.mark.parametrize("codec", ["none", "zstd", "zstd+delta"])
+def test_parallel_local_phase_byte_identical(tmp_path, strategy, codec):
+    if codec != "none":
+        pytest.importorskip("zstandard")
+    cluster = theta_like(3, 2)
+    roots = {}
+    for name, fast in (("fast", True), ("ref", False)):
+        root = tmp_path / name
+        mgr = CheckpointManager(
+            CheckpointConfig(
+                root=str(root), cluster=cluster, strategy=strategy,
+                codec=codec, delta_every=3, partner_replication=True,
+                async_flush=False, parallel_local=fast, zero_copy=fast,
+            )
+        )
+        for s in (1, 2, 3):
+            mgr.save(s, state_tree(s))
+        mgr.close()
+        roots[name] = root
+    _assert_checkpoint_dirs_identical(roots["fast"], roots["ref"])
+    for s in (1, 2, 3):
+        man_f = Manifest.from_json(
+            (roots["fast"] / "pfs" / f"step_{s:08d}" / "manifest.json").read_text()
+        )
+        man_r = Manifest.from_json(
+            (roots["ref"] / "pfs" / f"step_{s:08d}" / "manifest.json").read_text()
+        )
+        assert man_f == man_r
+
+
+def test_fast_path_restores_across_levels(tmp_path):
+    mgr = CheckpointManager(
+        CheckpointConfig(root=str(tmp_path), cluster=theta_like(3, 2),
+                         strategy="stripe_aligned")
+    )
+    mgr.save(7, state_tree(7))
+    mgr.wait()
+    assert not mgr.flush_errors
+    # L0 (stream is a memoryview), then PFS, then L1
+    step, got = mgr.restore(np_target())
+    assert step == 7
+    assert_tree_equal(got, state_tree(7))
+    mgr._l0 = None
+    step, got = mgr.restore(np_target())
+    assert_tree_equal(got, state_tree(7))
+    import shutil
+
+    shutil.rmtree(mgr.pfs_dir / "step_00000007")
+    mgr._man_cache.clear()
+    step, got = mgr.restore(np_target())
+    assert step == 7
+    assert_tree_equal(got, state_tree(7))
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# columnar executor ≡ item-loop reference executor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy,kw", [
+    ("file_per_process", {}),
+    ("posix", {}),
+    ("mpiio", {"chunk_stripes": 2}),
+    ("stripe_aligned", {"pipeline_chunk": 1 << 18}),
+    ("gio_sync", {}),
+])
+def test_columnar_executor_byte_identical_files(tmp_path, strategy, kw):
+    """`RealExecutor.execute` iterates PlanArrays columns (with
+    coalescing, persistent pool); the seed item-loop `execute_reference`
+    is the spec.  Same L1 input, same plan -> byte-identical PFS files."""
+    cluster = theta_like(4, 2)
+    rng = np.random.default_rng(7)
+    sizes = rng.integers(1 << 16, 1 << 19, cluster.world_size).tolist()
+    blobs = [rng.bytes(sz) for sz in sizes]
+    local = LocalStore(tmp_path / "local", cluster.n_nodes)
+    for step in (1, 2):  # identical L1 content for both steps
+        for r, blob in enumerate(blobs):
+            local.write_blob(cluster.node_of_rank(r), step, r, blob)
+    plan = make_plan(strategy, cluster, sizes, **kw)
+    ex = RealExecutor(tmp_path / "pfs", local, io_threads=4)
+    res_fast = ex.execute(plan, 1)
+    res_ref = ex.execute_reference(plan, 2)
+    ex.close()
+    assert res_fast.bytes_written == res_ref.bytes_written == sum(sizes)
+    # coalescing may merge contiguous writes; never split or drop them
+    assert res_fast.n_writes <= res_ref.n_writes
+    files1 = sorted(p.name for p in (tmp_path / "pfs" / "step_00000001").iterdir())
+    files2 = sorted(p.name for p in (tmp_path / "pfs" / "step_00000002").iterdir())
+    assert files1 == files2
+    for name in files1:
+        a = (tmp_path / "pfs" / "step_00000001" / name).read_bytes()
+        b = (tmp_path / "pfs" / "step_00000002" / name).read_bytes()
+        assert a == b, name
+
+
+def test_failed_batch_drains_before_reraise(tmp_path):
+    """A worker exception mid-batch must not abandon in-flight tasks:
+    with a persistent pool, stragglers would otherwise pwrite through
+    fds the failed execute() already closed (and the OS may hand the
+    fd numbers to the *next* step's files).  After a failed flush the
+    pool stays usable and a subsequent flush is byte-correct."""
+    cluster = theta_like(2, 2)
+    sizes = [1 << 16] * cluster.world_size
+    rng = np.random.default_rng(3)
+    blobs = [rng.bytes(sz) for sz in sizes]
+    local = LocalStore(tmp_path / "local", cluster.n_nodes)
+    for step in (1, 2):
+        for r, blob in enumerate(blobs):
+            local.write_blob(cluster.node_of_rank(r), step, r, blob)
+    plan = make_plan("posix", cluster, sizes)
+
+    boom = itertools.count()
+    hooks = {"on": True}
+
+    def hook(_w):
+        if hooks["on"] and next(boom) == 1:
+            raise IOError("injected mid-batch failure")
+
+    ex = RealExecutor(tmp_path / "pfs", local, io_threads=4, fault_hook=hook)
+    with pytest.raises(IOError):
+        ex.execute(plan, 1)
+    hooks["on"] = False
+    res = ex.execute(plan, 2)            # same pool, fresh fds
+    assert res.bytes_written == sum(sizes)
+    agg = (tmp_path / "pfs" / "step_00000002" / "aggregate.dat").read_bytes()
+    assert agg == b"".join(blobs)
+    ex.close()
+
+
+def test_executor_pool_is_persistent(tmp_path):
+    """One pool for the executor's lifetime: concurrent holders (an
+    in-flight flush, a restore) must never have it swapped out and shut
+    down under them, whatever worker count later callers request."""
+    local = LocalStore(tmp_path / "local", 2)
+    ex = RealExecutor(tmp_path / "pfs", local, io_threads=2)
+    p1 = ex.pool(4)
+    assert ex.pool(3) is p1
+    assert ex.pool(64) is p1       # larger request: same pool, no swap
+    assert ex.pool() is p1
+    ex.close()
+    assert ex._pool is None
+
+
+# ---------------------------------------------------------------------------
+# concurrency: overlapping saves, flush-stat delivery, faults mid-flush
+# ---------------------------------------------------------------------------
+
+
+def test_overlapping_saves_fill_flush_pipeline(tmp_path):
+    """Saves overlap in-flight flushes up to max_pending_flushes; every
+    step's FlushResult is delivered to its own SaveStats (the
+    stats-by-step race fix) and the newest checkpoint restores."""
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            root=str(tmp_path), cluster=theta_like(2, 2),
+            strategy="stripe_aligned", max_pending_flushes=2,
+        )
+    )
+    for s in range(1, 9):
+        mgr.save(s, state_tree(s))
+    mgr.wait()
+    assert not mgr.flush_errors
+    assert [st.step for st in mgr.stats] == list(range(1, 9))
+    for st in mgr.stats:
+        assert st.flush is not None and not st.flush.failed
+    mgr._l0 = None
+    step, got = mgr.restore(np_target())
+    assert step == 8
+    assert_tree_equal(got, state_tree(8))
+    mgr.close()
+
+
+def test_concurrent_saves_and_flush_stats_no_lost_updates(tmp_path):
+    """Hammer save() from the main thread while the flush worker
+    delivers results: the old list-scan delivery could miss steps whose
+    stats appended mid-scan; the dict-by-step delivery cannot."""
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            root=str(tmp_path), cluster=theta_like(1, 2),
+            strategy="posix", max_pending_flushes=3,
+        )
+    )
+    small = {"x": jnp.zeros((4096,), jnp.float32)}
+    for s in range(1, 25):
+        mgr.save(s, small)
+    mgr.wait()
+    assert not mgr.flush_errors
+    missing = [st.step for st in mgr.stats if st.flush is None]
+    assert missing == []
+    mgr.close()
+
+
+def test_fault_mid_parallel_flush_leaves_l1_restorable(tmp_path):
+    """An active-backend crash partway through a parallel flush must
+    leave the (parallel-written) L1 level restorable."""
+    count = itertools.count()
+
+    def bomb(_w):
+        if next(count) == 2:
+            raise IOError("injected backend crash")
+
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            root=str(tmp_path), cluster=theta_like(3, 2),
+            strategy="stripe_aligned", partner_replication=True,
+        ),
+        fault_hook=bomb,
+    )
+    mgr.save(4, state_tree(4))
+    mgr.wait()
+    assert mgr.flush_errors and mgr.flush_errors[0][0] == 4
+    assert mgr.steps("pfs") == []
+    mgr._l0 = None
+    step, restored = mgr.restore(np_target())
+    assert step == 4
+    assert_tree_equal(restored, state_tree(4))
+    # and the partner replicas are real files too: drop a node, restore
+    mgr.local.drop_node(1)
+    step, restored = mgr.restore(np_target())
+    assert step == 4
+    assert_tree_equal(restored, state_tree(4))
+    mgr.close()
+
+
+def test_backpressure_still_bounds_parallel_saves(tmp_path):
+    gate = threading.Event()
+
+    def slow_hook(_w):
+        gate.wait(timeout=30)
+
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            root=str(tmp_path), cluster=theta_like(1, 1),
+            strategy="file_per_process", max_pending_flushes=1,
+        ),
+        fault_hook=slow_hook,
+    )
+    mgr.save(1, {"x": jnp.ones((1024,), jnp.float32)})
+    done = threading.Event()
+
+    def second_save():
+        mgr.save(2, {"x": jnp.ones((1024,), jnp.float32)})
+        done.set()
+
+    t = threading.Thread(target=second_save, daemon=True)
+    t.start()
+    import time
+
+    time.sleep(0.3)
+    assert not done.is_set()          # blocked on backpressure
+    gate.set()
+    assert done.wait(timeout=30)
+    mgr.wait()
+    assert not mgr.flush_errors
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# columnar manifest placement + manifest cache
+# ---------------------------------------------------------------------------
+
+
+def test_placement_roundtrip_and_legacy_json(tmp_path):
+    mgr = CheckpointManager(
+        CheckpointConfig(root=str(tmp_path), cluster=theta_like(2, 2),
+                         strategy="stripe_aligned", async_flush=False)
+    )
+    mgr.save(1, state_tree(1))
+    man = mgr._manifest_pfs(1)
+    assert isinstance(man.placement, Placement)
+    j = json.loads(man.to_json())
+    # columnar persisted form: flat parallel lists, not a rank-keyed dict
+    assert set(j["placement"]) == {
+        "file_names", "rank", "file_id", "file_offset", "src_offset", "size"
+    }
+    again = Manifest.from_json(man.to_json())
+    assert again.placement == man.placement
+    assert again.file_layout().total == man.file_layout().total
+    # legacy manifests (rank-keyed dict of tuples) still parse
+    j["placement"] = {
+        str(r): v for r, v in man.placement.by_rank().items()
+    }
+    legacy = Manifest.from_json(json.dumps(j))
+    assert legacy.placement == man.placement
+    np.testing.assert_array_equal(
+        legacy.file_layout().start, man.file_layout().start
+    )
+    mgr.close()
+
+
+def test_steps_caches_manifest_parsing(tmp_path, monkeypatch):
+    mgr = CheckpointManager(
+        CheckpointConfig(root=str(tmp_path), cluster=theta_like(2, 1),
+                         strategy="stripe_aligned", async_flush=False)
+    )
+    for s in (1, 2, 3):
+        mgr.save(s, state_tree(s))
+    assert mgr.steps("pfs") == [1, 2, 3]
+    assert mgr.steps("local") == [1, 2, 3]      # warm both levels
+
+    calls = {"n": 0}
+    orig = Manifest.from_json
+
+    def counting(s):
+        calls["n"] += 1
+        return orig(s)
+
+    monkeypatch.setattr(Manifest, "from_json", staticmethod(counting))
+    assert mgr.steps("pfs") == [1, 2, 3]
+    assert mgr.steps("local") == [1, 2, 3]
+    assert calls["n"] == 0                      # all served from cache
+    # a replaced manifest (new mtime/content) is re-parsed
+    p = mgr.pfs_dir / "step_00000002" / "manifest.json"
+    man = orig(p.read_text())
+    tmp = p.with_suffix(".tmp")
+    tmp.write_text(man.to_json())
+    import os
+    os.replace(tmp, p)
+    os.utime(p, ns=(1, 1))                      # force a distinct mtime
+    mgr.steps("pfs")
+    assert calls["n"] >= 1
+    mgr.close()

@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""CI gate for the committed bench trajectory: every ``BENCH_*.json`` at
+the repo root must exist, parse, and carry the fields the docs and
+regression tracking rely on.  Stdlib only (runs before any install).
+
+Per-file schema (top level: ``benchmark`` string + non-empty ``rows``):
+
+* ``BENCH_planner.json`` — plan build/validate/simulate rows;
+* ``BENCH_restore.json`` — read-plan rows + one real elastic restore;
+* ``BENCH_save.json``    — save-phase rows in reference/fast pairs; the
+  fast row of the largest geometry must record the ISSUE 3 acceptance
+  bar, ``speedup >= 3``.
+
+Exit code 0 = all good; 1 = any file missing/malformed (messages on
+stderr).  Run as ``python tools/bench_check.py [root]``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+# benchmark name -> (filename, required row fields common to every row)
+EXPECTED = {
+    "BENCH_planner.json": (
+        "planner_scale",
+        {"config", "n_ranks", "strategy", "build_s", "validate_s", "total_s"},
+    ),
+    "BENCH_restore.json": (
+        "restore_scale",
+        set(),  # rows are heterogeneous; per-kind fields checked below
+    ),
+    "BENCH_save.json": (
+        "save_phase",
+        {"config", "kind", "n_ranks", "state_bytes", "path", "save_s",
+         "encode_s", "local_s"},
+    ),
+}
+
+RESTORE_KIND_FIELDS = {
+    "full_restore": {"invert_s", "build_s", "validate_s", "n_reads"},
+    "partial_restore": {"invert_s", "build_s", "validate_s", "n_reads"},
+    "real_elastic_restore": {"restore_s", "partial_restore_s"},
+}
+
+SAVE_SPEEDUP_BAR = 3.0
+
+
+def fail(msg: str, errors: list) -> None:
+    errors.append(msg)
+    print(f"bench_check: {msg}", file=sys.stderr)
+
+
+def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
+    if not path.exists():
+        return fail(f"{path.name}: missing", errors)
+    try:
+        doc = json.loads(path.read_text())
+    except Exception as e:
+        return fail(f"{path.name}: invalid JSON ({e})", errors)
+    if doc.get("benchmark") != benchmark:
+        return fail(
+            f"{path.name}: benchmark={doc.get('benchmark')!r}, "
+            f"want {benchmark!r}", errors,
+        )
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return fail(f"{path.name}: rows must be a non-empty list", errors)
+    for i, row in enumerate(rows):
+        need = set(fields)
+        if benchmark == "restore_scale":
+            kind = row.get("kind")
+            if kind not in RESTORE_KIND_FIELDS:
+                fail(f"{path.name} row {i}: unknown kind {kind!r}", errors)
+                continue
+            need = RESTORE_KIND_FIELDS[kind]
+        missing = need - set(row)
+        if missing:
+            fail(f"{path.name} row {i}: missing fields {sorted(missing)}", errors)
+
+    if benchmark == "save_phase" and not errors:
+        fast = [r for r in rows if r.get("path") == "fast"]
+        if not fast:
+            return fail(f"{path.name}: no fast-path rows", errors)
+        if any("speedup" not in r for r in fast):
+            return fail(f"{path.name}: fast rows must carry 'speedup'", errors)
+        largest = max(fast, key=lambda r: (r["n_ranks"], r["state_bytes"]))
+        if largest["speedup"] < SAVE_SPEEDUP_BAR:
+            fail(
+                f"{path.name}: largest geometry {largest['config']} speedup "
+                f"{largest['speedup']}x < {SAVE_SPEEDUP_BAR}x acceptance bar",
+                errors,
+            )
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).parent.parent
+    errors: list = []
+    for fname, (benchmark, fields) in EXPECTED.items():
+        check_file(root / fname, benchmark, fields, errors)
+    # any stray BENCH_*.json must at least parse with the common shape
+    for path in sorted(root.glob("BENCH_*.json")):
+        if path.name in EXPECTED:
+            continue
+        try:
+            doc = json.loads(path.read_text())
+        except Exception as e:
+            fail(f"{path.name}: invalid JSON ({e})", errors)
+            continue
+        if not isinstance(doc.get("benchmark"), str) or not doc.get("rows"):
+            fail(f"{path.name}: needs 'benchmark' string + non-empty 'rows'", errors)
+    if errors:
+        print(f"bench_check: {len(errors)} problem(s)", file=sys.stderr)
+        return 1
+    print(f"bench_check: OK ({len(EXPECTED)} committed bench files valid)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
