@@ -1,0 +1,324 @@
+"""Codec-phase bench: the blocking cost of ``save()`` *with compression
+on* — chunk-framed parallel codec vs the seed whole-blob path.
+
+PR 3's save bench covered codec ``none``; this one measures exactly
+where the paper's PFS-pressure argument is strongest, when every rank
+blob is compressed before it is planned and flushed:
+
+* ``reference`` — the seed path, preserved verbatim (``zero_copy=False,
+  parallel_local=False``): per-leaf ``tobytes`` + join recopy, then one
+  single-threaded whole-blob compressor call per rank, sequential CRC +
+  L1 writes, one fsync per rank file.
+* ``fast`` — the chunk-framed twin (``zero_copy=True,
+  parallel_local=True``): leaves serialize straight into one buffer,
+  each rank's chunks compress on the manager's worker pool with
+  per-thread compressor reuse, L1 writes fuse into the encode tasks,
+  fsyncs batch per node directory.
+
+Row kinds in the emitted JSON:
+
+* ``codec_save`` — reference/fast pairs per geometry (fast rows carry
+  ``speedup``); ``stored_ratio`` = stored/raw bytes.
+* ``delta_dirty`` — chunked ``zstd+delta`` save time and stored ratio
+  as a function of the fraction of the state mutated since the base:
+  unchanged chunks store zero bytes (base references), so small-update
+  steps shrink toward the differential-checkpointing ideal.
+* ``partial_restore_compressed`` — ``restore_leaves`` of one small leaf
+  out of a chunk-framed compressed checkpoint: bytes actually read vs
+  total stored (whole-blob framing would read every covering blob).
+
+The committed ``BENCH_codec.json`` extends the bench trajectory
+(planner → restore → save → codec); ``tools/bench_check.py`` gates its
+schema and the ≥3x acceptance bar at the largest geometry in CI.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/codec_phase.py                # full sweep
+    PYTHONPATH=src python benchmarks/codec_phase.py --quick        # CI smoke
+    PYTHONPATH=src python benchmarks/codec_phase.py --out BENCH_codec.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (
+    CheckpointConfig,
+    CheckpointManager,
+    default_codec_impl,
+    theta_like,
+)
+from repro.core.serialize import CHUNK_BASE
+
+MiB = 1 << 20
+
+# (nodes, ppn, state MiB, repeats).  The last geometry is the paper-style
+# shape — many ranks per node, small per-rank blobs — and the acceptance
+# geometry for the >=3x bar with codec zstd.
+FULL_CONFIGS: List[Tuple[int, int, int, int]] = [
+    (4, 2, 64, 3),
+    (8, 4, 128, 3),
+    (64, 16, 128, 5),
+]
+QUICK_CONFIGS: List[Tuple[int, int, int, int]] = [
+    (2, 2, 16, 2),
+]
+
+DIRTY_FRACS = [0.0, 0.01, 0.1, 0.5]
+
+
+def make_state(total_bytes: int, n_leaves: int = 8) -> Dict[str, np.ndarray]:
+    """A float32 pytree shaped like a real train state.
+
+    3/4 dense standard-normal leaves (weights + first moments:
+    high-entropy mantissas, effectively incompressible — the chunk
+    probe stores them raw) and 1/4 90%-sparse second-moment-style
+    leaves (~6x compressible).  This is the mix the chunk-framed codec
+    is built for: the whole-blob reference burns its blocking window
+    compressing the dense leaves for a few percent, while the chunked
+    path probes them, stores them raw, and spends compression only
+    where it pays.
+    """
+    rng = np.random.default_rng(0)
+    per = total_bytes // n_leaves // 4
+    n_dense = (3 * n_leaves) // 4
+    out: Dict[str, np.ndarray] = {}
+    for i in range(n_leaves):
+        if i < n_dense:
+            out[f"w_{i:02d}"] = rng.standard_normal(per).astype(np.float32)
+        else:
+            out[f"m_{i:02d}"] = np.where(
+                rng.random(per) < 0.9, 0.0, rng.standard_normal(per)
+            ).astype(np.float32)
+    return out
+
+
+def bench_save_path(
+    root: str, nodes: int, ppn: int, state, repeats: int, *, fast: bool,
+    codec: str = "zstd",
+) -> Dict[str, float]:
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            root=root, cluster=theta_like(nodes, ppn),
+            strategy="stripe_aligned", codec=codec,
+            parallel_local=fast, zero_copy=fast,
+        )
+    )
+    save_s: List[float] = []
+    try:
+        for step in range(1, repeats + 1):
+            t0 = time.perf_counter()
+            st = mgr.save(step, state)
+            save_s.append(time.perf_counter() - t0)
+            mgr.wait()  # drain the async flush so repeats don't backpressure
+            assert not mgr.flush_errors, mgr.flush_errors
+        best = int(np.argmin(save_s))
+        return {
+            "save_s": round(min(save_s), 4),
+            "encode_s": round(mgr.stats[best].encode_time, 4),
+            "local_s": round(mgr.stats[best].local_time, 4),
+            "stored_ratio": round(st.stored_bytes / st.raw_bytes, 4),
+        }
+    finally:
+        mgr.close()
+
+
+def bench_codec_save(
+    nodes: int, ppn: int, state_mib: int, repeats: int, *, verbose: bool,
+) -> List[Dict[str, object]]:
+    state = make_state(state_mib * MiB)
+    timings: Dict[str, Dict[str, float]] = {}
+    for path in ("reference", "fast"):
+        with tempfile.TemporaryDirectory() as root:
+            timings[path] = bench_save_path(
+                root, nodes, ppn, state, repeats, fast=(path == "fast")
+            )
+    rows: List[Dict[str, object]] = []
+    for path in ("reference", "fast"):
+        row: Dict[str, object] = {
+            "config": f"{nodes}x{ppn}/{state_mib}MiB/zstd",
+            "kind": "codec_save",
+            "nodes": nodes,
+            "ppn": ppn,
+            "n_ranks": nodes * ppn,
+            "strategy": "stripe_aligned",
+            "codec": "zstd",
+            "impl": default_codec_impl(),
+            "state_bytes": state_mib * MiB,
+            "path": path,
+            **timings[path],
+        }
+        if path == "fast":
+            row["speedup"] = round(
+                timings["reference"]["save_s"] / timings["fast"]["save_s"], 2
+            )
+        rows.append(row)
+        if verbose:
+            extra = f"  speedup={row['speedup']:5.2f}x" if path == "fast" else ""
+            print(
+                f"{row['config']:>28} {path:>9}  save={row['save_s']:7.3f}s  "
+                f"encode={row['encode_s']:7.3f}s  local={row['local_s']:7.3f}s  "
+                f"ratio={row['stored_ratio']:.3f}{extra}",
+                flush=True,
+            )
+    return rows
+
+
+def bench_delta_dirty(
+    nodes: int, ppn: int, state_mib: int, *, verbose: bool,
+) -> List[Dict[str, object]]:
+    """Chunked zstd+delta: save cost / stored bytes vs dirty fraction."""
+    state = make_state(state_mib * MiB)
+    rows: List[Dict[str, object]] = []
+    for frac in DIRTY_FRACS:
+        with tempfile.TemporaryDirectory() as root:
+            mgr = CheckpointManager(
+                CheckpointConfig(
+                    root=root, cluster=theta_like(nodes, ppn),
+                    strategy="stripe_aligned", codec="zstd+delta",
+                    delta_every=8,
+                )
+            )
+            try:
+                st1 = mgr.save(1, state)
+                mgr.wait()
+                # dirty a contiguous `frac` of the state (leaf by leaf
+                # until the budget is spent): the differential-ideal
+                # workload where most chunks stay byte-identical
+                mutated = {k: v.copy() for k, v in state.items()}
+                rng = np.random.default_rng(1)
+                budget = int(sum(len(v) for v in state.values()) * frac)
+                for v in mutated.values():
+                    if budget <= 0:
+                        break
+                    k = min(len(v), budget)
+                    v[:k] += rng.standard_normal(k).astype(np.float32)
+                    budget -= k
+                t0 = time.perf_counter()
+                st2 = mgr.save(2, mutated)
+                dt = time.perf_counter() - t0
+                mgr.wait()
+                assert not mgr.flush_errors, mgr.flush_errors
+                man = mgr._manifest_pfs(2)
+                assert man.base_step == 1
+                base_frac = float(
+                    ((man.chunks.flags & CHUNK_BASE) != 0).mean()
+                )
+                row = {
+                    "config": f"{nodes}x{ppn}/{state_mib}MiB/zstd+delta",
+                    "kind": "delta_dirty",
+                    "nodes": nodes,
+                    "ppn": ppn,
+                    "n_ranks": nodes * ppn,
+                    "state_bytes": state_mib * MiB,
+                    "dirty_frac": frac,
+                    "save_s": round(dt, 4),
+                    "stored_ratio": round(st2.stored_bytes / max(1, st1.stored_bytes), 4),
+                    "base_ref_frac": round(base_frac, 4),
+                }
+                rows.append(row)
+                if verbose:
+                    print(
+                        f"{row['config']:>28} dirty={frac:5.2f}  "
+                        f"save={row['save_s']:7.3f}s  "
+                        f"stored={row['stored_ratio']:6.3f}x of full  "
+                        f"base_ref={row['base_ref_frac']:5.1%}",
+                        flush=True,
+                    )
+            finally:
+                mgr.close()
+    return rows
+
+
+def bench_partial_restore(
+    nodes: int, ppn: int, state_mib: int, *, verbose: bool,
+) -> List[Dict[str, object]]:
+    """restore_leaves of one small leaf out of a chunked zstd checkpoint."""
+    state = make_state(state_mib * MiB)
+    state["probe"] = np.arange(1024, dtype=np.float32)   # the serving leaf
+    with tempfile.TemporaryDirectory() as root:
+        mgr = CheckpointManager(
+            CheckpointConfig(
+                root=root, cluster=theta_like(nodes, ppn),
+                strategy="stripe_aligned", codec="zstd",
+            )
+        )
+        try:
+            st = mgr.save(1, state)
+            mgr.wait()
+            assert not mgr.flush_errors, mgr.flush_errors
+            mgr._l0 = None                     # force the PFS path
+            t0 = time.perf_counter()
+            _, got = mgr.restore_leaves(["['probe']"])
+            dt = time.perf_counter() - t0
+            np.testing.assert_array_equal(got["['probe']"], state["probe"])
+            rr = mgr.last_read_result
+            row = {
+                "config": f"{nodes}x{ppn}/{state_mib}MiB/zstd",
+                "kind": "partial_restore_compressed",
+                "nodes": nodes,
+                "ppn": ppn,
+                "n_ranks": nodes * ppn,
+                "state_bytes": len(state) and st.raw_bytes,
+                "restore_s": round(dt, 4),
+                "bytes_read": int(rr.bytes_read),
+                "stored_total": int(st.stored_bytes),
+                "read_frac": round(rr.bytes_read / max(1, st.stored_bytes), 6),
+            }
+            if verbose:
+                print(
+                    f"{row['config']:>28} partial  restore={row['restore_s']:7.3f}s  "
+                    f"read {row['bytes_read']/1e3:.1f} kB of "
+                    f"{row['stored_total']/1e6:.1f} MB stored "
+                    f"({row['read_frac']:.2%})",
+                    flush=True,
+                )
+            return [row]
+        finally:
+            mgr.close()
+
+
+def run(
+    configs: List[Tuple[int, int, int, int]], *, quick: bool, verbose: bool = True,
+) -> List[Dict[str, object]]:
+    rows: List[Dict[str, object]] = []
+    for nodes, ppn, mib, repeats in configs:
+        rows.extend(bench_codec_save(nodes, ppn, mib, repeats, verbose=verbose))
+    d_nodes, d_ppn, d_mib = (2, 2, 8) if quick else (8, 4, 64)
+    rows.extend(bench_delta_dirty(d_nodes, d_ppn, d_mib, verbose=verbose))
+    rows.extend(bench_partial_restore(d_nodes, d_ppn, d_mib, verbose=verbose))
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true", help="CI smoke configs")
+    p.add_argument("--out", help="write JSON rows to this path")
+    args = p.parse_args(argv)
+
+    configs = QUICK_CONFIGS if args.quick else FULL_CONFIGS
+    rows = run(configs, quick=args.quick)
+    doc = {
+        "benchmark": "codec_phase",
+        "quick": bool(args.quick),
+        "impl": default_codec_impl(),
+        "rows": rows,
+    }
+    text = json.dumps(doc, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}")
+    else:
+        json.dump(doc, sys.stdout, indent=2)
+        print()
+
+
+if __name__ == "__main__":
+    main()

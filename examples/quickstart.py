@@ -42,12 +42,11 @@ for strat in ("file_per_process", "posix", "mpiio", "stripe_aligned"):
           f"flush {rep.flush_bw/1e9:6.1f} GB/s   files {rep.n_files}")
 
 # --- 3. the real engine: save + elastic/partial restore ------------------
-try:
-    import zstandard  # noqa: F401  (optional dep; CI installs it)
+from repro.core import default_codec_impl
 
-    codec = "zstd"
-except ImportError:
-    codec = "none"
+# chunk-framed compression works everywhere: zstandard when installed,
+# the stdlib-zlib fallback otherwise (recorded in the manifest)
+codec = "zstd"
 
 state = {"params": {"w": jnp.arange(1 << 18, dtype=jnp.float32)},
          "step": jnp.array(3)}
@@ -60,7 +59,8 @@ with tempfile.TemporaryDirectory() as root:
     mgr.wait()
     mgr.close()
     print(f"saved {st.raw_bytes/1e6:.1f} MB -> {st.stored_bytes/1e6:.1f} MB "
-          f"(local {st.local_time*1e3:.1f} ms, codec={codec})")
+          f"(local {st.local_time*1e3:.1f} ms, codec={codec}, "
+          f"backend={default_codec_impl()})")
 
     # elastic restart: the machine shrank to 3x1, L1 is gone — the PFS
     # checkpoint restores through one aggregated ReadPlan.

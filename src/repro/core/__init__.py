@@ -25,6 +25,7 @@ from repro.core.plan import (
     assign_readers,
     build_read_plan,
     count_false_sharing,
+    merge_intervals,
     stored_space_offsets,
     validate_plan,
     validate_plan_reference,
@@ -37,7 +38,17 @@ from repro.core.prefix_sum import (
     exclusive_prefix_sum,
     piggybacked_scan,
 )
-from repro.core.serialize import EncodedState, Manifest, Placement, encode_state, serialize_tree
+from repro.core.serialize import (
+    ChunkTable,
+    EncodedState,
+    Manifest,
+    Placement,
+    decode_state,
+    decode_stream,
+    default_codec_impl,
+    encode_state,
+    serialize_tree,
+)
 from repro.core.sim import FlushSimulator, SimReport, simulate_flush
 from repro.core.strategies import STRATEGIES, make_plan
 
@@ -60,14 +71,19 @@ __all__ = [
     "WriteItem",
     "assign_readers",
     "build_read_plan",
+    "merge_intervals",
     "stored_space_offsets",
     "validate_plan",
     "validate_plan_reference",
     "validate_read_plan",
     "count_false_sharing",
+    "ChunkTable",
     "EncodedState",
     "Manifest",
     "Placement",
+    "decode_state",
+    "decode_stream",
+    "default_codec_impl",
     "encode_state",
     "serialize_tree",
     "LeaderAssignment",

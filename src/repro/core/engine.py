@@ -52,14 +52,27 @@ import jax
 import numpy as np
 
 from repro.core.cluster import ClusterSpec
-from repro.core.plan import FlushPlan, assign_readers, build_read_plan
+from repro.core.plan import (
+    FlushPlan,
+    assign_readers,
+    build_read_plan,
+    merge_intervals,
+)
 from repro.core.serialize import (
+    CHUNK_BASE,
+    CHUNK_DELTA,
+    DEFAULT_CHUNK_SIZE,
+    Buffer,
     EncodedState,
     Manifest,
-    decode_blob,
+    decode_blob_reference,
+    decode_chunk_into,
     decode_state,
+    decode_stream,
+    default_codec_impl,
     deserialize_tree,
     encode_state,
+    _run_grouped,
 )
 from repro.core.storage import (
     FlushResult,
@@ -82,6 +95,12 @@ class CheckpointConfig:
     strategy_kwargs: Dict[str, Any] = dfield(default_factory=dict)
     io_threads: int = 2
     codec: str = "none"                # none | zstd | zstd+delta
+    # Chunk framing of compressed rank blobs: chunks of this size are
+    # compressed/decompressed in parallel, delta-skipped when unchanged,
+    # and fetched individually by partial restore.  0 = the seed
+    # whole-blob framing (one compressor call per rank blob; also what
+    # legacy checkpoints on disk use).
+    chunk_size: int = DEFAULT_CHUNK_SIZE
     precodec: str = "none"             # none | int8 (device-side, lossy)
     delta_every: int = 4               # full ckpt cadence under zstd+delta
     partner_replication: bool = False  # L1 peer replica (node-failure cover)
@@ -212,6 +231,7 @@ class CheckpointManager:
             enc = encode_state(
                 step, state, self.cluster, codec=cfg.codec, base=base,
                 pool=pool, rank_sink=drain_rank if fused else None,
+                chunk_size=cfg.chunk_size,
             )
         else:
             from repro.core.serialize_ref import encode_state_reference
@@ -275,17 +295,25 @@ class CheckpointManager:
 
     def _local_pool(self) -> ThreadPoolExecutor:
         """One shared pool for the whole local phase — serialize leaf
-        copies, fused encode+CRC+L1 tasks, batched directory fsyncs.
+        copies, fused encode+CRC+L1 tasks, batched directory fsyncs —
+        and for restore-side decode.
 
         Deliberately **not** the executor's flush pool: ``save()`` is
         the blocking window, and its tasks must never queue in FIFO
         order behind a backlog of async PFS writes from earlier steps.
-        Sized for I/O latency rather than CPU count — the fused rank
-        tasks spend most of their time in GIL-free file writes."""
+        Sizing is codec-aware: with codec ``none`` the fused rank tasks
+        spend their time in GIL-free file writes, so the pool is sized
+        for I/O latency; with compression on they alternate short
+        GIL-holding bookkeeping with GIL-free compressor calls, and
+        oversubscribing the physical cores just convoys the GIL — so
+        the pool tracks core count instead."""
         if self._local_exec is None:
-            workers = self.cfg.local_workers or min(
-                16, max(8, 2 * (os.cpu_count() or 4))
-            )
+            cpus = os.cpu_count() or 4
+            if self.cfg.codec == "none":
+                auto = min(16, max(8, 2 * cpus))
+            else:
+                auto = min(16, max(4, cpus + 2))
+            workers = self.cfg.local_workers or auto
             self._local_exec = ThreadPoolExecutor(
                 max_workers=workers, thread_name_prefix="ckpt-local"
             )
@@ -475,18 +503,24 @@ class CheckpointManager:
             return quant_target_like(target)
         return target
 
-    @staticmethod
-    def _maybe_dequant(man: Manifest, tree: Any, target: Any) -> Any:
+    def _maybe_dequant(self, man: Manifest, tree: Any, target: Any) -> Any:
         if man.precodec == "int8":
             from repro.core.precodec import dequantize_tree
 
-            return dequantize_tree(tree, target)
+            return dequantize_tree(tree, target, pool=self._decode_pool())
         return tree
+
+    def _decode_pool(self) -> Optional[ThreadPoolExecutor]:
+        """Pool for restore-side work (chunk decompress, CRC, dequant):
+        the manager's own local pool — restores never queue behind async
+        flush traffic either.  ``parallel_local=False`` keeps the seed's
+        sequential decode."""
+        return self._local_pool() if self.cfg.parallel_local else None
 
     def _read_blobs_pfs(
         self, man: Manifest, step: int, ranks: Optional[List[int]] = None,
-        *, record: bool = True,
-    ) -> Dict[int, bytes]:
+        *, record: bool = True, verify: bool = False,
+    ) -> Dict[int, bytearray]:
         """Fetch stored rank blobs through ONE aggregated :class:`ReadPlan`.
 
         The read-side twin of the flush: the manifest's placement is
@@ -496,6 +530,13 @@ class CheckpointManager:
         supplies the reader assignment, so an N-rank save restores onto M
         consumer nodes with balanced ranged preads instead of N
         sequential whole-blob fetches.
+
+        ``verify=True`` hangs the manifest CRC check on the executor's
+        ``on_request`` hook, so each blob is verified *on the worker
+        pool as it arrives* — integrity work overlaps the remaining
+        preads instead of running as a serial pass in ``decode_state``
+        afterwards.  All mismatches are collected and raised together
+        after the plan drains.
         """
         layout = man.file_layout()
         offsets = man.stored_offsets()
@@ -507,21 +548,39 @@ class CheckpointManager:
             else np.asarray(sorted(ranks), np.int64)
         )
         rp = build_read_plan(layout, offsets[sel], sizes[sel], readers[sel])
-        bufs, res = self.executor.execute_read_plan(rp, step)
+        on_request = None
+        bad: List[int] = []
+        if verify:
+            expected = [man.ranks[int(r)].crc for r in sel.tolist()]
+
+            def on_request(i: int, buf: bytearray) -> None:
+                if crc32(buf) != expected[i]:
+                    bad.append(int(sel[i]))  # list.append is atomic
+
+        bufs, res = self.executor.execute_read_plan(
+            rp, step, on_request=on_request
+        )
         if record:  # the scrub passes False so restore telemetry survives
             self.last_read_result = res
-        return {int(r): bytes(b) for r, b in zip(sel.tolist(), bufs)}
+        if bad:
+            raise IOError(
+                f"rank {sorted(bad)[0]}: checksum mismatch on arrival "
+                f"({len(bad)} blob(s) failed)"
+            )
+        return {int(r): b for r, b in zip(sel.tolist(), bufs)}
 
     def _restore_from_pfs(self, step: int, target: Any) -> Any:
         man = self._manifest_pfs(step)
-        by_rank = self._read_blobs_pfs(man, step)
+        verify = self.cfg.verify_on_restore
+        by_rank = self._read_blobs_pfs(man, step, verify=verify)
         blobs = [by_rank[r] for r in range(man.world_size)]
         base_stream = (
             self._load_stream(man.base_step) if man.base_step is not None else None
         )
         tree = decode_state(
             man, blobs, self._decode_target(man, target), base_stream=base_stream,
-            verify=self.cfg.verify_on_restore,
+            verify=False,  # arrival hook above already CRC-checked each blob
+            pool=self._decode_pool(),
         )
         return self._maybe_dequant(man, tree, target)
 
@@ -533,7 +592,7 @@ class CheckpointManager:
         )
         tree = decode_state(
             man, blobs, self._decode_target(man, target), base_stream=base_stream,
-            verify=self.cfg.verify_on_restore,
+            verify=self.cfg.verify_on_restore, pool=self._decode_pool(),
         )
         return self._maybe_dequant(man, tree, target)
 
@@ -569,41 +628,47 @@ class CheckpointManager:
             node, step, rank, offset, size, partner=partner
         )
 
-    def _load_stream(self, step: int) -> bytes:
-        """Raw logical stream of ``step`` (resolving delta chains)."""
+    def _load_stream(self, step: int) -> Buffer:
+        """Raw logical stream of ``step`` (resolving delta chains).
+
+        Decodes through :func:`~repro.core.serialize.decode_stream`
+        (preallocated buffer, chunk-parallel on the local pool), with
+        PFS arrival-CRC verification; a damaged level falls through to
+        the next one instead of aborting the chain.
+        """
         with self._lock:
             if self._l0 is not None and self._l0.step == step:
                 return self._l0.stream
             if self._last_full is not None and self._last_full.step == step:
                 return self._last_full.stream
-        for getter, blobber in (
-            (self._manifest_pfs,
-             lambda m, s: list(self._read_blobs_pfs(m, s).values())),
-            (self._manifest_local, self._local_blobs),
+        verify = self.cfg.verify_on_restore
+        errors: List[str] = []
+        for getter, pfs in (
+            (self._manifest_pfs, True),
+            (self._manifest_local, False),
         ):
             try:
                 man = getter(step)
-                blobs = blobber(man, step)
-            except Exception:
-                continue
-            base = self._load_stream(man.base_step) if man.base_step is not None else None
-            parts = []
-            for entry, blob in zip(man.ranks, blobs):
-                if self.cfg.verify_on_restore and crc32(blob) != entry.crc:
-                    raise IOError(f"step {step} rank {entry.rank}: bad crc")
-                seg_base = (
-                    base[entry.offset : entry.offset + entry.raw_size]
-                    if base is not None
+                if pfs:
+                    by_rank = self._read_blobs_pfs(man, step, verify=verify)
+                    blobs: List[Any] = [by_rank[r] for r in range(man.world_size)]
+                else:
+                    blobs = self._local_blobs(man, step)
+                base = (
+                    self._load_stream(man.base_step)
+                    if man.base_step is not None
                     else None
                 )
-                parts.append(
-                    decode_blob(
-                        blob, man.codec, entry.raw_size, seg_base,
-                        has_base=man.base_step is not None,
-                    )
+                return decode_stream(
+                    man, blobs, base_stream=base,
+                    verify=verify and not pfs,  # pfs: verified on arrival
+                    pool=self._decode_pool(),
                 )
-            return b"".join(parts)
-        raise IOError(f"cannot load base stream for step {step}")
+            except Exception as e:
+                errors.append(f"{'pfs' if pfs else 'local'}: {e!r}")
+        raise IOError(
+            f"cannot load base stream for step {step}; " + "; ".join(errors)
+        )
 
     # -------------------------------------------------------- partial restore
 
@@ -616,13 +681,18 @@ class CheckpointManager:
         With ``codec="none"`` this reads *exactly* the leaves' byte
         ranges from the aggregated files (a partial :class:`ReadPlan`) —
         the serving-fleet workload: pull just the params out of a
-        multi-GB train-state checkpoint.  With a compression codec, only
-        whole stored blobs decode, so the covering producer blobs are
-        read (still one aggregated plan) and sliced after decoding.
+        multi-GB train-state checkpoint.  With a chunk-framed
+        compression codec, only the *chunks* covering those ranges are
+        read and decompressed (base-referencing delta chunks recurse
+        into the base step for just their own ranges); legacy
+        whole-blob checkpoints fall back to reading the covering
+        producer blobs (still one aggregated plan each way).
 
-        Integrity: whole-blob paths verify the per-blob CRC; sub-blob
-        ranged reads cannot (CRCs are per stored blob) — run
-        :meth:`validate` scrubs for cold-checkpoint assurance.
+        Integrity: whole-blob paths verify the per-blob CRC and
+        chunk-framed paths the per-chunk CRCs, so compressed partial
+        restores are fully verified; only codec-``none`` sub-blob
+        ranged reads have no checksum of their own — run
+        :meth:`validate` scrubs for cold-checkpoint assurance there.
 
         Falls back PFS -> L1 like :meth:`restore`.  Checkpoints saved
         with a ``precodec`` are rejected (the stored leaves are the
@@ -684,74 +754,256 @@ class CheckpointManager:
             )
         entries = {l.name: l for l in man.leaves}
         ranges = man.leaf_ranges(names)
-        raw: Dict[str, bytes] = {}
-        if man.codec == "none":
-            # stored == raw byte for byte: read exactly the leaf ranges.
-            if pfs:
-                offs = [a for _, a, _ in ranges]
-                szs = [s for _, _, s in ranges]
-                readers = assign_readers(szs, self.cluster.n_nodes)
-                rp = build_read_plan(man.file_layout(), offs, szs, readers)
-                bufs, res = self.executor.execute_read_plan(rp, step)
-                self.last_read_result = res
-                for (n, _, _), b in zip(ranges, bufs):
-                    raw[n] = bytes(b)
-            else:
-                for n, a, size in ranges:
-                    parts = []
-                    for rk in man.ranks_covering(a, a + size):
-                        e = man.ranks[rk]
-                        lo = max(a, e.offset)
-                        hi = min(a + size, e.offset + e.raw_size)
-                        parts.append(
-                            self._local_slice(man, step, rk, lo - e.offset, hi - lo)
-                        )
-                    raw[n] = b"".join(parts)
-        else:
-            # compression: whole covering blobs, one aggregated plan.
-            need = sorted(
-                {rk for _, a, s in ranges for rk in man.ranks_covering(a, a + s)}
-            )
-            if pfs:
-                blobs = self._read_blobs_pfs(man, step, ranks=need)
-            else:
-                blobs = {rk: self._local_blob(man, step, rk) for rk in need}
-            base = (
-                self._load_stream(man.base_step)
-                if man.base_step is not None
-                else None
-            )
-            seg: Dict[int, bytes] = {}
-            for rk in need:
-                e = man.ranks[rk]
-                if self.cfg.verify_on_restore and crc32(blobs[rk]) != e.crc:
-                    raise IOError(f"rank {rk}: checksum mismatch")
-                seg_base = (
-                    base[e.offset : e.offset + e.raw_size]
-                    if base is not None
-                    else None
-                )
-                seg[rk] = decode_blob(
-                    blobs[rk], man.codec, e.raw_size, seg_base,
-                    has_base=man.base_step is not None,
-                )
-            for n, a, size in ranges:
-                parts = []
-                for rk in man.ranks_covering(a, a + size):
-                    e = man.ranks[rk]
-                    lo = max(a, e.offset)
-                    hi = min(a + size, e.offset + e.raw_size)
-                    parts.append(seg[rk][lo - e.offset : hi - e.offset])
-                raw[n] = b"".join(parts)
+        segs = self._raw_segments(
+            man, step, [(a, a + s) for _, a, s in ranges], pfs=pfs
+        )
         out: Dict[str, np.ndarray] = {}
-        for n, _, size in ranges:
+        for (n, _, size), seg in zip(ranges, segs):
             e = entries[n]
-            if len(raw[n]) != size:
-                raise IOError(f"leaf {n}: read {len(raw[n])} of {size} bytes")
+            if len(seg) != size:
+                raise IOError(f"leaf {n}: read {len(seg)} of {size} bytes")
             out[n] = (
-                np.frombuffer(raw[n], np.dtype(e.dtype)).reshape(e.shape).copy()
+                np.frombuffer(seg, np.dtype(e.dtype)).reshape(e.shape).copy()
             )
         return out
+
+    def _raw_segments(
+        self,
+        man: Manifest,
+        step: int,
+        intervals: List[Tuple[int, int]],
+        *,
+        pfs: bool,
+    ) -> List[Buffer]:
+        """Bytes of arbitrary raw-space intervals of one checkpoint,
+        reading as little stored data as the manifest's framing allows.
+
+        * codec ``none`` — stored == raw byte for byte: exactly the
+          requested ranges (one aggregated plan on PFS, ranged L1
+          slices locally).
+        * chunk-framed compression — only the *chunks* covering the
+          intervals: their stored extents merge into minimal requests
+          (:func:`~repro.core.plan.merge_intervals`) for one aggregated
+          plan (PFS) or ranged L1 slices (local); each fetched chunk is
+          CRC-verified individually — sub-blob reads are no longer an
+          integrity blind spot — and base-referencing/delta chunks pull
+          just their own byte ranges out of the base step, recursively,
+          instead of materializing the whole base stream.
+        * legacy whole-blob compression — the covering rank blobs (the
+          pre-chunking behaviour).
+        """
+        if man.codec == "none":
+            return self._raw_segments_codec_none(man, step, intervals, pfs=pfs)
+        if man.chunks is not None:
+            return self._raw_segments_chunked(man, step, intervals, pfs=pfs)
+        return self._raw_segments_whole_blob(man, step, intervals, pfs=pfs)
+
+    def _raw_segments_codec_none(
+        self, man, step, intervals, *, pfs: bool
+    ) -> List[Buffer]:
+        if pfs:
+            offs = [a for a, _ in intervals]
+            szs = [b - a for a, b in intervals]
+            readers = assign_readers(szs, self.cluster.n_nodes)
+            rp = build_read_plan(man.file_layout(), offs, szs, readers)
+            bufs, res = self.executor.execute_read_plan(rp, step)
+            self.last_read_result = res
+            return bufs
+        out: List[Buffer] = []
+        for a, b in intervals:
+            parts = []
+            for rk in man.ranks_covering(a, b):
+                e = man.ranks[rk]
+                lo, hi = max(a, e.offset), min(b, e.offset + e.raw_size)
+                parts.append(
+                    self._local_slice(man, step, rk, lo - e.offset, hi - lo)
+                )
+            out.append(b"".join(parts))
+        return out
+
+    def _raw_segments_chunked(
+        self, man, step, intervals, *, pfs: bool
+    ) -> List[Buffer]:
+        table = man.chunks
+        # 1. chunk rows covering the intervals (global row indices)
+        need: List[np.ndarray] = []
+        for a, b in intervals:
+            for rk in man.ranks_covering(a, b):
+                e = man.ranks[rk]
+                need.append(
+                    table.covering(rk, max(a, e.offset) - e.offset,
+                                   min(b, e.offset + e.raw_size) - e.offset)
+                )
+        rows = np.unique(np.concatenate(need)) if need else np.empty(0, np.int64)
+        rank_of = np.searchsorted(table.rank_starts, rows, side="right") - 1
+
+        # 2. fetch the stored payloads of every non-base-ref chunk
+        payloads: Dict[int, Buffer] = {}
+        stored = rows[table.stored_len[rows] > 0]
+        if pfs:
+            offsets = man.stored_offsets()
+            g_off = (
+                offsets[np.searchsorted(table.rank_starts, stored, side="right") - 1]
+                + table.stored_off[stored]
+            )
+            g_len = table.stored_len[stored]
+            req_start, req_size = merge_intervals(g_off, g_len)
+            readers = assign_readers(req_size, self.cluster.n_nodes)
+            rp = build_read_plan(man.file_layout(), req_start, req_size, readers)
+            bufs, res = self.executor.execute_read_plan(rp, step)
+            self.last_read_result = res
+            views = [memoryview(b) for b in bufs]
+            req_of = np.searchsorted(req_start, g_off, side="right") - 1
+            for row, q, off, ln in zip(
+                stored.tolist(), req_of.tolist(),
+                (g_off - req_start[req_of]).tolist(), g_len.tolist(),
+            ):
+                payloads[row] = views[q][off : off + ln]
+        else:
+            for row, rk in zip(stored.tolist(),
+                               (np.searchsorted(table.rank_starts, stored,
+                                                side="right") - 1).tolist()):
+                payloads[row] = self._local_slice(
+                    man, step, rk,
+                    int(table.stored_off[row]), int(table.stored_len[row]),
+                )
+
+        # 3. base byte ranges for base-referencing / delta chunks —
+        #    recursively partial against the base step (never the whole
+        #    base stream)
+        base_rows = rows[
+            (table.flags[rows] & (CHUNK_BASE | CHUNK_DELTA)) != 0
+        ]
+        base_segs: Dict[int, Buffer] = {}
+        if len(base_rows):
+            if man.base_step is None:
+                raise IOError("base-referencing chunks without a base step")
+            br_rank = np.searchsorted(table.rank_starts, base_rows, side="right") - 1
+            b_ivs = [
+                (man.ranks[int(rk)].offset + int(table.raw_off[row]),
+                 man.ranks[int(rk)].offset + int(table.raw_off[row])
+                 + int(table.raw_len[row]))
+                for row, rk in zip(base_rows.tolist(), br_rank.tolist())
+            ]
+            # the recursive base fetch runs its own read plans; restore
+            # *this* step's stats afterwards so last_read_result keeps
+            # describing the plan the caller asked about
+            outer_rr = self.last_read_result
+            try:
+                for row, seg in zip(
+                    base_rows.tolist(),
+                    self._base_raw_segments(man.base_step, b_ivs),
+                ):
+                    base_segs[row] = seg
+            finally:
+                self.last_read_result = outer_rr
+
+        # 4. decode each needed chunk (pooled: disjoint outputs, the
+        #    decompressor releases the GIL) with per-chunk CRC verify
+        verify = self.cfg.verify_on_restore
+        impl = man.codec_impl or default_codec_impl()
+        decoded: Dict[int, np.ndarray] = {
+            int(row): np.empty(int(table.raw_len[row]), np.uint8)
+            for row in rows.tolist()
+        }
+
+        def decode_row(row: int) -> None:
+            rl = int(table.raw_len[row])
+            decode_chunk_into(
+                decoded[row],
+                payloads.get(row, b""),
+                int(table.flags[row]),
+                int(table.crc[row]),
+                rl,
+                base_segs.get(row),
+                impl,
+                verify=verify,
+                what=f"rank {int(rank_of[np.searchsorted(rows, row)])} chunk",
+            )
+
+        _run_grouped(self._decode_pool(), decode_row, rows.tolist())
+
+        # 5. assemble each interval from the decoded chunks
+        out: List[Buffer] = []
+        for a, b in intervals:
+            seg = np.empty(b - a, np.uint8)
+            for rk in man.ranks_covering(a, b):
+                e = man.ranks[rk]
+                lo, hi = max(a, e.offset), min(b, e.offset + e.raw_size)
+                for row in table.covering(rk, lo - e.offset, hi - e.offset).tolist():
+                    g = e.offset + int(table.raw_off[row])  # chunk's global start
+                    cs = max(lo, g)
+                    ce = min(hi, g + int(table.raw_len[row]))
+                    seg[cs - a : ce - a] = decoded[row][cs - g : ce - g]
+            out.append(seg)
+        return out
+
+    def _raw_segments_whole_blob(
+        self, man, step, intervals, *, pfs: bool
+    ) -> List[Buffer]:
+        """Legacy (pre-chunking) compressed manifests: whole covering
+        blobs, one aggregated plan."""
+        need = sorted(
+            {rk for a, b in intervals for rk in man.ranks_covering(a, b)}
+        )
+        verify = self.cfg.verify_on_restore
+        if pfs:
+            blobs = self._read_blobs_pfs(man, step, ranks=need, verify=verify)
+        else:
+            blobs = {rk: self._local_blob(man, step, rk) for rk in need}
+        base = (
+            self._load_stream(man.base_step)
+            if man.base_step is not None
+            else None
+        )
+        seg: Dict[int, bytes] = {}
+        for rk in need:
+            e = man.ranks[rk]
+            if verify and not pfs and crc32(blobs[rk]) != e.crc:
+                raise IOError(f"rank {rk}: checksum mismatch")
+            seg_base = (
+                base[e.offset : e.offset + e.raw_size]
+                if base is not None
+                else None
+            )
+            seg[rk] = decode_blob_reference(
+                blobs[rk], man.codec, e.raw_size, seg_base,
+                has_base=man.base_step is not None,
+                impl=man.codec_impl or None,
+            )
+        out: List[Buffer] = []
+        for a, b in intervals:
+            parts = []
+            for rk in man.ranks_covering(a, b):
+                e = man.ranks[rk]
+                lo, hi = max(a, e.offset), min(b, e.offset + e.raw_size)
+                parts.append(seg[rk][lo - e.offset : hi - e.offset])
+            out.append(b"".join(parts))
+        return out
+
+    def _base_raw_segments(
+        self, base_step: int, intervals: List[Tuple[int, int]]
+    ) -> List[Buffer]:
+        """Raw byte ranges of a delta base, cheapest source first: the
+        in-memory L0/last-full twin, else a recursive partial read of
+        the base checkpoint (PFS then L1), else the full stream."""
+        with self._lock:
+            for cand in (self._l0, self._last_full):
+                if cand is not None and cand.step == base_step:
+                    stream = cand.stream
+                    return [stream[a:b] for a, b in intervals]
+        errors: List[str] = []
+        for getter, pfs in (
+            (self._manifest_pfs, True),
+            (self._manifest_local, False),
+        ):
+            try:
+                bman = getter(base_step)
+                return self._raw_segments(bman, base_step, intervals, pfs=pfs)
+            except Exception as e:
+                errors.append(repr(e))
+        stream = self._load_stream(base_step)  # last resort (raises if gone)
+        return [stream[a:b] for a, b in intervals]
 
     # ----------------------------------------------------------------- scrub
 

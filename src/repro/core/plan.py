@@ -66,6 +66,14 @@ and :func:`build_read_plan` maps them onto file extents as an array
 program (``np.searchsorted`` over the layout's ``start`` column — no
 per-item Python loops), so planning a 100k-rank restore is milliseconds.
 
+Chunk-framed checkpoints (see :mod:`repro.core.serialize`) need nothing
+special here: a chunk's stored payload is an ordinary stored-space
+interval (``rank stored offset + chunk stored_off``), so partial restore
+under compression asks for exactly the chunks covering the requested
+leaves — merged into minimal requests by :func:`merge_intervals` — and
+the same planner/validator/executor machinery serves whole-blob and
+chunk-granular reads alike.
+
 :class:`ReadColumns` (parallel int64; one row per ranged ``pread``):
     * ``reader``      — consumer-side node issuing the read (work unit
       owner for the thread pool; the read twin of ``backend``)
@@ -1026,6 +1034,39 @@ class ReadPlan:
     def reads_per_reader(self) -> Dict[int, int]:
         u, c = np.unique(self.reads.reader, return_counts=True)
         return dict(zip(u.tolist(), c.tolist()))
+
+
+def merge_intervals(
+    start: Sequence[int], size: Sequence[int]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Union of half-open intervals ``[start_i, start_i + size_i)``.
+
+    Returns sorted, disjoint, merged ``(starts, sizes)``; zero-size
+    inputs are dropped.  Pure array program (sort + running-max
+    boundary pass).  The chunk-granular restore path uses this to turn
+    the stored-space extents of the needed chunks into a minimal set of
+    :func:`build_read_plan` requests — adjacent chunks of one rank
+    coalesce into a single ranged request before the planner ever sees
+    them.
+    """
+    a = _i64(start)
+    s = _i64(size)
+    if len(a) != len(s):
+        raise PlanError("merge_intervals: start and size length mismatch")
+    keep = s > 0
+    a, s = a[keep], s[keep]
+    if not len(a):
+        z = np.empty(0, np.int64)
+        return z, z
+    order = np.argsort(a, kind="stable")
+    a, b = a[order], (a + s)[order]
+    run_end = np.maximum.accumulate(b)
+    new_seg = np.empty(len(a), bool)
+    new_seg[0] = True
+    new_seg[1:] = a[1:] > run_end[:-1]
+    starts = a[new_seg]
+    ends = np.maximum.reduceat(b, np.flatnonzero(new_seg))
+    return starts, ends - starts
 
 
 def assign_readers(stored_sizes: Sequence[int], n_readers: int) -> np.ndarray:

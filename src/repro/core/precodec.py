@@ -64,8 +64,59 @@ def quant_target_like(target: Any) -> Any:
     return jax.tree_util.tree_map(f, target)
 
 
-def dequantize_tree(qtree: Any, target: Any) -> Any:
-    """Invert ``quantize_tree`` into ``target``'s shapes/dtypes."""
+def _dequantize_leaf_np(q: Any, s: Any, t: Any) -> np.ndarray:
+    """Vectorized host-side dequant of one leaf: ``q * s`` per block.
+
+    Bit-identical to the kernel/oracle result (both are a plain f32
+    multiply per element), but a single NumPy expression instead of a
+    jit dispatch + device round trip per leaf — the restore path is on
+    the host anyway, where the D2H-side kernel buys nothing.
+    """
+    n = int(np.prod(np.shape(t))) if np.shape(t) else 1
+    x = np.asarray(q, np.float32) * np.asarray(s, np.float32)[:, None]
+    return (
+        x.reshape(-1)[:n]
+        .reshape(np.shape(t))
+        .astype(np.dtype(getattr(t, "dtype", np.float32)))
+    )
+
+
+def dequantize_tree(qtree: Any, target: Any, *, pool: Any = None) -> Any:
+    """Invert ``quantize_tree`` into ``target``'s shapes/dtypes.
+
+    Vectorized per leaf (one blockwise ``q * s`` NumPy expression) and —
+    given ``pool`` — parallel across leaves: the block multiplies and
+    astype copies release the GIL, so a many-leaf train state
+    dequantizes at memory bandwidth instead of crawling through a
+    serial per-leaf jit loop.  The seed per-leaf kernel loop survives
+    as :func:`dequantize_tree_reference`, the executable spec the
+    vectorized path is tested bit-identical against.
+    """
+    tleaves, tdef = jax.tree_util.tree_flatten(target)
+    qleaves = jax.tree_util.tree_leaves(
+        qtree, is_leaf=lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+    )
+    if len(tleaves) != len(qleaves):
+        raise ValueError("quantized tree does not match target structure")
+
+    def one(job):
+        t, q = job
+        if isinstance(q, dict):
+            return _dequantize_leaf_np(q["q"], q["s"], t)
+        return q
+
+    jobs = list(zip(tleaves, qleaves))
+    if pool is not None and len(jobs) > 1:
+        out = list(pool.map(one, jobs))
+    else:
+        out = [one(j) for j in jobs]
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def dequantize_tree_reference(qtree: Any, target: Any) -> Any:
+    """Seed restore path: per-leaf Pallas ``dequantize`` dispatches with
+    a reshape/astype copy per leaf.  Kept as the executable spec for
+    :func:`dequantize_tree`."""
     tleaves, tdef = jax.tree_util.tree_flatten(target)
     qleaves = jax.tree_util.tree_leaves(
         qtree, is_leaf=lambda x: isinstance(x, dict) and set(x) == {"q", "s"}

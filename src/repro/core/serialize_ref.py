@@ -98,6 +98,8 @@ def encode_state_reference(
                 crc=crc32(bytes(b)),
             )
         )
+    from repro.core.serialize import default_codec_impl
+
     man = Manifest(
         step=step,
         total_raw_bytes=total,
@@ -107,5 +109,8 @@ def encode_state_reference(
         procs_per_node=cluster.procs_per_node,
         leaves=leaves,
         ranks=ranks,
+        # whole-blob framing: chunk_size stays 0, chunks stays None; the
+        # backend is still recorded so decode dispatches correctly
+        codec_impl=default_codec_impl() if codec != "none" else "",
     )
     return EncodedState(step=step, stream=stream, blobs=blobs, manifest=man)

@@ -458,7 +458,8 @@ class RealExecutor:
     # ---- read side --------------------------------------------------------
 
     def execute_read_plan(
-        self, rp: ReadPlan, step: int
+        self, rp: ReadPlan, step: int,
+        *, on_request: Optional[Callable[[int, bytearray], None]] = None,
     ) -> Tuple[List[bytearray], ReadResult]:
         """Run a :class:`ReadPlan` as ranged ``pread``s via the thread pool.
 
@@ -468,11 +469,25 @@ class RealExecutor:
         consumer node does not serialize the restore.  Short reads raise
         ``IOError`` — corruption is then surfaced by the caller's CRC
         check, truncation right here.
+
+        ``on_request(req_idx, buf)``, when given, fires on the worker
+        thread that completes the *last* read of each request — the
+        engine hangs arrival CRC verification here, so integrity checks
+        of early blobs overlap the preads of later ones instead of
+        running as a serial pass after the plan drains.  Exceptions it
+        raises fail the plan like read errors.  Requests needing zero
+        reads (zero-size, or none mapped) fire before the preads start.
         """
         t0 = time.perf_counter()
         sdir = self.step_dir(step)
         bufs = [bytearray(int(n)) for n in rp.req_size.tolist()]
         r = rp.reads
+        remaining = np.bincount(
+            r.dst_req, minlength=rp.n_requests
+        ).astype(np.int64) if len(r) else np.zeros(rp.n_requests, np.int64)
+        if on_request is not None:
+            for q in np.flatnonzero(remaining == 0).tolist():
+                on_request(q, bufs[q])
         if not len(r):
             return bufs, ReadResult(
                 step=step, duration=time.perf_counter() - t0,
@@ -504,6 +519,10 @@ class RealExecutor:
                 with lock:
                     total["bytes"] += size
                     total["reads"] += 1
+                    remaining[req] -= 1
+                    done = on_request is not None and remaining[req] == 0
+                if done:
+                    on_request(req, bufs[req])
 
             n_readers = len(np.unique(r.reader))
             workers = min(16, self.io_threads * max(1, n_readers))

@@ -48,7 +48,6 @@ def test_roundtrip_strategies(tmp_path, strategy):
 
 @pytest.mark.parametrize("codec", ["zstd", "zstd+delta"])
 def test_codecs_roundtrip(tmp_path, codec):
-    pytest.importorskip("zstandard")
     mgr = CheckpointManager(
         CheckpointConfig(
             root=str(tmp_path), cluster=theta_like(2, 2),
@@ -188,7 +187,6 @@ def test_corruption_detected(tmp_path):
 
 
 def test_gc_keeps_n_and_delta_bases(tmp_path):
-    pytest.importorskip("zstandard")
     mgr = CheckpointManager(
         CheckpointConfig(
             root=str(tmp_path), cluster=theta_like(2, 1),

@@ -18,7 +18,6 @@ from repro.train import OptConfig, TrainConfig, init_train_state, make_train_ste
 
 
 def test_full_lifecycle(tmp_path):
-    pytest.importorskip("zstandard")
     cfg = get_smoke_config("qwen1.5-0.5b")
     model = get_model(cfg)
     mesh = make_host_mesh()

@@ -9,7 +9,11 @@ Per-file schema (top level: ``benchmark`` string + non-empty ``rows``):
 * ``BENCH_restore.json`` — read-plan rows + one real elastic restore;
 * ``BENCH_save.json``    — save-phase rows in reference/fast pairs; the
   fast row of the largest geometry must record the ISSUE 3 acceptance
-  bar, ``speedup >= 3``.
+  bar, ``speedup >= 3``;
+* ``BENCH_codec.json``   — codec-phase rows (compressed saves in
+  reference/fast pairs, delta dirty-fraction sweep, compressed partial
+  restore); the fast ``codec_save`` row of the largest geometry must
+  record the ISSUE 4 acceptance bar, ``speedup >= 3``.
 
 Exit code 0 = all good; 1 = any file missing/malformed (messages on
 stderr).  Run as ``python tools/bench_check.py [root]``.
@@ -35,12 +39,25 @@ EXPECTED = {
         {"config", "kind", "n_ranks", "state_bytes", "path", "save_s",
          "encode_s", "local_s"},
     ),
+    "BENCH_codec.json": (
+        "codec_phase",
+        set(),  # rows are heterogeneous; per-kind fields checked below
+    ),
 }
 
 RESTORE_KIND_FIELDS = {
     "full_restore": {"invert_s", "build_s", "validate_s", "n_reads"},
     "partial_restore": {"invert_s", "build_s", "validate_s", "n_reads"},
     "real_elastic_restore": {"restore_s", "partial_restore_s"},
+}
+
+CODEC_KIND_FIELDS = {
+    "codec_save": {"config", "n_ranks", "codec", "state_bytes", "path",
+                   "save_s", "encode_s", "local_s", "stored_ratio"},
+    "delta_dirty": {"config", "n_ranks", "dirty_frac", "save_s",
+                    "stored_ratio", "base_ref_frac"},
+    "partial_restore_compressed": {"config", "n_ranks", "restore_s",
+                                   "bytes_read", "stored_total", "read_frac"},
 }
 
 SAVE_SPEEDUP_BAR = 3.0
@@ -68,18 +85,26 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
         return fail(f"{path.name}: rows must be a non-empty list", errors)
     for i, row in enumerate(rows):
         need = set(fields)
-        if benchmark == "restore_scale":
+        if benchmark in ("restore_scale", "codec_phase"):
+            kinds = (
+                RESTORE_KIND_FIELDS if benchmark == "restore_scale"
+                else CODEC_KIND_FIELDS
+            )
             kind = row.get("kind")
-            if kind not in RESTORE_KIND_FIELDS:
+            if kind not in kinds:
                 fail(f"{path.name} row {i}: unknown kind {kind!r}", errors)
                 continue
-            need = RESTORE_KIND_FIELDS[kind]
+            need = kinds[kind]
         missing = need - set(row)
         if missing:
             fail(f"{path.name} row {i}: missing fields {sorted(missing)}", errors)
 
-    if benchmark == "save_phase" and not errors:
-        fast = [r for r in rows if r.get("path") == "fast"]
+    if benchmark in ("save_phase", "codec_phase") and not errors:
+        fast = [
+            r for r in rows
+            if r.get("path") == "fast"
+            and (benchmark == "save_phase" or r.get("kind") == "codec_save")
+        ]
         if not fast:
             return fail(f"{path.name}: no fast-path rows", errors)
         if any("speedup" not in r for r in fast):
