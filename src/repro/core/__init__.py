@@ -50,6 +50,15 @@ from repro.core.serialize import (
     serialize_tree,
 )
 from repro.core.sim import FlushSimulator, SimReport, simulate_flush
+from repro.core.storage import (
+    CancelToken,
+    FlushCancelled,
+    FlushJournal,
+    FlushResult,
+    LocalStore,
+    RealExecutor,
+    TokenBucket,
+)
 from repro.core.strategies import STRATEGIES, make_plan
 
 __all__ = [
@@ -94,6 +103,13 @@ __all__ = [
     "FlushSimulator",
     "SimReport",
     "simulate_flush",
+    "CancelToken",
+    "FlushCancelled",
+    "FlushJournal",
+    "FlushResult",
+    "LocalStore",
+    "RealExecutor",
+    "TokenBucket",
     "STRATEGIES",
     "make_plan",
 ]

@@ -23,6 +23,41 @@ background worker (the "active backend") and training overlaps it.
 (L2 -> L1 -> L0 -> older steps) on missing/corrupt data — node failures
 mid-flush therefore cost at most one checkpoint interval.
 
+The background flush path is an **adaptive flush runtime** (see
+docs/OPERATIONS.md for the full lifecycle state machine):
+
+* **supersession** (``supersede_stale=True``): when step N+k is
+  enqueued while step N is still queued or mid-flush, N's flush is
+  skipped (queued) or cancelled at a safe request boundary
+  (mid-flight, via a :class:`~repro.core.storage.CancelToken` threaded
+  through ``RealExecutor.execute``) — the PFS only ever converges
+  toward the *newest* state, VELOC-style.  Protected steps are never
+  superseded: full snapshots under ``zstd+delta`` (the ``delta_every``
+  cadence anchors every delta chain needs), every step inside the
+  *live* delta window (deltas chain through their predecessors, so a
+  pending window step is transitively a base of the newest one —
+  window steps only become stale when the next full snapshot opens a
+  new window), and steps inside the ``keep_n`` newest window.
+  Superseded steps stay restorable from L1
+  (and from delta bases) through the normal fallback ladder, and are
+  reported via :attr:`CheckpointManager.superseded_steps` — never as
+  flush errors.
+* **interference-aware throttling**: a global token bucket
+  (``flush_bw_cap`` explicitly, or derived from the cluster's
+  ``app_net_load`` as ``(1 - load) * nic_bw * n_nodes``) caps executor
+  write bandwidth so the drain leaves the application its NIC share —
+  the same policy :mod:`repro.core.sim` prices, so the simulated and
+  real trade-off curves agree.
+* **crash-resumable flushes** (``resumable_flushes=True``): each flush
+  first persists its manifest at ``status="flush_partial"`` (carrying
+  the full columnar placement) and journals every completed extent
+  (:class:`~repro.core.storage.FlushJournal`); a flush interrupted by
+  ``close()``, a fault hook or process death is finished by
+  :meth:`CheckpointManager.resume_flushes` from the last completed
+  extent instead of rewriting the whole checkpoint.  ``restore()``
+  never trusts a ``flush_partial``/``superseded`` manifest — those
+  steps fall back to L1 until resumed.
+
 Elasticity: L2 checkpoints are mesh-agnostic (logical byte stream +
 manifest); a checkpoint saved under one cluster geometry restores under
 any other, and onto any jax mesh via ``sharding_fn``.
@@ -43,10 +78,11 @@ import queue
 import shutil
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field as dfield
 from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -75,10 +111,14 @@ from repro.core.serialize import (
     _run_grouped,
 )
 from repro.core.storage import (
+    CancelToken,
+    FlushCancelled,
+    FlushJournal,
     FlushResult,
     LocalStore,
     ReadResult,
     RealExecutor,
+    TokenBucket,
     placement_from_plan,
 )
 from repro.core.strategies import make_plan
@@ -123,6 +163,24 @@ class CheckpointConfig:
     parallel_local: bool = True
     zero_copy: bool = True
     local_workers: int = 0             # 0 = auto: min(16, max(8, 2*cpus))
+    # ---- adaptive flush runtime (docs/OPERATIONS.md) ----
+    # Supersession: skip/cancel stale queued or mid-flight flushes when
+    # a newer step arrives.  Protected (never superseded): full
+    # snapshots under zstd+delta (delta-chain anchors) and steps inside
+    # the keep_n newest window.  Off by default: every save still
+    # reaches the PFS unless you opt into newest-state-wins semantics.
+    supersede_stale: bool = False
+    # Throttle policy for executor writes (token bucket, bytes/s
+    # globally).  > 0: explicit cap.  0: derived from the cluster's
+    # app_net_load as (1 - load) * nic_bw * n_nodes when load > 0 (the
+    # Tseng interference trade-off, priced identically by core/sim.py
+    # via simulate_flush(flush_bw_cap=...)); no throttle when load = 0.
+    flush_bw_cap: float = 0.0
+    # Crash-resumable flushes: persist the manifest at "flush_partial"
+    # (with its full placement) before writing and journal each
+    # completed extent, so interrupted flushes finish via
+    # resume_flushes() instead of restarting from byte zero.
+    resumable_flushes: bool = True
 
 
 @dataclass
@@ -141,6 +199,21 @@ class SaveStats:
     stored_bytes: int
     encode_time: float
     flush: Optional[FlushResult] = None
+    # True when the adaptive runtime superseded this step's flush (a
+    # newer step replaced it before/while it drained); flush stays None.
+    superseded: bool = False
+
+
+@dataclass
+class _FlushJob:
+    """One enqueued flush: the encoded step, its plan, and the runtime
+    control surface (cancellation token + supersession marking)."""
+
+    enc: EncodedState
+    plan: FlushPlan
+    token: CancelToken
+    protected: bool          # delta-base anchor / keep_n-pinned
+    superseded: bool = False  # set (under the manager lock) by newer saves
 
 
 class CheckpointManager:
@@ -175,17 +248,31 @@ class CheckpointManager:
         # and must not re-parse every manifest JSON each time.
         self._man_cache: Dict[str, Tuple[Tuple[int, int, int], Manifest]] = {}
         self._MAN_CACHE_CAP = 128  # bounds RAM when keep_n is None
-        self._q: "queue.Queue[Optional[Tuple[EncodedState, FlushPlan]]]" = queue.Queue()
+        self._q: "queue.Queue[Optional[_FlushJob]]" = queue.Queue()
         self._slots = threading.BoundedSemaphore(max(1, config.max_pending_flushes))
         self._worker: Optional[threading.Thread] = None
         self._local_exec: Optional[ThreadPoolExecutor] = None
         self._flush_errors: List[Tuple[int, str]] = []
         self._lock = threading.Lock()
+        # Adaptive flush runtime state: jobs queued or mid-flight (by
+        # step), supersession/interruption records, saved-step history
+        # (keep_n pinning), and the global write-rate token bucket.
+        self._pending: Dict[int, _FlushJob] = {}
+        # Bounded telemetry: a multi-week supersession run records one
+        # entry per save — deques cap the memory, newest entries win.
+        self._superseded: Deque[Tuple[int, str]] = deque(maxlen=4096)
+        self._interrupted: Deque[int] = deque(maxlen=4096)
+        self._resuming: set = set()  # steps mid-resume, shielded from _gc
+        self._saved_steps: List[int] = []  # trimmed in save(); keep_n pins
+        cap = self._flush_bw_policy()
+        self._limiter: Optional[TokenBucket] = (
+            TokenBucket(cap) if cap > 0 else None
+        )
         # Stats of the most recent aggregated PFS read (restore telemetry).
         self.last_read_result: Optional[ReadResult] = None
         if config.async_flush:
             self._worker = threading.Thread(
-                target=self._flush_loop, name="active-backend", daemon=True
+                target=self._scheduler_loop, name="active-backend", daemon=True
             )
             self._worker.start()
 
@@ -280,15 +367,31 @@ class CheckpointManager:
                 self._saves_since_full += 1
             self.stats.append(st)
             self._stats_by_step[step] = st
+            self._saved_steps.append(step)
+            # keep_n pinning only ever reads the tail; don't let the
+            # history grow with the run
+            bound = 4 * max(cfg.keep_n or 0, 256)
+            if len(self._saved_steps) > bound:
+                del self._saved_steps[: len(self._saved_steps) - bound // 2]
 
         # ---- flush phase (async) ----
         sizes = [r.stored_size for r in enc.manifest.ranks]
         plan = make_plan(cfg.strategy, c, sizes, **cfg.strategy_kwargs)
+        job = _FlushJob(
+            enc, plan, CancelToken(), protected=self._is_protected(enc.manifest)
+        )
         if cfg.async_flush:
+            if cfg.supersede_stale:
+                # mark stale pending flushes *before* taking a slot:
+                # skipped jobs release their slots, so a fast save
+                # cadence drains the queue instead of stalling on it
+                self._supersede_stale(step)
             self._slots.acquire()  # backpressure: bounded flush pipeline
-            self._q.put((enc, plan))
+            with self._lock:
+                self._pending[step] = job
+            self._q.put(job)
         else:
-            st.flush = self._do_flush(enc, plan)
+            st.flush = self._do_flush(job)
         return st
 
     # ----------------------------------------------------------------- flush
@@ -319,37 +422,169 @@ class CheckpointManager:
             )
         return self._local_exec
 
-    def _flush_loop(self) -> None:
+    def _flush_bw_policy(self) -> float:
+        """Effective executor write cap in bytes/s (0 = unthrottled).
+
+        Explicit ``flush_bw_cap`` wins; otherwise a positive
+        ``app_net_load`` on the cluster's nodes derives the cap the
+        simulator prices for the same spec: the flush may use at most
+        the NIC share the application is not keeping, summed over
+        nodes.  Consistency between this policy and
+        ``simulate_flush(flush_bw_cap=...)`` is what lets the sim's
+        throttle curve predict the real executor's.
+        """
+        cfg = self.cfg
+        if cfg.flush_bw_cap > 0:
+            return float(cfg.flush_bw_cap)
+        load = self.cluster.node.app_net_load
+        if load > 0:
+            # floor the share at 1e-3 (the simulator's derate floor):
+            # load -> 1.0 must throttle to near-zero, not flip the cap
+            # to 0.0 == "unthrottled" at exactly the boundary
+            return (
+                self.cluster.n_nodes * self.cluster.node.nic_bw
+                * max(1e-3, 1.0 - load)
+            )
+        return 0.0
+
+    def _is_protected(self, man: Manifest) -> bool:
+        """Steps supersession must never skip: full snapshots under
+        ``zstd+delta`` — every delta chain resolves through them, so
+        dropping one would strand the whole ``delta_every`` window on
+        L1 durability alone."""
+        return self.cfg.codec == "zstd+delta" and man.base_step is None
+
+    def _supersede_stale(self, new_step: int) -> None:
+        """Mark every stale pending flush superseded and fire its token.
+
+        Stale = enqueued for an older step than ``new_step``, not
+        protected (:meth:`_is_protected`), not pinned by ``keep_n``
+        (a step inside the keep_n-newest saved window is one the user
+        asked to retain on the PFS — skipping its flush would leave a
+        hole GC semantics promise not to have), and — under
+        ``zstd+delta`` — not inside the **live delta window**: deltas
+        chain through their predecessors (``base = L0``, the previous
+        step), so every pending step at or above the current full
+        anchor is transitively a base of ``new_step`` and skipping its
+        flush would leave newer flush_done deltas unrestorable from the
+        PFS alone.  Delta-window steps only become superseded-able when
+        the next full snapshot opens a new window.
+        """
+        keep = self.cfg.keep_n
+        with self._lock:
+            pinned = set(self._saved_steps[-keep:]) if keep is not None else set()
+            window_floor = None
+            if self.cfg.codec == "zstd+delta" and self._last_full is not None:
+                window_floor = self._last_full.step
+            for s, job in self._pending.items():
+                if s >= new_step or job.superseded or job.protected:
+                    continue
+                if s in pinned:
+                    continue
+                if window_floor is not None and s >= window_floor:
+                    continue  # live delta window: s is a base of new_step
+                job.superseded = True
+                job.token.cancel()
+
+    def _journal_path(self, step: int) -> Path:
+        return self.pfs_dir / f"step_{step:08d}" / "flush_journal.bin"
+
+    def _scheduler_loop(self) -> None:
+        """The adaptive flush scheduler (replaces the seed FIFO
+        ``_flush_loop``): skips superseded queued jobs, runs the rest
+        through the cancellable/throttled/journaled executor, and
+        classifies every outcome — delivered, superseded (queued or
+        mid-flush), interrupted-but-resumable, or failed."""
         while True:
             job = self._q.get()
             if job is None:
                 self._q.task_done()
                 return
-            enc, plan = job
+            step = job.enc.step
             try:
-                res = self._do_flush(enc, plan)
-                # deliver by step, under the lock save() appends under —
-                # never scan the list a concurrent save() is growing
                 with self._lock:
-                    st = self._stats_by_step.get(enc.step)
-                    if st is not None:
-                        st.flush = res
+                    skip = job.superseded
+                if skip:
+                    self._note_superseded(step, "queued")
+                else:
+                    res = self._do_flush(job)
+                    # deliver by step, under the lock save() appends
+                    # under — never scan the list a save() is growing
+                    with self._lock:
+                        st = self._stats_by_step.get(step)
+                        if st is not None:
+                            st.flush = res
+            except FlushCancelled:
+                if job.superseded:
+                    self._note_superseded(step, "mid_flush")
+                else:
+                    # close()-deadline interruption.  Not an error —
+                    # but only resumable when journaling was on.
+                    with self._lock:
+                        self._interrupted.append(step)
+                    if self.cfg.resumable_flushes:
+                        log.warning(
+                            "flush for step %d interrupted; resumable "
+                            "via resume_flushes()", step,
+                        )
+                    else:
+                        log.warning(
+                            "flush for step %d interrupted with "
+                            "resumable_flushes=False: the step exists on "
+                            "L1 only — re-save or re-flush it before "
+                            "relying on the PFS", step,
+                        )
             except Exception as e:  # crash of the active backend
-                log.exception("flush for step %d failed", enc.step)
+                log.exception("flush for step %d failed", step)
                 with self._lock:
-                    self._flush_errors.append((enc.step, repr(e)))
+                    self._flush_errors.append((step, repr(e)))
             finally:
+                with self._lock:
+                    self._pending.pop(step, None)
                 self._slots.release()
                 self._q.task_done()
 
-    def _do_flush(self, enc: EncodedState, plan: FlushPlan) -> FlushResult:
-        res = self.executor.execute(plan, enc.step)
+    def _note_superseded(self, step: int, phase: str) -> None:
+        with self._lock:
+            self._superseded.append((step, phase))
+            st = self._stats_by_step.get(step)
+            if st is not None:
+                st.superseded = True
+        log.info("flush for step %d superseded (%s)", step, phase)
+
+    def _do_flush(self, job: _FlushJob) -> FlushResult:
+        enc, plan = job.enc, job.plan
         man = enc.manifest
         man.strategy = plan.strategy
         man.files = dict(plan.files)
         man.placement = placement_from_plan(plan)
+        journal: Optional[FlushJournal] = None
+        if self.cfg.resumable_flushes:
+            # commit the write set *before* the first byte: a
+            # flush_partial manifest (full columnar placement + file
+            # sizes) plus the extent journal is everything
+            # resume_flushes() needs after any interruption.  fresh=True:
+            # a journal left by a previous incarnation of this step
+            # describes *different bytes* and must never skip writes here.
+            man.status = "flush_partial"
+            self._write_manifest_pfs(man)
+            journal = FlushJournal(self._journal_path(enc.step), fresh=True)
+        try:
+            res = self.executor.execute(
+                plan, enc.step,
+                cancel=job.token, limiter=self._limiter, journal=journal,
+            )
+        except FlushCancelled:
+            if job.superseded and self.cfg.resumable_flushes:
+                # a superseded partial is dead, not resumable: newer
+                # state already replaced it — mark it so resume skips it
+                man.status = "superseded"
+                self._write_manifest_pfs(man)
+            raise
         man.status = "flush_done"
         self._write_manifest_pfs(man)
+        if journal is not None:
+            journal.unlink()
         if self.cfg.keep_n is not None:
             try:
                 self._gc()
@@ -357,15 +592,104 @@ class CheckpointManager:
                 log.exception("gc failed")
         return res
 
+    def resume_flushes(self) -> Dict[int, FlushResult]:
+        """Finish every interrupted (``flush_partial``) flush on the PFS.
+
+        Scans the step manifests, rebuilds each partial flush's write
+        set from its persisted columnar placement, skips the extents
+        its journal proves already written, and rewrites only the rest
+        (``FlushResult.bytes_skipped`` reports the saved volume).  On
+        success the manifest flips to ``flush_done`` and the journal is
+        deleted.  Requires the step's L1 blobs to still exist on the
+        home node or (with ``partner_replication``) on its partner;
+        a step whose copies are all gone is unfinishable, is recorded
+        in ``flush_errors``, and restore falls back as usual — other
+        steps still resume.  Superseded partials are left alone.
+        Returns ``{step: FlushResult}`` for the steps that finished.
+        """
+        out: Dict[int, FlushResult] = {}
+        for p in sorted(self.pfs_dir.glob("step_*/manifest.json")):
+            try:
+                man = self._cached_manifest(p)
+            except Exception:
+                continue
+            if man.status != "flush_partial":
+                continue
+            with self._lock:
+                # one acquisition: never race a live flush, and shield
+                # the step from a concurrently running _gc sweep
+                if man.step in self._pending or man.step in self._resuming:
+                    continue
+                self._resuming.add(man.step)
+            try:
+                journal = FlushJournal(self._journal_path(man.step))
+                res = self.executor.execute_resume(
+                    man, man.step, limiter=self._limiter, journal=journal
+                )
+                man.status = "flush_done"
+                self._write_manifest_pfs(man)
+                journal.unlink()
+            except Exception as e:  # one dead step must not block the rest
+                log.exception("resume of step %d failed", man.step)
+                with self._lock:
+                    self._flush_errors.append((man.step, repr(e)))
+                continue
+            finally:
+                with self._lock:
+                    self._resuming.discard(man.step)
+            out[man.step] = res
+            log.info(
+                "resumed flush for step %d: %d bytes rewritten, %d skipped",
+                man.step, res.bytes_written, res.bytes_skipped,
+            )
+        return out
+
     def wait(self) -> None:
         """Drain all pending flushes (returns when the PFS is settled)."""
         if self.cfg.async_flush:
             self._q.join()
 
-    def close(self) -> None:
+    def close(self, *, timeout: float = 60.0) -> None:
+        """Shut down, draining pending flushes — never dropping them
+        silently.
+
+        The worker gets ``timeout`` seconds to drain.  If it is still
+        busy after that, every pending flush's token is cancelled: the
+        in-flight flush stops at its next request boundary with its
+        progress journaled (manifest at ``flush_partial``), queued ones
+        fail fast the same way, and the steps left unflushed are
+        enumerated in an error log — all of them recoverable via
+        :meth:`resume_flushes` on a manager over the same root.  (The
+        seed bug: ``join(timeout=60)`` could return with the worker
+        alive, ``_worker`` was set to ``None`` anyway, and the queued
+        flushes vanished without a trace.)  Raises ``RuntimeError`` if
+        the worker ignores cancellation too (e.g. a hook blocked in
+        foreign code) rather than pretend the shutdown was clean.
+        """
         if self._worker is not None:
             self._q.put(None)
-            self._worker.join(timeout=60)
+            self._worker.join(timeout=timeout)
+            if self._worker.is_alive():
+                with self._lock:
+                    lost = sorted(self._pending)
+                    for job in self._pending.values():
+                        job.token.cancel()
+                log.error(
+                    "close(): flush worker still busy after %.1fs; "
+                    "cancelling %d pending flush(es) for steps %s (%s)",
+                    timeout, len(lost), lost,
+                    "progress journaled; finish with resume_flushes()"
+                    if self.cfg.resumable_flushes
+                    else "resumable_flushes=False: these steps exist on "
+                    "L1 only — re-save or flush them before relying on "
+                    "the PFS",
+                )
+                self._worker.join(timeout=max(5.0, timeout))
+                if self._worker.is_alive():
+                    raise RuntimeError(
+                        "close(): flush worker did not stop; steps "
+                        f"{lost} not flushed (journaled state on disk)"
+                    )
             self._worker = None
         if self._local_exec is not None:
             self._local_exec.shutdown(wait=True)
@@ -376,6 +700,22 @@ class CheckpointManager:
     def flush_errors(self) -> List[Tuple[int, str]]:
         with self._lock:
             return list(self._flush_errors)
+
+    @property
+    def superseded_steps(self) -> List[int]:
+        """Steps whose flush the runtime superseded (queued or
+        mid-flush).  Restorable from L1 via the normal ladder."""
+        with self._lock:
+            return sorted({s for s, _ in self._superseded})
+
+    @property
+    def interrupted_steps(self) -> List[int]:
+        """Steps whose flush was interrupted (e.g. by a ``close()``
+        deadline).  With ``resumable_flushes=True`` their progress is
+        journaled — finish via :meth:`resume_flushes`; with it off they
+        exist on L1 only and must be re-saved or re-flushed."""
+        with self._lock:
+            return sorted(set(self._interrupted))
 
     # --------------------------------------------------------------- restore
 
@@ -1079,24 +1419,57 @@ class CheckpointManager:
     def _gc(self) -> None:
         keep = self.cfg.keep_n
         pfs_steps = self.steps("pfs")
-        if keep is None or len(pfs_steps) <= keep:
+        # No early-out at len(pfs_steps) <= keep: under supersession
+        # most steps never reach flush_done, and their L1/partial-PFS
+        # leavings still need reaping below the newest kept checkpoint.
+        if keep is None or not pfs_steps:
             return
         kept = set(pfs_steps[-keep:])
-        # retain delta bases of kept steps
+        # Retain delta bases of kept steps.  The chain must traverse
+        # *any* surviving manifest, not just flush_done ones: under
+        # supersession a base step's PFS manifest may be superseded (or
+        # absent) while its L1 level is exactly what keeps the kept
+        # checkpoint restorable — breaking the walk there would let the
+        # sweep below delete live bases, full-snapshot anchors included.
         needed = set(kept)
         for s in kept:
             cur = s
             while True:
-                try:
-                    man = self._manifest_pfs(cur)
-                except Exception:
-                    break
-                if man.base_step is None:
+                man = None
+                for getter in (self._gc_manifest_any, self._manifest_local):
+                    try:
+                        man = getter(cur)
+                        break
+                    except Exception:
+                        continue
+                if man is None or man.base_step is None:
                     break
                 needed.add(man.base_step)
                 cur = man.base_step
-        for s in pfs_steps:
-            if s in needed:
+        # Sweep set: every step known to either level — including steps
+        # that never reached flush_done (superseded, or stale partials
+        # the operator chose not to resume).  Under a fast supersession
+        # cadence those are the *majority* of steps, and their L1 blobs
+        # and partial PFS dirs must not accumulate past the retention
+        # window.  Steps newer than the newest kept checkpoint, and
+        # steps still queued/mid-flight, are left alone (they may still
+        # be flushing or awaiting resume).
+        with self._lock:
+            pending = set(self._pending) | set(self._resuming)
+        max_kept = max(kept)
+        known = set(pfs_steps)
+        for d in self.pfs_dir.glob("step_*"):
+            try:
+                known.add(int(d.name[5:]))
+            except ValueError:
+                continue
+        for p in (self.root / "local" / "manifests").glob("step_*.json"):
+            try:
+                known.add(int(p.stem[5:]))
+            except ValueError:
+                continue
+        for s in sorted(known):
+            if s in needed or s in pending or s > max_kept:
                 continue
             sdir = self.pfs_dir / f"step_{s:08d}"
             if sdir.exists():
@@ -1113,6 +1486,14 @@ class CheckpointManager:
                 self._man_cache.pop(str(mp), None)
 
     # ------------------------------------------------------------- manifests
+
+    def _gc_manifest_any(self, step: int) -> Manifest:
+        """PFS manifest of ``step`` in *any* status — GC chain walking
+        only needs ``base_step``, unlike the restore path's
+        :meth:`_manifest_pfs` which rightly rejects non-final states."""
+        return self._cached_manifest(
+            self.pfs_dir / f"step_{step:08d}" / "manifest.json"
+        )
 
     def _write_manifest_local(self, man: Manifest) -> None:
         p = self.root / "local" / "manifests" / f"step_{man.step:08d}.json"

@@ -231,7 +231,15 @@ class Manifest:
     files: Dict[str, int] = field(default_factory=dict)
     # columnar file layout of every rank's stored blob on the PFS
     placement: Placement = field(default_factory=Placement.empty)
-    status: str = "pending"           # pending | local_done | flush_done
+    # Flush lifecycle state (full state machine in docs/OPERATIONS.md):
+    # pending -> local_done -> [flush_partial ->] flush_done, with
+    # superseded/failed edges.  "flush_partial" = an in-progress or
+    # interrupted flush whose placement + extent journal make it
+    # resumable (CheckpointManager.resume_flushes); "superseded" = a
+    # flush abandoned because a newer step replaced it.  restore() only
+    # trusts "flush_done" PFS checkpoints — every other state falls
+    # back down the level ladder.
+    status: str = "pending"  # pending | local_done | flush_partial | flush_done | superseded
 
     # -- read-side views ---------------------------------------------------
     #

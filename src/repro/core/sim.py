@@ -186,6 +186,10 @@ class SimReport:
     app_slowdown: float
     n_rounds: int
     synchronous: bool
+    # Global flush write cap priced into this report (0 = unthrottled);
+    # the real-executor twin is the engine's TokenBucket with the same
+    # bytes/s, so the simulated and measured trade-off curves agree.
+    flush_bw_cap: float = 0.0
     per_backend_finish: Dict[int, float] = field(default_factory=dict)
 
     def row(self) -> Dict[str, object]:
@@ -425,23 +429,34 @@ class FlushSimulator:
         io_threads: int = 2,
         rpc_size: Optional[int] = None,
         msg_latency: float = 5e-6,
+        flush_bw_cap: Optional[float] = None,
     ) -> None:
         self.plan = plan
         self.cluster = plan.cluster
         self.io_threads = max(1, int(io_threads))
         self.rpc_size = rpc_size
         self.msg_latency = msg_latency
+        # Global flush write cap (bytes/s) — the engine's token-bucket
+        # throttle priced as one extra shared resource every write flow
+        # traverses (event-driven strategies) / a per-round floor of
+        # round_bytes / cap (barrier strategies).  None/<=0 = off.
+        self.flush_bw_cap = (
+            float(flush_bw_cap) if flush_bw_cap and flush_bw_cap > 0 else None
+        )
 
     # resource ids: [0,n) NIC_tx · [n,2n) NIC_rx · [2n,3n) SSD_read · [3n] PFS
+    # · [3n+1] the global flush_bw_cap token bucket (only when set)
     def _caps(self, pfs_eff: float) -> np.ndarray:
         c = self.cluster
         n = c.n_nodes
         derate = np.maximum(1e-3, 1.0 - c.loads())
-        caps = np.empty(3 * n + 1)
+        caps = np.empty(3 * n + 1 + (1 if self.flush_bw_cap else 0))
         caps[:n] = c.node.nic_bw * (1.0 - c.node.app_net_load) * derate
         caps[n: 2 * n] = c.node.nic_bw * derate
         caps[2 * n: 3 * n] = c.node.local_read_bw * derate
         caps[3 * n] = c.pfs.aggregate_bw * pfs_eff
+        if self.flush_bw_cap:
+            caps[3 * n + 1] = self.flush_bw_cap
         return caps
 
     def run(self) -> SimReport:
@@ -510,6 +525,7 @@ class FlushSimulator:
             app_slowdown=app_slowdown,
             n_rounds=plan.n_rounds,
             synchronous=plan.synchronous,
+            flush_bw_cap=self.flush_bw_cap or 0.0,
             per_backend_finish=per_backend,
         )
 
@@ -536,13 +552,19 @@ class FlushSimulator:
         # direct: [SSD(home), TX(home), PFS]
         # remote: pipelined cut-through gather+write (paper §3 streaming)
         #         [SSD(home), TX(home), RX(leader), TX(leader), PFS]
-        res = np.full((nf, 5), -1, np.int64)
+        # with a flush_bw_cap every flow additionally traverses the
+        # shared token-bucket resource (id 3n+1)
+        width = 6 if self.flush_bw_cap else 5
+        res = np.full((nf, width), -1, np.int64)
         res[:, 0] = 2 * n + home
         res[:, 1] = home
         res[direct, 2] = 3 * n
         res[remote, 2] = n + w.backend[remote]
         res[remote, 3] = w.backend[remote]
         res[remote, 4] = 3 * n
+        if self.flush_bw_cap:
+            res[direct, 3] = 3 * n + 1
+            res[remote, 5] = 3 * n + 1
         slot_nodes = np.full((nf, 2), -1, np.int64)
         slot_nodes[:, 0] = home
         slot_nodes[remote, 1] = w.backend[remote]
@@ -599,6 +621,10 @@ class FlushSimulator:
             nic_tx_eff * derate, stream_cap * self.io_threads
         )
         t_write = np.maximum(t_write, per_node_write.max(axis=1))
+        if self.flush_bw_cap:
+            # the token bucket is global: each barrier round drains no
+            # faster than the cap, exactly like the real executor
+            t_write = np.maximum(t_write, round_bytes / self.flush_bw_cap)
 
         cum = md_max + np.cumsum(t_gather + t_write)
         per_backend: Dict[int, float] = {}
@@ -611,6 +637,13 @@ class FlushSimulator:
 
 
 def simulate_flush(
-    plan: FlushPlan, *, io_threads: int = 2, rpc_size: Optional[int] = None
+    plan: FlushPlan,
+    *,
+    io_threads: int = 2,
+    rpc_size: Optional[int] = None,
+    flush_bw_cap: Optional[float] = None,
 ) -> SimReport:
-    return FlushSimulator(plan, io_threads=io_threads, rpc_size=rpc_size).run()
+    return FlushSimulator(
+        plan, io_threads=io_threads, rpc_size=rpc_size,
+        flush_bw_cap=flush_bw_cap,
+    ).run()

@@ -28,6 +28,24 @@ as ranged ``pread``\\ s through the same work-stealing thread pool, so
 aggregated checkpoints are *read* as aggregated files — full elastic
 restores, reshards and partial (per-leaf) restores all go through one
 plan instead of per-rank whole-blob loops.
+
+Adaptive flush runtime primitives (engine-facing; see
+docs/OPERATIONS.md for the lifecycle):
+
+* :class:`CancelToken` — cooperative cancellation, checked by the
+  executor at *safe request boundaries* (between writes, never inside
+  one), raising :class:`FlushCancelled`;
+* :class:`TokenBucket` — a global byte-rate limiter the engine hangs on
+  executor writes so the background drain does not steal the
+  application's NIC share (the ``flush_bw_cap`` / ``app_net_load``
+  policy, priced identically by :mod:`repro.core.sim`);
+* :class:`FlushJournal` — an append-only *columnar* progress cursor
+  (little-endian int64 ``(file_id, file_offset, size)`` triples)
+  persisted next to the manifest: every completed destination extent is
+  journaled, so a flush interrupted by ``close()``, a fault hook or
+  process death resumes from the last completed extent
+  (:meth:`RealExecutor.execute_resume`) instead of rewriting the whole
+  checkpoint.
 """
 from __future__ import annotations
 
@@ -46,11 +64,221 @@ from repro.core.plan import (
     FileLayout,
     FlushPlan,
     ReadPlan,
+    WriteColumns,
     WriteItem,
     build_read_plan,
     coalesce_write_columns,
+    merge_intervals,
 )
 from repro.core.serialize import Manifest, Placement
+
+
+class FlushCancelled(Exception):
+    """An executing flush observed its :class:`CancelToken` fired.
+
+    Deliberately *not* an ``IOError``: the engine treats cancellation
+    (supersession, ``close()`` deadline) as a scheduling outcome, not a
+    flush failure — it must never land in ``flush_errors``.
+    """
+
+
+class CancelToken:
+    """Cooperative cancellation for one in-flight flush.
+
+    The executor polls :attr:`cancelled` at safe request boundaries
+    (before each coalesced write row) and while sleeping in the rate
+    limiter, so cancellation latency is one write (or one throttle
+    tick), never a partial ``pwrite``.
+    """
+
+    __slots__ = ("_ev",)
+
+    def __init__(self) -> None:
+        self._ev = threading.Event()
+
+    def cancel(self) -> None:
+        self._ev.set()
+
+    @property
+    def cancelled(self) -> bool:
+        return self._ev.is_set()
+
+    def wait(self, timeout: float) -> bool:
+        return self._ev.wait(timeout)
+
+
+class TokenBucket:
+    """Global token-bucket byte-rate limiter for executor writes.
+
+    ``rate`` is bytes/second shared by *all* writer threads (one bucket
+    per manager — the real-executor twin of the single extra capacity
+    the simulator prices a ``flush_bw_cap`` as).  Requests may exceed
+    ``burst``: a thread pays its bytes into the bucket debt and later
+    acquirers wait until the debt refills, so arbitrarily large
+    coalesced rows still observe the long-run rate.  ``acquire``
+    returns the seconds it slept; a fired :class:`CancelToken` aborts
+    the sleep with :class:`FlushCancelled`.
+    """
+
+    def __init__(self, rate: float, burst: Optional[float] = None):
+        if rate <= 0:
+            raise ValueError("TokenBucket rate must be positive")
+        self.rate = float(rate)
+        self.burst = float(burst) if burst else max(1 << 20, self.rate / 8)
+        self._tokens = self.burst
+        self._last = time.monotonic()
+        self._lock = threading.Lock()
+        self.wait_total = 0.0  # cumulative sleep across all acquirers
+
+    def acquire(self, n: int, cancel: Optional[CancelToken] = None) -> float:
+        if n <= 0:
+            return 0.0
+        waited = 0.0
+        while True:
+            with self._lock:
+                now = time.monotonic()
+                self._tokens = min(
+                    self.burst, self._tokens + (now - self._last) * self.rate
+                )
+                self._last = now
+                if self._tokens > 0:
+                    self._tokens -= n  # may go negative: pay-ahead debt
+                    self.wait_total += waited
+                    return waited
+                delay = min(0.25, (1 - self._tokens) / self.rate)
+            if cancel is not None:
+                if cancel.wait(delay):
+                    raise FlushCancelled("cancelled while throttled")
+            else:
+                time.sleep(delay)
+            waited += delay
+
+
+class FlushJournal:
+    """Append-only columnar progress cursor for one step's flush.
+
+    On-disk format: little-endian int64 triples ``(file_id,
+    file_offset, size)``, one per completed destination extent —
+    ``file_id`` indexes the manifest placement's ``file_names``.  The
+    executor journals each row *after* its ``pwrite`` returns, buffered
+    (``flush_every`` records) and fsynced on flush, so after a crash
+    the journal only under-reports: every journaled extent is truly on
+    the PFS — ``pre_sync`` (the executor passes a data-fd fsync) runs
+    before each batch of records is persisted, so a record can never
+    outlive a page-cache-only write through a power loss — and at most
+    one buffer's worth of completed writes gets redone on resume.  A
+    torn trailing record (process death mid-append) is truncated away
+    on load.
+
+    Coverage queries (:meth:`covers`) run against the extents loaded at
+    construction, merged per file (``merge_intervals``) — the resume
+    pass skips any write row whose destination interval is fully
+    covered, regardless of how the original flush coalesced its rows.
+    """
+
+    RECORD = 24  # 3 x int64
+
+    def __init__(
+        self,
+        path,
+        flush_every: int = 32,
+        *,
+        fresh: bool = False,
+        pre_sync: Optional[Callable[[], None]] = None,
+    ):
+        """``fresh=True`` discards any journal left on disk first — a
+        *new* flush of a step must never inherit extents journaled by a
+        previous incarnation of that step (different bytes!); only the
+        resume path loads the existing cursor.  ``pre_sync`` runs
+        before each batch of records is written (the executor fsyncs
+        the data fds there) so the journal never claims durability the
+        data does not have."""
+        self.path = Path(path)
+        self._flush_every = max(1, flush_every)
+        self._buf: List[Tuple[int, int, int]] = []
+        self._lock = threading.Lock()
+        self.pre_sync = pre_sync
+        if fresh:
+            try:
+                self.path.unlink()
+            except FileNotFoundError:
+                pass
+        self.done = self._load(self.path)
+        self._cov: Optional[Dict[int, Tuple[np.ndarray, np.ndarray]]] = None
+
+    @staticmethod
+    def _load(path: Path) -> np.ndarray:
+        try:
+            raw = path.read_bytes()
+        except FileNotFoundError:
+            return np.empty((0, 3), np.int64)
+        n = len(raw) // FlushJournal.RECORD  # drop a torn trailing record
+        if n == 0:
+            return np.empty((0, 3), np.int64)
+        return (
+            np.frombuffer(raw[: n * FlushJournal.RECORD], dtype="<i8")
+            .reshape(n, 3)
+            .astype(np.int64)
+        )
+
+    @property
+    def completed_bytes(self) -> int:
+        """Journaled payload (may double-count overlapping rewrites)."""
+        return int(self.done[:, 2].sum())
+
+    def _coverage(self) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        if self._cov is None:
+            cov: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+            for f in np.unique(self.done[:, 0]).tolist():
+                rows = self.done[self.done[:, 0] == f]
+                start, size = merge_intervals(rows[:, 1], rows[:, 2])
+                cov[int(f)] = (start, start + size)
+            self._cov = cov
+        return self._cov
+
+    def covers(self, file_id: int, offset: int, size: int) -> bool:
+        """True iff ``[offset, offset+size)`` of ``file_id`` is fully
+        inside the journaled (merged) extents loaded at construction."""
+        iv = self._coverage().get(int(file_id))
+        if iv is None:
+            return False
+        start, end = iv
+        i = int(np.searchsorted(start, offset, side="right")) - 1
+        return i >= 0 and int(end[i]) >= offset + size
+
+    def record(self, file_id: int, file_offset: int, size: int) -> None:
+        with self._lock:
+            self._buf.append((int(file_id), int(file_offset), int(size)))
+            if len(self._buf) >= self._flush_every:
+                self._flush_locked()
+
+    def flush(self) -> None:
+        with self._lock:
+            self._flush_locked()
+
+    def _flush_locked(self) -> None:
+        if not self._buf:
+            return
+        if self.pre_sync is not None:
+            self.pre_sync()  # data durability strictly before the claim
+        arr = np.asarray(self._buf, dtype="<i8")
+        with open(self.path, "ab") as f:
+            f.write(arr.tobytes())
+            f.flush()
+            try:
+                os.fsync(f.fileno())
+            except OSError:  # pragma: no cover - fs without fsync
+                pass
+        self._buf.clear()
+
+    def unlink(self) -> None:
+        """Remove the journal (flush completed — the cursor is moot)."""
+        with self._lock:
+            self._buf.clear()
+        try:
+            self.path.unlink()
+        except FileNotFoundError:
+            pass
 
 
 class LocalStore:
@@ -184,6 +412,11 @@ class FlushResult:
     n_writes: int
     failed: bool = False
     error: Optional[str] = None
+    # adaptive-runtime telemetry: extents skipped because the progress
+    # journal proved them already on the PFS (resume), and total seconds
+    # writer threads slept in the rate limiter (throttle pressure).
+    bytes_skipped: int = 0
+    throttle_wait: float = 0.0
 
 
 @dataclass
@@ -256,35 +489,133 @@ class RealExecutor:
     def step_dir(self, step: int) -> Path:
         return self.pfs_dir / f"step_{step:08d}"
 
-    def execute(self, plan: FlushPlan, step: int) -> FlushResult:
-        t0 = time.perf_counter()
-        sdir = self.step_dir(step)
-        sdir.mkdir(parents=True, exist_ok=True)
-
+    def execute(
+        self,
+        plan: FlushPlan,
+        step: int,
+        *,
+        cancel: Optional[CancelToken] = None,
+        limiter: Optional[TokenBucket] = None,
+        journal: Optional[FlushJournal] = None,
+    ) -> FlushResult:
+        """Run a flush plan.  ``cancel`` is polled at safe request
+        boundaries (raising :class:`FlushCancelled` between writes),
+        ``limiter`` throttles writer bytes through the shared token
+        bucket, and ``journal`` both *skips* destination extents it
+        already covers (resume) and records each completed write."""
         pa = plan.ensure_arrays()
-        names = pa.file_names
         # Coalesce adjacent same-source reads: rows contiguous in both
         # (src_rank, src_offset) and (file, file_offset) become one
         # pread + one pwrite (pipeline-chunked and multi-round plans
         # split one rank's bytes into many such rows).
         w = coalesce_write_columns(pa.writes)
+        homes = plan.cluster.nodes_of_ranks(w.src_rank)
+        # Global worker pool == work stealing across backends: idle
+        # backends' threads drain the shared queue (the straggler
+        # mitigation used by our §3 implementation; see DESIGN.md).
+        n_backends = len(np.unique(w.backend)) or 1
+        workers = min(16, self.io_threads * n_backends)
+        return self._execute_columns(
+            plan.files, pa.file_names, w, homes, step,
+            workers=workers, barrier_per_round=plan.barrier_per_round,
+            cancel=cancel, limiter=limiter, journal=journal,
+        )
+
+    def execute_resume(
+        self,
+        manifest: Manifest,
+        step: int,
+        *,
+        cancel: Optional[CancelToken] = None,
+        limiter: Optional[TokenBucket] = None,
+        journal: Optional[FlushJournal] = None,
+    ) -> FlushResult:
+        """Finish an interrupted flush from its persisted placement.
+
+        A ``flush_partial`` manifest already carries the full write set
+        (columnar :class:`~repro.core.serialize.Placement` — the same
+        rows the original plan coalesced from) and its file size table,
+        so resume needs no strategy re-run: rows are rebuilt straight
+        from the placement columns, rows whose destination extents the
+        ``journal`` covers are skipped, and only the remainder is read
+        from L1 and rewritten.  Rows are deliberately **not**
+        re-coalesced: placement rows are at least as fine as anything
+        the original flush journaled (coalescing merges rows, never
+        splits them), so every fully-flushed extent skips exactly —
+        re-merging across what were different backends/rounds would
+        glue flushed and unflushed extents into one row and force its
+        rewrite.  Round barriers are irrelevant on resume (destinations
+        are disjoint and writes idempotent), so the remainder runs as
+        one free-running batch.
+        """
+        pl = manifest.placement
+        homes_src = pl.rank // max(1, manifest.procs_per_node)
+        w = WriteColumns(
+            backend=homes_src,
+            file_id=pl.file_id,
+            file_offset=pl.file_offset,
+            size=pl.size,
+            src_rank=pl.rank,
+            src_offset=pl.src_offset,
+            round=np.zeros(len(pl.rank), np.int64),
+        )
+        homes = w.backend  # backend == the source rank's home node here
+        workers = min(16, self.io_threads * (len(np.unique(w.backend)) or 1))
+        return self._execute_columns(
+            dict(manifest.files), list(pl.file_names), w, homes, step,
+            workers=workers, barrier_per_round=False,
+            cancel=cancel, limiter=limiter, journal=journal,
+        )
+
+    def _execute_columns(
+        self,
+        files: Dict[str, int],
+        names: Sequence[str],
+        w: WriteColumns,
+        homes: np.ndarray,
+        step: int,
+        *,
+        workers: int,
+        barrier_per_round: bool,
+        cancel: Optional[CancelToken] = None,
+        limiter: Optional[TokenBucket] = None,
+        journal: Optional[FlushJournal] = None,
+    ) -> FlushResult:
+        """Shared column runner behind :meth:`execute` and
+        :meth:`execute_resume`: open+size the files, stream the rows
+        through the persistent pool, fsync on success.  ``ftruncate``
+        to an unchanged size preserves existing contents, so re-opening
+        a partially flushed step never clobbers resumed extents."""
+        t0 = time.perf_counter()
+        sdir = self.step_dir(step)
+        sdir.mkdir(parents=True, exist_ok=True)
 
         # Pre-create + size every file (the metadata phase).
         fds: Dict[str, int] = {}
         try:
-            for fname, size in plan.files.items():
+            for fname, size in files.items():
                 path = sdir / fname
                 fd = os.open(str(path), os.O_CREAT | os.O_WRONLY, 0o644)
                 os.ftruncate(fd, size)
                 fds[fname] = fd
+            if journal is not None:
+                # a journal record is a durability claim: fsync the data
+                # fds before any batch of records is persisted
+                journal.pre_sync = lambda: [os.fsync(f) for f in fds.values()]
 
-            homes = plan.cluster.nodes_of_ranks(w.src_rank)
             lock = threading.Lock()
-            total = {"bytes": 0, "writes": 0}
+            total = {"bytes": 0, "writes": 0, "skipped": 0, "throttle": 0.0}
             hook = self.fault_hook
 
             def do_write(row: Tuple[int, ...]) -> None:
                 backend, fid, foff, size, src_rank, soff, rnd, home = row
+                if cancel is not None and cancel.cancelled:
+                    # safe request boundary: nothing of this row started
+                    raise FlushCancelled(f"step {step}: flush cancelled")
+                if journal is not None and journal.covers(fid, foff, size):
+                    with lock:
+                        total["skipped"] += size
+                    return
                 if hook is not None:
                     # fault-injection surface: materialize the item view
                     # for this row only (never a whole-plan list)
@@ -292,22 +623,34 @@ class RealExecutor:
                                    file_offset=foff, size=size,
                                    src_rank=src_rank, src_offset=soff,
                                    round=rnd))
-                # leader pulls from the source node's L1 file ("the send")
-                data = self.local.read_slice(home, step, src_rank, soff, size)
+                waited = (
+                    limiter.acquire(size, cancel=cancel)
+                    if limiter is not None else 0.0
+                )
+                # leader pulls from the source node's L1 file ("the
+                # send"); if the home node's copy is gone (node loss),
+                # the partner replica on node+1 — the same invariant
+                # restore uses — keeps the flush finishable
+                try:
+                    data = self.local.read_slice(
+                        home, step, src_rank, soff, size
+                    )
+                except OSError:
+                    partner = (home + 1) % max(1, self.local.n_nodes)
+                    data = self.local.read_slice(
+                        partner, step, src_rank, soff, size, partner=True
+                    )
                 if len(data) != size:
                     raise IOError(
                         f"short read: rank {src_rank} [{soff}:{soff + size})"
                     )
                 os.pwrite(fds[names[fid]], data, foff)
+                if journal is not None:
+                    journal.record(fid, foff, size)
                 with lock:
                     total["bytes"] += size
                     total["writes"] += 1
-
-            # Global worker pool == work stealing across backends: idle
-            # backends' threads drain the shared queue (the straggler
-            # mitigation used by our §3 implementation; see DESIGN.md).
-            n_backends = len(np.unique(w.backend)) or 1
-            workers = min(16, self.io_threads * n_backends)
+                    total["throttle"] += waited
 
             rows = list(zip(
                 w.backend.tolist(), w.file_id.tolist(),
@@ -315,7 +658,7 @@ class RealExecutor:
                 w.src_rank.tolist(), w.src_offset.tolist(),
                 w.round.tolist(), homes.tolist(),
             ))
-            if plan.barrier_per_round and len(rows) > 1:
+            if barrier_per_round and len(rows) > 1:
                 order = np.argsort(w.round, kind="stable")
                 rnds = w.round[order]
                 starts = np.flatnonzero(
@@ -334,8 +677,17 @@ class RealExecutor:
                 duration=time.perf_counter() - t0,
                 bytes_written=total["bytes"],
                 n_writes=total["writes"],
+                bytes_skipped=total["skipped"],
+                throttle_wait=total["throttle"],
             )
         finally:
+            if journal is not None:
+                # persist whatever completed — cancellation/failure paths
+                # rely on the journal under-reporting, never losing rows
+                try:
+                    journal.flush()
+                finally:
+                    journal.pre_sync = None  # fds close right below
             for fd in fds.values():
                 try:
                     os.close(fd)

@@ -13,7 +13,12 @@ Per-file schema (top level: ``benchmark`` string + non-empty ``rows``):
 * ``BENCH_codec.json``   — codec-phase rows (compressed saves in
   reference/fast pairs, delta dirty-fraction sweep, compressed partial
   restore); the fast ``codec_save`` row of the largest geometry must
-  record the ISSUE 4 acceptance bar, ``speedup >= 3``.
+  record the ISSUE 4 acceptance bar, ``speedup >= 3``;
+* ``BENCH_flush_runtime.json`` — adaptive flush runtime rows; every
+  ``supersession`` row must record the ISSUE 5 bar ``skipped_frac >=
+  0.5``, every ``resume`` row ``rewrite_frac < 0.25`` with
+  ``byte_identical`` true, and the ``resume`` rows together must cover
+  all five aggregation strategies.
 
 Exit code 0 = all good; 1 = any file missing/malformed (messages on
 stderr).  Run as ``python tools/bench_check.py [root]``.
@@ -43,6 +48,10 @@ EXPECTED = {
         "codec_phase",
         set(),  # rows are heterogeneous; per-kind fields checked below
     ),
+    "BENCH_flush_runtime.json": (
+        "flush_runtime",
+        set(),  # rows are heterogeneous; per-kind fields checked below
+    ),
 }
 
 RESTORE_KIND_FIELDS = {
@@ -60,7 +69,23 @@ CODEC_KIND_FIELDS = {
                                    "bytes_read", "stored_total", "read_frac"},
 }
 
+FLUSH_RUNTIME_KIND_FIELDS = {
+    "supersession": {"config", "n_ranks", "n_saves", "stored_total",
+                     "flushed_bytes", "skipped_bytes", "skipped_frac",
+                     "n_superseded", "newest_flushed"},
+    "resume": {"config", "n_ranks", "strategy", "total_bytes",
+               "resume_rewritten_bytes", "rewrite_frac", "byte_identical"},
+    "throttle": {"config", "n_ranks", "flush_bw_cap", "total_bytes",
+                 "real_flush_s", "sim_flush_s"},
+}
+
+ALL_STRATEGIES = {
+    "file_per_process", "posix", "mpiio", "stripe_aligned", "gio_sync"
+}
+
 SAVE_SPEEDUP_BAR = 3.0
+SUPERSESSION_SKIP_BAR = 0.5     # skipped_frac >= this (ISSUE 5a)
+RESUME_REWRITE_BAR = 0.25       # rewrite_frac < this (ISSUE 5b)
 
 
 def fail(msg: str, errors: list) -> None:
@@ -85,11 +110,12 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
         return fail(f"{path.name}: rows must be a non-empty list", errors)
     for i, row in enumerate(rows):
         need = set(fields)
-        if benchmark in ("restore_scale", "codec_phase"):
-            kinds = (
-                RESTORE_KIND_FIELDS if benchmark == "restore_scale"
-                else CODEC_KIND_FIELDS
-            )
+        if benchmark in ("restore_scale", "codec_phase", "flush_runtime"):
+            kinds = {
+                "restore_scale": RESTORE_KIND_FIELDS,
+                "codec_phase": CODEC_KIND_FIELDS,
+                "flush_runtime": FLUSH_RUNTIME_KIND_FIELDS,
+            }[benchmark]
             kind = row.get("kind")
             if kind not in kinds:
                 fail(f"{path.name} row {i}: unknown kind {kind!r}", errors)
@@ -115,6 +141,41 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
                 f"{path.name}: largest geometry {largest['config']} speedup "
                 f"{largest['speedup']}x < {SAVE_SPEEDUP_BAR}x acceptance bar",
                 errors,
+            )
+
+    if benchmark == "flush_runtime" and not errors:
+        sup = [r for r in rows if r.get("kind") == "supersession"]
+        res = [r for r in rows if r.get("kind") == "resume"]
+        if not sup:
+            fail(f"{path.name}: no supersession rows", errors)
+        for r in sup:
+            if r["skipped_frac"] < SUPERSESSION_SKIP_BAR:
+                fail(
+                    f"{path.name}: {r['config']} skipped_frac "
+                    f"{r['skipped_frac']} < {SUPERSESSION_SKIP_BAR} bar",
+                    errors,
+                )
+            if not r["newest_flushed"]:
+                fail(
+                    f"{path.name}: {r['config']} newest step did not reach "
+                    "flush_done under supersession", errors,
+                )
+        for r in res:
+            if r["rewrite_frac"] >= RESUME_REWRITE_BAR:
+                fail(
+                    f"{path.name}: {r['config']} rewrite_frac "
+                    f"{r['rewrite_frac']} >= {RESUME_REWRITE_BAR} bar", errors,
+                )
+            if not r["byte_identical"]:
+                fail(
+                    f"{path.name}: {r['config']} resumed flush is not "
+                    "byte-identical", errors,
+                )
+        covered = {r["strategy"] for r in res}
+        if not ALL_STRATEGIES <= covered:
+            fail(
+                f"{path.name}: resume rows missing strategies "
+                f"{sorted(ALL_STRATEGIES - covered)}", errors,
             )
 
 

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Docs↔code sync checker (CI gate; stdlib + the package itself).
+
+Every backtick-quoted dotted ``repro.*`` reference in README.md,
+EXPERIMENTS.md and docs/*.md must actually resolve: the longest
+importable module prefix is imported and the remaining parts are
+resolved with ``getattr`` (classes, functions, methods, dataclass
+attributes).  Docs that name a module, class or function the code no
+longer has fail CI — prose cannot silently drift from the API again.
+
+Usage::
+
+    PYTHONPATH=src python tools/doc_sync_check.py [FILES...]
+    # default: README.md, EXPERIMENTS.md, docs/*.md
+"""
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+# `repro.x.y.Z` / `repro.x.y.Z()` inside backticks; trailing call parens
+# and a trailing dot (sentence punctuation inside the backticks) are
+# tolerated and stripped.
+TOKEN_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)(?:\(\))?\.?`")
+
+DEFAULT_FILES = ["README.md", "EXPERIMENTS.md"]
+DEFAULT_GLOBS = ["docs/*.md"]
+
+
+def resolve(token: str) -> bool:
+    parts = token.split(".")
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+        except ImportError:
+            continue
+        for attr in parts[i:]:
+            if not hasattr(obj, attr):
+                return False
+            obj = getattr(obj, attr)
+        return True
+    return False
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    seen = set()
+    for m in TOKEN_RE.finditer(path.read_text(encoding="utf-8")):
+        token = m.group(1)
+        if token in seen:
+            continue
+        seen.add(token)
+        if not resolve(token):
+            errors.append(f"{path}: `{token}` does not resolve via import")
+    return errors
+
+
+def main(argv) -> int:
+    root = Path(__file__).resolve().parents[1]
+    src = root / "src"
+    if src.is_dir() and str(src) not in sys.path:
+        sys.path.insert(0, str(src))
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = [root / f for f in DEFAULT_FILES]
+        files += sorted(p for g in DEFAULT_GLOBS for p in root.glob(g))
+    errors = []
+    checked = 0
+    for f in files:
+        if f.is_file():
+            checked += 1
+            errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(
+        f"checked {checked} markdown files for repro.* references: "
+        f"{'OK' if not errors else f'{len(errors)} drifted reference(s)'}"
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
