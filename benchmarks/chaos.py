@@ -1,0 +1,346 @@
+"""Deterministic chaos sweep: seeded fault schedules vs the self-healing
+storage runtime (ISSUE 6 acceptance harness).
+
+Each seed derives one complete scenario — aggregation strategy, partner
+replication, codec, and a :meth:`~repro.core.faults.FaultPlan.generate`
+schedule of transient EIO, ENOSPC, torn writes, bit flips, I/O stalls
+and node crashes at exact op indices — then drives the full
+save → flush → scrub → repair → restore loop and asserts the runtime's
+invariants:
+
+1. every ``flush_done`` step that is not quarantined restores
+   **byte-identically** (verify-phase read faults may delay it, never
+   corrupt it);
+2. schedules made only of transient kinds produce **zero**
+   ``flush_errors`` — the retry layer heals them invisibly;
+3. permanent flush failures (ENOSPC) stay journal-resumable:
+   ``resume_flushes()`` finishes them and they then flush-verify;
+4. single-domain damage is repaired back to a clean re-scrub
+   (``repair_success_frac`` gated ≥ 0.95 by tools/bench_check.py);
+5. irreparable damage lands in ``quarantined`` — restore raises a
+   clean error, never returns wrong bytes.
+
+Any violation is recorded per schedule (``invariant_violations``) and
+fails the sweep's exit code; the committed ``BENCH_chaos.json`` is the
+CI-gated record (``python tools/bench_check.py``).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/chaos.py                  # full sweep
+    PYTHONPATH=src python benchmarks/chaos.py --quick          # CI smoke
+    PYTHONPATH=src python benchmarks/chaos.py --out BENCH_chaos.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import (  # noqa: E402
+    CheckpointConfig,
+    CheckpointManager,
+    theta_like,
+)
+from repro.core.faults import FAULT_KINDS, TRANSIENT_KINDS, FaultPlan  # noqa: E402
+
+ALL_STRATEGIES = ["file_per_process", "posix", "mpiio", "stripe_aligned", "gio_sync"]
+#: kinds whose firing leaves on-disk damage that only scrub-and-repair
+#: (not the inline retry layer) can heal
+DAMAGE_KINDS = {"bit_flip", "node_crash"}
+N_STEPS = 3
+QUICK_SEEDS = 12
+FULL_SEEDS = 120
+
+
+def ref_state(seed: int, step: int) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed * 1_000_003 + step)
+    return {
+        "w": rng.standard_normal((2048, 4)).astype(np.float32),
+        "b": np.full((64,), step, np.float32),
+        "c": rng.integers(0, 255, (4096,), dtype=np.uint8),
+    }
+
+
+def trees_equal(a: Dict, b: Dict) -> bool:
+    return set(a) == set(b) and all(
+        np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a
+    )
+
+
+def run_schedule(seed: int, *, root: str) -> Dict[str, Any]:
+    """One seeded scenario end to end; returns its result row."""
+    strategy = ALL_STRATEGIES[seed % len(ALL_STRATEGIES)]
+    partner = seed % 2 == 0
+    delta = seed % 3 == 0
+    # max_index sized to the actual op streams of this geometry (a few
+    # extents per file per step): larger indices would never fire
+    faults = FaultPlan.generate(seed=seed * 7919 + 13, n_nodes=2, max_index=10)
+    cfg = CheckpointConfig(
+        root=str(Path(root) / "ckpt"),
+        cluster=theta_like(2, 2),
+        strategy=strategy,
+        async_flush=False,
+        partner_replication=partner,
+        codec="zstd+delta" if delta else "none",
+        delta_every=4,
+        chunk_size=4096,
+        retry_base_delay=0.002,
+        retry_max_delay=0.02,
+    )
+    row: Dict[str, Any] = {
+        "kind": "schedule",
+        "seed": seed,
+        "strategy": strategy,
+        "partner_replication": partner,
+        "codec": cfg.codec,
+        "n_steps": N_STEPS,
+        "planned_kinds": sorted({s.kind for s in faults.specs}),
+        "invariant_violations": [],
+    }
+    violations: List[str] = row["invariant_violations"]
+    t0 = time.perf_counter()
+    mgr = CheckpointManager(cfg, faults=faults)
+    try:
+        # ---- save phase (faults armed) ----
+        faults.arm("save")
+        io_retries = 0
+        save_failed: List[int] = []
+        for s in range(1, N_STEPS + 1):
+            try:
+                st = mgr.save(s, ref_state(seed, s))
+                if st.flush is not None:
+                    io_retries += st.flush.io_retries
+            except OSError:
+                # a permanent fault crashed the save itself: either the
+                # local phase died (no manifest — the step never exists)
+                # or, under sync flush, the PFS flush raised through
+                # save() leaving a journal-resumable flush_partial
+                save_failed.append(s)
+        flush_errors = list(mgr.flush_errors)
+        failed_steps = {st for st, _ in flush_errors} | set(save_failed)
+        resumed = {}
+        if failed_steps:
+            # permanent flush failures must stay journal-resumable
+            resumed = mgr.resume_flushes()
+            io_retries += sum(r.io_retries for r in resumed.values())
+            for step in sorted(failed_steps):
+                if step in resumed or step in mgr.steps("pfs"):
+                    continue
+                if step not in mgr.steps("local"):
+                    continue  # local phase died: the step never committed
+                # a second fault may legitimately fail the resume too;
+                # only a *fault-free* failed resume is a violation
+                if not any(e[0] == step for e in mgr.flush_errors):
+                    violations.append(
+                        f"step {step}: failed flush neither resumed "
+                        "nor re-reported"
+                    )
+        faults.disarm()
+        row["save_failed_steps"] = save_failed
+        row["flush_errors"] = len(flush_errors)
+        row["resumed_steps"] = sorted(resumed)
+        row["io_retries"] = io_retries
+        fired = faults.fired_kinds()
+        row["fired_kinds"] = sorted(fired)
+        row["n_fired"] = len(faults.fired)
+
+        # invariant 2: transient-only schedules heal with zero errors
+        planned = {s.kind for s in faults.specs}
+        row["transient_only"] = bool(planned) and planned <= TRANSIENT_KINDS
+        if row["transient_only"] and (flush_errors or save_failed):
+            violations.append(
+                "transient-only schedule produced failures: "
+                f"flush={flush_errors} save={save_failed}"
+            )
+
+        # ---- scrub-and-repair phase (faults disarmed) ----
+        known = sorted(set(mgr.steps("local")) | set(mgr.steps("pfs")))
+        quarantined: List[int] = []
+        repaired_ranks = 0
+        rescrub_clean = True
+        for s in known:
+            rep = mgr.validate(s, repair=True)
+            r = rep["repair"]
+            repaired_ranks += len(r.pfs_repaired) + len(r.l1_restored) + len(
+                r.partner_restored
+            )
+            if r.quarantined:
+                quarantined.append(s)
+                continue
+            post = rep.get("post", {})
+            for level in ("pfs", "local", "partner"):
+                if not all(post.get(level, {}).values() or [True]):
+                    rescrub_clean = False
+                    violations.append(
+                        f"step {s}: {level} still dirty after repair: "
+                        f"{post.get(level)}"
+                    )
+        quarantined = sorted(
+            set(quarantined)
+            | {s for s in known if s not in mgr.steps("local") and s not in mgr.steps("pfs")}
+        )
+        row["quarantined_steps"] = quarantined
+        row["repaired_ranks"] = repaired_ranks
+
+        # invariant 4: single-domain damage with a surviving redundant
+        # copy must repair back to a clean re-scrub.  The flush
+        # aggregates PFS bytes *from the L1 blobs* (VELOC semantics),
+        # so an un-replicated L1 bit flip propagates to the PFS — both
+        # copies bad is genuinely irreparable and quarantine (inv. 5)
+        # is the required outcome, not a repair failure.
+        domains = {f[1] for f in faults.fired}
+        row["single_domain"] = len(domains) == 1
+        row["damage"] = bool(fired & DAMAGE_KINDS)
+        redundant = all(
+            partner
+            or (kind == "bit_flip" and domain in ("pfs", "partner"))
+            or kind not in DAMAGE_KINDS
+            for kind, domain, _op, _idx in faults.fired
+        )
+        row["redundancy_survives"] = redundant
+        row["repair_relevant"] = (
+            row["single_domain"] and row["damage"] and redundant
+        )
+        row["repair_success"] = rescrub_clean and not quarantined
+        if row["repair_relevant"] and quarantined:
+            violations.append(
+                f"repairable single-domain schedule quarantined {quarantined}"
+            )
+
+        # ---- verify phase (read-side faults armed) ----
+        faults.arm("verify")
+        restored_ok = True
+        for s in mgr.steps("pfs"):
+            mgr._l0 = None
+            mgr._last_full = None
+            try:
+                got_step, tree = mgr.restore(ref_state(seed, s), step=s)
+            except Exception as e:
+                restored_ok = False
+                violations.append(f"step {s}: flush_done restore raised {e!r}")
+                continue
+            if got_step != s or not trees_equal(tree, ref_state(seed, s)):
+                restored_ok = False
+                violations.append(f"step {s}: restore not byte-identical")
+        # invariant 5: quarantined steps raise cleanly, never wrong bytes
+        for s in quarantined:
+            mgr._l0 = None
+            mgr._last_full = None
+            try:
+                mgr.restore(ref_state(seed, s), step=s)
+                restored_ok = False
+                violations.append(f"step {s}: quarantined step restored")
+            except Exception:
+                pass
+        faults.disarm()
+        row["restored_identical"] = restored_ok
+        row["verify_retries"] = sum(
+            1 for f in faults.fired if f[2] == "read"
+        )
+    finally:
+        mgr.close()
+    row["elapsed_s"] = round(time.perf_counter() - t0, 4)
+    return row
+
+
+def run_sweep(seeds: List[int], *, workdir: str) -> List[Dict[str, Any]]:
+    rows = []
+    for i, seed in enumerate(seeds):
+        row = run_schedule(seed, root=str(Path(workdir) / f"seed_{seed}"))
+        rows.append(row)
+        flag = "" if not row["invariant_violations"] else "  VIOLATION"
+        print(
+            f"[{i + 1:3d}/{len(seeds)}] seed={seed:<4d} {row['strategy']:<17s}"
+            f" fired={','.join(row['fired_kinds']) or '-':<40s}"
+            f" q={row['quarantined_steps']}{flag}"
+        )
+    return rows
+
+
+def summarize(rows: List[Dict[str, Any]], quick: bool) -> Dict[str, Any]:
+    relevant = [r for r in rows if r["repair_relevant"]]
+    n_rel = len(relevant)
+    kinds = set()
+    for r in rows:
+        kinds |= set(r["fired_kinds"])
+    return {
+        "kind": "chaos_summary",
+        "n_schedules": len(rows),
+        "n_violations": sum(len(r["invariant_violations"]) for r in rows),
+        "restored_identical": all(r["restored_identical"] for r in rows),
+        "transient_zero_errors": all(
+            r["flush_errors"] == 0 and not r["save_failed_steps"]
+            for r in rows
+            if r["transient_only"]
+        ),
+        "n_repair_relevant": n_rel,
+        "repair_success_frac": (
+            round(sum(r["repair_success"] for r in relevant) / n_rel, 4)
+            if n_rel
+            else 1.0
+        ),
+        "n_quarantined": sum(len(r["quarantined_steps"]) for r in rows),
+        "kinds_covered": sorted(kinds),
+        "strategies_covered": sorted({r["strategy"] for r in rows}),
+        "total_io_retries": sum(r["io_retries"] for r in rows),
+        "quick": quick,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke (fewer seeds)")
+    ap.add_argument("--seeds", type=int, default=None, help="override seed count")
+    ap.add_argument("--out", type=str, default=None, help="write BENCH json here")
+    args = ap.parse_args()
+    n = args.seeds or (QUICK_SEEDS if args.quick else FULL_SEEDS)
+    seeds = list(range(n))
+    with tempfile.TemporaryDirectory(prefix="chaos_") as workdir:
+        rows = run_sweep(seeds, workdir=workdir)
+    summary = summarize(rows, args.quick)
+    rows.append(summary)
+    print(json.dumps(summary, indent=1))
+
+    ok = summary["n_violations"] == 0 and summary["restored_identical"]
+    if not args.quick:
+        # full-sweep coverage bars (quick mode is too small to demand them)
+        if set(summary["kinds_covered"]) != set(FAULT_KINDS):
+            print(
+                f"chaos: kinds not covered: "
+                f"{sorted(set(FAULT_KINDS) - set(summary['kinds_covered']))}",
+                file=sys.stderr,
+            )
+            ok = False
+        if set(summary["strategies_covered"]) != set(ALL_STRATEGIES):
+            print("chaos: not all strategies covered", file=sys.stderr)
+            ok = False
+        if summary["repair_success_frac"] < 0.95:
+            print(
+                f"chaos: repair_success_frac {summary['repair_success_frac']}"
+                " < 0.95",
+                file=sys.stderr,
+            )
+            ok = False
+    if args.out:
+        doc = {"benchmark": "chaos", "quick": args.quick, "rows": rows}
+        Path(args.out).write_text(json.dumps(doc, indent=1) + "\n")
+        print(f"wrote {args.out}")
+    if not ok:
+        for r in rows:
+            for v in r.get("invariant_violations", []):
+                print(f"chaos: seed {r['seed']}: {v}", file=sys.stderr)
+        return 1
+    print(f"chaos: OK ({summary['n_schedules']} schedules, zero violations)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

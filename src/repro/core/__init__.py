@@ -12,6 +12,8 @@ Public API:
 """
 from repro.core.cluster import ClusterSpec, NodeSpec, PFSSpec, theta_like
 from repro.core.engine import CheckpointConfig, CheckpointManager, SaveStats
+from repro.core.faults import FaultPlan, FaultSpec
+from repro.core.repair import RepairReport, repair_step
 from repro.core.plan import (
     FileLayout,
     FlushPlan,
@@ -56,8 +58,12 @@ from repro.core.storage import (
     FlushJournal,
     FlushResult,
     LocalStore,
+    MissingBlobError,
     RealExecutor,
+    RetryPolicy,
+    StorageError,
     TokenBucket,
+    classify_error,
 )
 from repro.core.strategies import STRATEGIES, make_plan
 
@@ -108,8 +114,16 @@ __all__ = [
     "FlushJournal",
     "FlushResult",
     "LocalStore",
+    "MissingBlobError",
     "RealExecutor",
+    "RetryPolicy",
+    "StorageError",
     "TokenBucket",
+    "classify_error",
+    "FaultPlan",
+    "FaultSpec",
+    "RepairReport",
+    "repair_step",
     "STRATEGIES",
     "make_plan",
 ]

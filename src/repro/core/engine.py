@@ -110,6 +110,7 @@ from repro.core.serialize import (
     encode_state,
     _run_grouped,
 )
+from repro.core.faults import FaultPlan
 from repro.core.storage import (
     CancelToken,
     FlushCancelled,
@@ -118,6 +119,7 @@ from repro.core.storage import (
     LocalStore,
     ReadResult,
     RealExecutor,
+    RetryPolicy,
     TokenBucket,
     placement_from_plan,
 )
@@ -181,6 +183,15 @@ class CheckpointConfig:
     # completed extent, so interrupted flushes finish via
     # resume_flushes() instead of restarting from byte zero.
     resumable_flushes: bool = True
+    # ---- transient-retry I/O (self-healing runtime) ----
+    # Every raw blob/extent read and write is retried on transient
+    # errno failures (classify_error) with bounded exponential backoff
+    # + jitter under a per-op deadline; retry_attempts <= 1 disables
+    # the retry layer entirely (seed behaviour: first error wins).
+    retry_attempts: int = 5
+    retry_base_delay: float = 0.02     # seconds, doubles per attempt
+    retry_max_delay: float = 0.5       # backoff ceiling per sleep
+    retry_deadline: float = 30.0       # per-op wall-clock budget
 
 
 @dataclass
@@ -222,11 +233,29 @@ class CheckpointManager:
         config: CheckpointConfig,
         *,
         fault_hook: Optional[Callable] = None,
+        faults: Optional["FaultPlan"] = None,
     ):
         self.cfg = config
         self.cluster = config.cluster
         self.root = Path(config.root)
-        self.local = LocalStore(self.root / "local", self.cluster.n_nodes)
+        # transient-retry layer shared by L1 blob I/O and PFS extent I/O
+        self.retry: Optional[RetryPolicy] = (
+            RetryPolicy(
+                attempts=config.retry_attempts,
+                base_delay=config.retry_base_delay,
+                max_delay=config.retry_max_delay,
+                deadline=config.retry_deadline,
+            )
+            if config.retry_attempts > 1
+            else None
+        )
+        self.faults = faults  # deterministic chaos schedule (core/faults.py)
+        self.local = LocalStore(
+            self.root / "local", self.cluster.n_nodes,
+            faults=faults, retry=self.retry,
+        )
+        if faults is not None:
+            faults.bind(self.local)  # node_crash specs drop L1 dirs
         self.pfs_dir = self.root / "pfs"
         self.pfs_dir.mkdir(parents=True, exist_ok=True)
         (self.root / "local" / "manifests").mkdir(parents=True, exist_ok=True)
@@ -235,6 +264,8 @@ class CheckpointManager:
             self.local,
             io_threads=config.io_threads,
             fault_hook=fault_hook,
+            faults=faults,
+            retry=self.retry,
         )
         self._l0: Optional[EncodedState] = None
         self._last_full: Optional[EncodedState] = None
@@ -762,7 +793,10 @@ class CheckpointManager:
             out = []
             for p in sorted((self.root / "local" / "manifests").glob("step_*.json")):
                 try:
-                    out.append(self._cached_manifest(p).step)
+                    man = self._cached_manifest(p)
+                    if man.status == "quarantined":
+                        continue  # no good copy anywhere: never listed
+                    out.append(man.step)
                 except Exception:
                     continue
             return out
@@ -827,13 +861,24 @@ class CheckpointManager:
     def _manifest_pfs(self, step: int) -> Manifest:
         p = self.pfs_dir / f"step_{step:08d}" / "manifest.json"
         man = self._cached_manifest(p)
+        if man.status == "quarantined":
+            raise IOError(
+                f"step {step}: quarantined (scrub-and-repair found no "
+                "intact copy) — excluded from restore and delta-base use"
+            )
         if man.status != "flush_done":
             raise IOError(f"step {step}: flush incomplete")
         return man
 
     def _manifest_local(self, step: int) -> Manifest:
         p = self.root / "local" / "manifests" / f"step_{step:08d}.json"
-        return self._cached_manifest(p)
+        man = self._cached_manifest(p)
+        if man.status == "quarantined":
+            raise IOError(
+                f"step {step}: quarantined (scrub-and-repair found no "
+                "intact copy) — excluded from restore and delta-base use"
+            )
+        return man
 
     @staticmethod
     def _decode_target(man: Manifest, target: Any) -> Any:
@@ -1347,14 +1392,34 @@ class CheckpointManager:
 
     # ----------------------------------------------------------------- scrub
 
-    def validate(self, step: int) -> Dict[str, Any]:
+    def validate(self, step: int, *, repair: bool = False) -> Dict[str, Any]:
         """Integrity scrub of one checkpoint: re-read every rank blob on
         every available level and verify its manifest CRC.
 
-        Returns {"pfs": {rank: ok}, "local": {rank: ok}} (levels missing
-        entirely are reported as {}).  Production fleets run this against
-        cold checkpoints before relying on them for elastic restarts.
+        Returns ``{"pfs": {rank: ok}, "local": {rank: ok}, "partner":
+        {rank: ok}}`` (levels missing entirely are reported as ``{}``;
+        ``partner`` only appears when partner replication is configured).
+        Production fleets run this against cold checkpoints before
+        relying on them for elastic restarts.
+
+        ``repair=True`` turns the scrub into scrub-and-repair
+        (:func:`repro.core.repair.repair_step`): damaged PFS extents are
+        rewritten from surviving L1/partner copies through the columnar
+        placement, lost L1/partner blobs are re-replicated from the PFS
+        (anti-entropy), and a step with *no* intact copy of some rank is
+        quarantined — the report gains ``"repair"`` (a
+        :class:`~repro.core.repair.RepairReport`) and ``"post"`` (the
+        re-scrub after repair).
         """
+        report = self._scrub(step)
+        if repair:
+            from repro.core.repair import repair_step
+
+            report["repair"] = repair_step(self, step, scrub=report)
+            report["post"] = self._scrub(step)
+        return report
+
+    def _scrub(self, step: int) -> Dict[str, Any]:
         report: Dict[str, Any] = {"pfs": {}, "local": {}}
         try:
             man = self._manifest_pfs(step)
@@ -1379,12 +1444,25 @@ class CheckpointManager:
         try:
             man = self._manifest_local(step)
             ppn = man.procs_per_node
+            n_nodes = max(1, man.world_size // ppn)
+            replicated = self.cfg.partner_replication and n_nodes > 1
+            if replicated:
+                report["partner"] = {}
             for r in range(man.world_size):
                 try:
                     blob = self.local.read_blob(r // ppn, step, r)
                     report["local"][r] = crc32(blob) == man.ranks[r].crc
                 except Exception:
                     report["local"][r] = False
+                if replicated:
+                    partner = (r // ppn + 1) % n_nodes
+                    try:
+                        blob = self.local.read_blob(
+                            partner, step, r, partner=True
+                        )
+                        report["partner"][r] = crc32(blob) == man.ranks[r].crc
+                    except Exception:
+                        report["partner"][r] = False
         except Exception:
             pass
         return report

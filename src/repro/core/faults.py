@@ -1,0 +1,329 @@
+"""Deterministic fault injection for the storage runtime.
+
+The chaos surface for the self-healing storage stack: a seeded
+:class:`FaultPlan` schedules faults at **exact operation indices** in
+each storage domain, so a failure scenario is a pure function of its
+seed — rerunning a seed replays the same schedule, and a sweep of seeds
+(``benchmarks/chaos.py``) becomes a reproducible robustness suite.
+This supersedes the ad-hoc ``fault_hook(write_item)`` callback as the
+injection surface (the hook survives for targeted tests).
+
+Domains and operations
+----------------------
+
+Every raw I/O call in the storage layer is an *operation* in one of
+three domains:
+
+* ``l1`` — home-node blob reads/writes (:class:`~repro.core.storage.
+  LocalStore`);
+* ``partner`` — partner-replica blob reads/writes;
+* ``pfs`` — aggregated-file ``pwrite``/``pread`` through
+  :class:`~repro.core.storage.RealExecutor`.
+
+Each ``(domain, op)`` stream keeps a monotonically increasing counter
+(every *attempt* counts, including retries); a :class:`FaultSpec`
+fires when its stream's counter reaches ``index``.
+
+Fault kinds
+-----------
+
+=================  ======================================================
+``transient_eio``  raises ``OSError(EIO)`` for ``count`` consecutive
+                   attempts, then heals — the retry policy's bread and
+                   butter.
+``enospc``         raises ``OSError(ENOSPC)`` once — classified
+                   permanent, never retried; the flush fails but stays
+                   journal-resumable.
+``torn_write``     writes only a prefix (``frac``) of the payload, then
+                   raises ``OSError(EIO)`` — a retried attempt rewrites
+                   the full extent (idempotent destinations).
+``bit_flip``       silently flips one bit of the payload before the
+                   write — caught later by CRC scrub, never by errno.
+``stall``          sleeps ``delay`` seconds, then proceeds — exercises
+                   deadline accounting without failing the op.
+``node_crash``     drops node ``node``'s L1 directory mid-flush
+                   (:meth:`~repro.core.storage.LocalStore.drop_node`)
+                   — subsequent source reads fall back to the partner
+                   replica or fail the flush.
+=================  ======================================================
+
+Phases
+------
+
+Specs carry a ``phase`` (``"save"`` or ``"verify"``); only specs of
+the currently armed phase fire.  :meth:`FaultPlan.arm` switches phase
+and zeroes all counters, so a chaos schedule can target the
+save→flush window and, separately, the scrub→restore window with
+index spaces that both start at zero.
+"""
+from __future__ import annotations
+
+import errno
+import random
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+FAULT_KINDS = (
+    "transient_eio",
+    "enospc",
+    "torn_write",
+    "bit_flip",
+    "stall",
+    "node_crash",
+)
+DOMAINS = ("l1", "partner", "pfs")
+PHASES = ("save", "verify")
+
+#: kinds that errno-classify as transient — a schedule made only of
+#: these must produce zero ``flush_errors`` (the retry layer heals them)
+TRANSIENT_KINDS = frozenset({"transient_eio", "stall"})
+
+
+@dataclass
+class FaultSpec:
+    """One scheduled fault: ``kind`` fires at attempt ``index`` of the
+    ``(domain, op)`` operation stream while ``phase`` is armed."""
+
+    kind: str
+    domain: str = "pfs"
+    op: str = "write"  # "write" | "read"
+    index: int = 0
+    count: int = 1  # consecutive failing attempts (transient_eio)
+    phase: str = "save"
+    frac: float = 0.5  # fraction actually written by a torn write
+    bit: int = 0  # bit position flipped by bit_flip (mod payload bits)
+    delay: float = 0.02  # stall seconds
+    node: int = 0  # node dropped by node_crash
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind: {self.kind!r}")
+        if self.domain not in DOMAINS:
+            raise ValueError(f"unknown fault domain: {self.domain!r}")
+        if self.op not in ("write", "read"):
+            raise ValueError(f"unknown fault op: {self.op!r}")
+        if self.phase not in PHASES:
+            raise ValueError(f"unknown fault phase: {self.phase!r}")
+
+
+def flip_bit(data, bit: int) -> bytes:
+    """Return ``data`` with one bit flipped (position ``bit`` modulo
+    the payload's bit length); empty payloads pass through."""
+    buf = bytearray(data)
+    if not buf:
+        return bytes(buf)
+    b = bit % (len(buf) * 8)
+    buf[b >> 3] ^= 1 << (b & 7)
+    return bytes(buf)
+
+
+class FaultPlan:
+    """A seeded, deterministic schedule of :class:`FaultSpec`\\ s.
+
+    Thread-safe: the per-``(domain, op)`` attempt counters and the
+    armed-spec state live behind one lock, so concurrent writer/reader
+    threads observe a single global index space per stream.  Which
+    thread's attempt lands on a scheduled index may vary with
+    interleaving; *that an attempt does*, and what happens to it, is
+    fixed by the seed.
+
+    ``fired`` records every injection as ``(kind, domain, op, index)``
+    tuples for assertions and harness telemetry.
+    """
+
+    def __init__(self, specs: Sequence[FaultSpec], *, seed: Optional[int] = None):
+        self.specs = list(specs)
+        self.seed = seed
+        self._lock = threading.Lock()
+        self._counters: dict = {}
+        self._remaining = {id(s): max(1, int(s.count)) for s in self.specs}
+        self._armed: dict = {}  # (domain, op) -> spec currently failing
+        self._phase = "save"
+        self._local = None  # bound LocalStore (node_crash target)
+        self._enabled = True
+        self.fired: List[Tuple[str, str, str, int]] = []
+
+    # ---- lifecycle --------------------------------------------------------
+
+    def bind(self, local) -> None:
+        """Attach the :class:`~repro.core.storage.LocalStore` that
+        ``node_crash`` specs drop nodes from (the manager does this)."""
+        self._local = local
+
+    def arm(self, phase: str) -> None:
+        """Switch the active phase and zero every stream counter."""
+        if phase not in PHASES:
+            raise ValueError(f"unknown fault phase: {phase!r}")
+        with self._lock:
+            self._phase = phase
+            self._enabled = True
+            self._counters.clear()
+            self._armed.clear()
+
+    def disarm(self) -> None:
+        """Stop injecting entirely (schedule exhausted / out of window)."""
+        with self._lock:
+            self._enabled = False
+
+    @property
+    def phase(self) -> str:
+        return self._phase
+
+    def fired_kinds(self) -> set:
+        return {k for (k, _, _, _) in self.fired}
+
+    # ---- injection surface -----------------------------------------------
+
+    def on_op(self, domain: str, op: str, what: str = "") -> Optional[FaultSpec]:
+        """Account one attempt of ``(domain, op)`` and inject its fault.
+
+        Raises for ``transient_eio``/``enospc``/``torn-write-less``
+        error kinds, sleeps for ``stall``, drops a node for
+        ``node_crash``; returns the spec for the data-transforming
+        kinds (``bit_flip``, ``torn_write``) so the write site can
+        apply them, else ``None``.
+        """
+        with self._lock:
+            if not self._enabled:
+                return None
+            key = (domain, op)
+            idx = self._counters.get(key, 0)
+            self._counters[key] = idx + 1
+            spec = self._armed.get(key)
+            if spec is None:
+                for s in self.specs:
+                    if (
+                        s.phase == self._phase
+                        and s.domain == domain
+                        and s.op == op
+                        and s.index == idx
+                        and self._remaining[id(s)] > 0
+                    ):
+                        spec = s
+                        break
+                if spec is None:
+                    return None
+            self._remaining[id(spec)] -= 1
+            if spec.kind == "transient_eio" and self._remaining[id(spec)] > 0:
+                self._armed[key] = spec  # keep failing the next attempts
+            else:
+                self._armed.pop(key, None)
+            self.fired.append((spec.kind, domain, op, idx))
+            local = self._local
+        if spec.kind == "transient_eio":
+            raise OSError(
+                errno.EIO, f"injected transient EIO: {domain}/{op}[{idx}] {what}"
+            )
+        if spec.kind == "enospc":
+            raise OSError(
+                errno.ENOSPC, f"injected ENOSPC: {domain}/{op}[{idx}] {what}"
+            )
+        if spec.kind == "stall":
+            time.sleep(max(0.0, spec.delay))
+            return None
+        if spec.kind == "node_crash":
+            if local is not None:
+                local.drop_node(spec.node)
+            return None
+        return spec  # bit_flip / torn_write: caller applies
+
+    # ---- seeded generation ------------------------------------------------
+
+    #: minimum index gap between same-stream specs — keeps the worst
+    #: consecutive-failure run below the default retry budget
+    MIN_GAP = 8
+
+    @staticmethod
+    def generate(
+        seed: int,
+        *,
+        n_faults: Optional[int] = None,
+        kinds: Sequence[str] = FAULT_KINDS,
+        domains: Sequence[str] = DOMAINS,
+        max_index: int = 40,
+        n_nodes: int = 2,
+        verify_reads: bool = True,
+    ) -> "FaultPlan":
+        """Build a deterministic schedule from ``seed``.
+
+        Constraints keep schedules *survivable by design*: transient
+        counts stay ≤ 2, same-stream indices are spaced ≥
+        :attr:`MIN_GAP` apart (a retry run can never eat through more
+        than one transient spec plus its neighbour), and verify-phase
+        specs are restricted to read-side transient kinds so a restore
+        is delayed, never doomed, by them.
+        """
+        rng = random.Random(seed)
+        n = n_faults if n_faults is not None else rng.randint(1, 3)
+        specs: List[FaultSpec] = []
+        used: dict = {}  # (phase, domain, op) -> list of taken indices
+        for _ in range(int(n)):
+            kind = rng.choice(list(kinds))
+            if kind == "node_crash":
+                domain, op = "pfs", "write"
+            elif kind in ("enospc", "torn_write", "bit_flip"):
+                domain, op = rng.choice(list(domains)), "write"
+            else:  # transient_eio / stall: either side
+                domain = rng.choice(list(domains))
+                op = rng.choice(["write", "read"]) if domain != "partner" else "write"
+            phase = "save"
+            if (
+                verify_reads
+                and kind in TRANSIENT_KINDS
+                and rng.random() < 0.25
+            ):
+                phase, domain, op = "verify", "pfs", "read"
+            key = (phase, domain, op)
+            taken = used.setdefault(key, [])
+            for _try in range(16):
+                idx = rng.randrange(0, max(1, max_index))
+                if all(abs(idx - t) >= FaultPlan.MIN_GAP for t in taken):
+                    break
+            else:
+                continue  # stream too crowded: drop this fault
+            taken.append(idx)
+            specs.append(
+                FaultSpec(
+                    kind=kind,
+                    domain=domain,
+                    op=op,
+                    index=idx,
+                    count=rng.randint(1, 2) if kind == "transient_eio" else 1,
+                    phase=phase,
+                    frac=rng.uniform(0.1, 0.9),
+                    bit=rng.randrange(0, 1 << 20),
+                    delay=rng.uniform(0.005, 0.03),
+                    node=rng.randrange(0, max(1, n_nodes)),
+                )
+            )
+        return FaultPlan(specs, seed=seed)
+
+
+def inject_write(
+    faults: Optional[FaultPlan],
+    domain: str,
+    what: str,
+    data,
+    write_fn: Callable,
+) -> None:
+    """Run one write through the injection surface.
+
+    ``write_fn(buf)`` performs the raw write.  Error kinds raise before
+    any byte lands; ``bit_flip`` corrupts the payload silently;
+    ``torn_write`` writes a prefix and then raises ``EIO`` (the retry
+    layer rewrites the full extent — destinations are idempotent).
+    """
+    spec = faults.on_op(domain, "write", what) if faults is not None else None
+    if spec is None:
+        write_fn(data)
+        return
+    if spec.kind == "bit_flip":
+        write_fn(flip_bit(data, spec.bit))
+        return
+    if spec.kind == "torn_write":
+        n = max(1, int(len(data) * spec.frac)) if len(data) else 0
+        write_fn(bytes(data)[:n])
+        raise OSError(errno.EIO, f"injected torn write: {domain} {what}")
+    write_fn(data)  # pragma: no cover - no other data-transforming kinds

@@ -236,10 +236,13 @@ class Manifest:
     # superseded/failed edges.  "flush_partial" = an in-progress or
     # interrupted flush whose placement + extent journal make it
     # resumable (CheckpointManager.resume_flushes); "superseded" = a
-    # flush abandoned because a newer step replaced it.  restore() only
+    # flush abandoned because a newer step replaced it; "quarantined" =
+    # scrub-and-repair (repro.core.repair) found some rank with *no*
+    # intact copy on any level — terminal: excluded from restore,
+    # steps(), delta-base selection, and reaped by GC.  restore() only
     # trusts "flush_done" PFS checkpoints — every other state falls
     # back down the level ladder.
-    status: str = "pending"  # pending | local_done | flush_partial | flush_done | superseded
+    status: str = "pending"  # pending | local_done | flush_partial | flush_done | superseded | quarantined
 
     # -- read-side views ---------------------------------------------------
     #

@@ -17,10 +17,26 @@ during the flush, so the flush path exercises exactly what a distributed
 deployment would: node-local read -> (ship) -> pwrite at the planned
 offset of the shared file.
 
-Fault injection: ``fault_hook(write_item)`` may raise to simulate an
-active-backend crash mid-flush; partially written PFS state is left
-behind with the manifest still at ``local_done`` — restart logic must
-(and does, see tests) fall back to L1.
+Fault injection: the canonical surface is a seeded
+:class:`~repro.core.faults.FaultPlan` (``faults=`` on this executor and
+on :class:`LocalStore`) scheduling faults at exact op indices per
+domain; the legacy ``fault_hook(write_item)`` callback survives for
+targeted tests and may still raise to simulate an active-backend crash
+mid-flush.  Either way, partially written PFS state is left behind with
+the manifest still at ``local_done``/``flush_partial`` — restart logic
+must (and does, see tests) fall back to L1 or resume from the journal.
+
+Transient-fault tolerance: every raw blob/extent I/O can be wrapped in
+a :class:`RetryPolicy` — errno-classified transient failures
+(:func:`classify_error`) are retried with bounded exponential backoff
++ deterministic jitter under a per-op deadline, sleeping through
+``CancelToken.wait`` so a superseded flush cancels mid-backoff.
+Retry/giveup counts surface in :class:`FlushResult`/:class:`ReadResult`.
+Permanent failures propagate unchanged, so a failed flush keeps its
+journal and stays resumable.  L1 blob reads that still fail after
+retries are re-raised as structured :class:`StorageError`\\ s carrying
+``(level, step, rank, path)`` so ladder-fallback logs say exactly
+which copy failed and why.
 
 The read side mirrors the write side: :meth:`RealExecutor.
 execute_read_plan` runs a columnar :class:`~repro.core.plan.ReadPlan`
@@ -49,7 +65,9 @@ docs/OPERATIONS.md for the lifecycle):
 """
 from __future__ import annotations
 
+import errno
 import os
+import random
 import shutil
 import threading
 import time
@@ -70,6 +88,7 @@ from repro.core.plan import (
     coalesce_write_columns,
     merge_intervals,
 )
+from repro.core.faults import FaultPlan, inject_write
 from repro.core.serialize import Manifest, Placement
 
 
@@ -105,6 +124,151 @@ class CancelToken:
 
     def wait(self, timeout: float) -> bool:
         return self._ev.wait(timeout)
+
+
+#: errno values classified transient: the storage under us hiccuped but
+#: a retried attempt can plausibly succeed.  Everything else (ENOSPC,
+#: ENOENT, EACCES, EROFS, errno-less IOErrors, ...) is permanent.
+TRANSIENT_ERRNOS = frozenset(
+    {
+        errno.EIO,
+        errno.EAGAIN,
+        errno.EINTR,
+        errno.EBUSY,
+        errno.ETIMEDOUT,
+        errno.ESTALE,
+        errno.ECONNRESET,
+        errno.ENETRESET,
+    }
+)
+
+
+def classify_error(e: BaseException) -> str:
+    """``"transient"`` or ``"permanent"`` for one I/O exception.
+
+    Only ``OSError``\\ s with an errno in :data:`TRANSIENT_ERRNOS` are
+    transient; an errno-less ``IOError`` (e.g. a test's injected
+    backend crash) is deliberately permanent so legacy ``fault_hook``
+    semantics — one raise fails the flush — are preserved.
+    """
+    if isinstance(e, OSError) and e.errno in TRANSIENT_ERRNOS:
+        return "transient"
+    return "permanent"
+
+
+class StorageError(OSError):
+    """A blob/extent I/O failure with full ladder attribution.
+
+    Carries ``(level, step, rank, path)`` so restore-ladder fallback
+    log lines say exactly which copy failed and why, instead of a bare
+    ``[Errno 2] No such file or directory``.  Subclasses ``OSError``
+    (errno preserved from the cause) so every existing
+    ``except OSError`` fallback keeps working.
+    """
+
+    def __init__(self, level: str, step: int, rank: int, path, cause=None):
+        eno = cause.errno if isinstance(cause, OSError) else None
+        msg = (
+            f"{level} copy failed: step {step} rank {rank} at {path}"
+            f" ({cause if cause is not None else 'unknown error'})"
+        )
+        super().__init__(eno, msg)
+        self.level = level
+        self.step = int(step)
+        self.rank = int(rank)
+        self.path = str(path)
+        self.filename = str(path)
+
+    def __str__(self) -> str:  # no "[Errno n] msg: path" re-assembly
+        return self.args[1] if len(self.args) > 1 else super().__str__()
+
+
+class MissingBlobError(StorageError, FileNotFoundError):
+    """A :class:`StorageError` whose cause was a missing file — also a
+    ``FileNotFoundError`` so existence-based fallbacks still match."""
+
+
+def wrap_storage_error(level: str, step: int, rank: int, path, cause) -> StorageError:
+    cls = (
+        MissingBlobError
+        if isinstance(cause, FileNotFoundError)
+        else StorageError
+    )
+    return cls(level, step, rank, path, cause)
+
+
+@dataclass
+class RetryPolicy:
+    """Bounded retry with errno classification for raw storage ops.
+
+    ``run(fn)`` retries ``fn`` while :func:`classify_error` (or the
+    ``classify`` override) says the failure is transient, up to
+    ``attempts`` total tries and a per-op wall-clock ``deadline``.
+    Backoff is exponential from ``base_delay`` capped at ``max_delay``,
+    with deterministic seeded jitter (multiplier in ``[1, 1+jitter]``).
+    Sleeps go through ``CancelToken.wait`` when a token is passed, so a
+    cancelled flush aborts mid-backoff with :class:`FlushCancelled`
+    instead of sleeping out its schedule.
+
+    Policy-level totals (``retries``/``giveups``) accumulate across all
+    callers; per-call deltas go to the optional ``stats`` dict (keys
+    ``"retries"``/``"giveups"``, updated under the policy lock) which
+    the executor uses to fill :class:`FlushResult`/:class:`ReadResult`.
+    """
+
+    attempts: int = 5
+    base_delay: float = 0.02
+    max_delay: float = 0.5
+    deadline: float = 30.0
+    jitter: float = 0.5
+    seed: Optional[int] = None
+    classify: Optional[Callable[[BaseException], str]] = None
+
+    def __post_init__(self) -> None:
+        self._rng = random.Random(self.seed)
+        self._lock = threading.Lock()
+        self.retries = 0  # total sleeps taken before a re-attempt
+        self.giveups = 0  # transient failures that exhausted the budget
+
+    def _bump(self, key: str, stats: Optional[dict]) -> None:
+        with self._lock:
+            setattr(self, key, getattr(self, key) + 1)
+            if stats is not None:
+                stats[key] = stats.get(key, 0) + 1
+
+    def run(
+        self,
+        fn: Callable,
+        *,
+        cancel: Optional[CancelToken] = None,
+        stats: Optional[dict] = None,
+    ):
+        t0 = time.monotonic()
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except FlushCancelled:
+                raise  # a scheduling outcome, never an I/O failure
+            except OSError as e:
+                attempt += 1
+                kind = (self.classify or classify_error)(e)
+                if kind != "transient":
+                    raise
+                elapsed = time.monotonic() - t0
+                if attempt >= max(1, self.attempts) or elapsed >= self.deadline:
+                    self._bump("giveups", stats)
+                    raise
+                delay = min(self.max_delay, self.base_delay * (2 ** (attempt - 1)))
+                with self._lock:
+                    delay *= 1.0 + self.jitter * self._rng.random()
+                delay = min(delay, max(0.0, self.deadline - elapsed))
+                if cancel is not None:
+                    if cancel.wait(delay):
+                        raise FlushCancelled("cancelled while backing off")
+                elif delay > 0:
+                    time.sleep(delay)
+                self._bump("retries", stats)
 
 
 class TokenBucket:
@@ -282,11 +446,27 @@ class FlushJournal:
 
 
 class LocalStore:
-    """L1: per-node local directories (simulated node-local SSDs)."""
+    """L1: per-node local directories (simulated node-local SSDs).
 
-    def __init__(self, root: Path, n_nodes: int):
+    ``faults`` is the deterministic injection surface (domains ``l1``
+    for home blobs, ``partner`` for replicas); ``retry`` wraps every
+    raw blob read/write so transient hiccups heal in place.  Read
+    failures that survive retries are re-raised as structured
+    :class:`StorageError`\\ s with ``(level, step, rank, path)``.
+    """
+
+    def __init__(
+        self,
+        root: Path,
+        n_nodes: int,
+        *,
+        faults: Optional[FaultPlan] = None,
+        retry: Optional[RetryPolicy] = None,
+    ):
         self.root = Path(root)
         self.n_nodes = n_nodes
+        self.faults = faults
+        self.retry = retry
         # created-directory cache: the parallel local phase writes one
         # file per rank, and a paper-scale node dir must not pay a
         # mkdir round trip per blob
@@ -332,32 +512,48 @@ class LocalStore:
         and the PFS level cover it, and restore CRC-checks every blob
         before trusting it.  Per-file power-loss durability remains
         available via the reference path (``parallel_local=False``).
+
+        The atomic+sync path fsyncs the *parent directory* after the
+        rename: ``os.replace`` alone leaves the new directory entry in
+        volatile metadata, so without the dir fsync the blob could
+        vanish across power loss even though its data blocks were
+        synced — the rename itself must be made durable.
         """
         p = self.blob_path(node, step, rank, partner)
         self._ensure_dir(p.parent)
-        if atomic:
-            tmp = p.with_suffix(p.suffix + ".tmp")
-            with open(tmp, "wb") as f:
-                f.write(data)
-                f.flush()
-                if sync:
-                    os.fsync(f.fileno())
-            os.replace(tmp, p)
-        else:
-            with open(p, "wb") as f:
-                f.write(data)
-                f.flush()
-                if sync:
-                    os.fsync(f.fileno())
+        domain = "partner" if partner else "l1"
 
-    def sync_dir(self, node: int, step: int) -> None:
-        """Batched metadata-durability point for one node's step
-        directory: a single directory fsync covering every entry that
-        landed there.  Blob *data* durability on the parallel path is
-        explicitly entrusted to OS writeback + the level ladder (see
-        :meth:`write_blob`); the per-file-fsync reference path keeps
-        the seed's stronger guarantee."""
-        d = self.node_dir(node, step)
+        def _write(buf) -> None:
+            if atomic:
+                tmp = p.with_suffix(p.suffix + ".tmp")
+                with open(tmp, "wb") as f:
+                    f.write(buf)
+                    f.flush()
+                    if sync:
+                        os.fsync(f.fileno())
+                os.replace(tmp, p)
+                if sync:
+                    self._fsync_dir(p.parent)
+            else:
+                with open(p, "wb") as f:
+                    f.write(buf)
+                    f.flush()
+                    if sync:
+                        os.fsync(f.fileno())
+
+        def attempt() -> None:
+            inject_write(
+                self.faults, domain, f"step{step}/rank{rank}", data, _write
+            )
+
+        if self.retry is not None:
+            self.retry.run(attempt)
+        else:
+            attempt()
+
+    @staticmethod
+    def _fsync_dir(d: Path) -> None:
+        """Directory-entry durability: fsync ``d`` through an fd."""
         try:
             fd = os.open(str(d), os.O_RDONLY)
         except OSError:
@@ -369,18 +565,53 @@ class LocalStore:
         finally:
             os.close(fd)
 
+    def sync_dir(self, node: int, step: int) -> None:
+        """Batched metadata-durability point for one node's step
+        directory: a single directory fsync covering every entry that
+        landed there.  Blob *data* durability on the parallel path is
+        explicitly entrusted to OS writeback + the level ladder (see
+        :meth:`write_blob`); the per-file-fsync reference path keeps
+        the seed's stronger guarantee."""
+        self._fsync_dir(self.node_dir(node, step))
+
     def read_blob(
         self, node: int, step: int, rank: int, *, partner: bool = False
     ) -> bytes:
-        return self.blob_path(node, step, rank, partner).read_bytes()
+        p = self.blob_path(node, step, rank, partner)
+        domain = "partner" if partner else "l1"
+
+        def attempt() -> bytes:
+            if self.faults is not None:
+                self.faults.on_op(domain, "read", str(p))
+            return p.read_bytes()
+
+        try:
+            if self.retry is not None:
+                return self.retry.run(attempt)
+            return attempt()
+        except OSError as e:
+            raise wrap_storage_error(domain, step, rank, p, e) from e
 
     def read_slice(
         self, node: int, step: int, rank: int, offset: int, size: int,
         *, partner: bool = False,
     ) -> bytes:
-        with open(self.blob_path(node, step, rank, partner), "rb") as f:
-            f.seek(offset)
-            return f.read(size)
+        p = self.blob_path(node, step, rank, partner)
+        domain = "partner" if partner else "l1"
+
+        def attempt() -> bytes:
+            if self.faults is not None:
+                self.faults.on_op(domain, "read", str(p))
+            with open(p, "rb") as f:
+                f.seek(offset)
+                return f.read(size)
+
+        try:
+            if self.retry is not None:
+                return self.retry.run(attempt)
+            return attempt()
+        except OSError as e:
+            raise wrap_storage_error(domain, step, rank, p, e) from e
 
     def has_blob(self, node: int, step: int, rank: int, *, partner: bool = False) -> bool:
         return self.blob_path(node, step, rank, partner).exists()
@@ -417,6 +648,10 @@ class FlushResult:
     # writer threads slept in the rate limiter (throttle pressure).
     bytes_skipped: int = 0
     throttle_wait: float = 0.0
+    # retry-layer telemetry: transient PFS-write failures healed by a
+    # re-attempt, and ops that exhausted the retry budget anyway.
+    io_retries: int = 0
+    io_giveups: int = 0
 
 
 @dataclass
@@ -428,6 +663,8 @@ class ReadResult:
     bytes_read: int
     n_reads: int
     n_readers: int
+    io_retries: int = 0
+    io_giveups: int = 0
 
 
 class RealExecutor:
@@ -452,11 +689,15 @@ class RealExecutor:
         *,
         io_threads: int = 2,
         fault_hook: Optional[Callable[[WriteItem], None]] = None,
+        faults: Optional[FaultPlan] = None,
+        retry: Optional[RetryPolicy] = None,
     ):
         self.pfs_dir = Path(pfs_dir)
         self.local = local
         self.io_threads = max(1, io_threads)
         self.fault_hook = fault_hook
+        self.faults = faults  # deterministic injection (domain "pfs")
+        self.retry = retry  # transient-retry wrap for pwrites/preads
         self._pool: Optional[ThreadPoolExecutor] = None
         self._pool_lock = threading.Lock()
 
@@ -605,6 +846,7 @@ class RealExecutor:
 
             lock = threading.Lock()
             total = {"bytes": 0, "writes": 0, "skipped": 0, "throttle": 0.0}
+            retry_stats = {"retries": 0, "giveups": 0}
             hook = self.fault_hook
 
             def do_write(row: Tuple[int, ...]) -> None:
@@ -644,7 +886,19 @@ class RealExecutor:
                     raise IOError(
                         f"short read: rank {src_rank} [{soff}:{soff + size})"
                     )
-                os.pwrite(fds[names[fid]], data, foff)
+
+                def attempt() -> None:
+                    # the injection + pwrite is the retried unit: a torn
+                    # write's re-attempt rewrites the full extent
+                    inject_write(
+                        self.faults, "pfs", f"{names[fid]}@{foff}", data,
+                        lambda buf: os.pwrite(fds[names[fid]], buf, foff),
+                    )
+
+                if self.retry is not None:
+                    self.retry.run(attempt, cancel=cancel, stats=retry_stats)
+                else:
+                    attempt()
                 if journal is not None:
                     journal.record(fid, foff, size)
                 with lock:
@@ -679,6 +933,8 @@ class RealExecutor:
                 n_writes=total["writes"],
                 bytes_skipped=total["skipped"],
                 throttle_wait=total["throttle"],
+                io_retries=retry_stats["retries"],
+                io_giveups=retry_stats["giveups"],
             )
         finally:
             if journal is not None:
@@ -848,6 +1104,7 @@ class RealExecutor:
         fds: Dict[int, int] = {}
         lock = threading.Lock()
         total = {"bytes": 0, "reads": 0}
+        retry_stats = {"retries": 0, "giveups": 0}
         try:
             for f in np.unique(r.file_id).tolist():
                 fds[f] = os.open(str(sdir / rp.file_names[f]), os.O_RDONLY)
@@ -861,7 +1118,17 @@ class RealExecutor:
 
             def do_read(row: Tuple[int, int, int, int, int]) -> None:
                 fid, foff, size, req, doff = row
-                data = os.pread(fds[fid], size, foff)
+
+                def attempt() -> bytes:
+                    if self.faults is not None:
+                        self.faults.on_op("pfs", "read", rp.file_names[fid])
+                    return os.pread(fds[fid], size, foff)
+
+                data = (
+                    self.retry.run(attempt, stats=retry_stats)
+                    if self.retry is not None
+                    else attempt()
+                )
                 if len(data) != size:
                     raise IOError(
                         f"short PFS read: {rp.file_names[fid]} "
@@ -885,6 +1152,8 @@ class RealExecutor:
                 bytes_read=total["bytes"],
                 n_reads=total["reads"],
                 n_readers=n_readers,
+                io_retries=retry_stats["retries"],
+                io_giveups=retry_stats["giveups"],
             )
         finally:
             for fd in fds.values():

@@ -7,6 +7,7 @@ paper-system's selling points for inference fleets.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -43,6 +44,7 @@ class Server:
         prefix: str = "['params']",
         cfg: ServeConfig = ServeConfig(),
         sharding_fn: Optional[Any] = None,
+        retry: Optional[Any] = None,
     ) -> Tuple["Server", int]:
         """Boot a server straight from a checkpoint's params subtree.
 
@@ -54,10 +56,26 @@ class Server:
         without the training geometry existing anymore.  ``prefix`` is
         the leaf-name prefix the params were saved under (``"['params']"``
         for both train states and :meth:`snapshot_state` snapshots).
+
+        ``retry`` (a :class:`~repro.core.storage.RetryPolicy`) retries
+        the whole restore: a serving fleet cold-starting hundreds of
+        replicas against a PFS that is briefly unavailable should back
+        off and re-pull, not crash-loop.  Every error is retried here —
+        the ladder inside ``restore_subtree`` folds transient I/O
+        failures into its fallback errors, so errno classification
+        cannot see them from this level.
         """
-        step_out, params = manager.restore_subtree(
-            params_template, prefix, step=step, sharding_fn=sharding_fn
-        )
+        if retry is not None:
+            restore = dataclasses.replace(retry, classify=lambda e: "transient")
+            step_out, params = restore.run(
+                lambda: manager.restore_subtree(
+                    params_template, prefix, step=step, sharding_fn=sharding_fn
+                )
+            )
+        else:
+            step_out, params = manager.restore_subtree(
+                params_template, prefix, step=step, sharding_fn=sharding_fn
+            )
         return cls(model, params, cfg), step_out
 
     def generate(self, batch: Dict[str, Any]) -> Tuple[np.ndarray, Any]:

@@ -18,7 +18,13 @@ Per-file schema (top level: ``benchmark`` string + non-empty ``rows``):
   ``supersession`` row must record the ISSUE 5 bar ``skipped_frac >=
   0.5``, every ``resume`` row ``rewrite_frac < 0.25`` with
   ``byte_identical`` true, and the ``resume`` rows together must cover
-  all five aggregation strategies.
+  all five aggregation strategies;
+* ``BENCH_chaos.json``   — the self-healing chaos sweep (ISSUE 6): a
+  full (non-quick) run of >= 100 seeded FaultPlan schedules, every
+  ``schedule`` row with ``restored_identical`` true and zero
+  ``invariant_violations``, the ``chaos_summary`` row with
+  ``repair_success_frac >= 0.95``, all six fault kinds and all five
+  strategies covered.
 
 Exit code 0 = all good; 1 = any file missing/malformed (messages on
 stderr).  Run as ``python tools/bench_check.py [root]``.
@@ -52,6 +58,10 @@ EXPECTED = {
         "flush_runtime",
         set(),  # rows are heterogeneous; per-kind fields checked below
     ),
+    "BENCH_chaos.json": (
+        "chaos",
+        set(),  # rows are heterogeneous; per-kind fields checked below
+    ),
 }
 
 RESTORE_KIND_FIELDS = {
@@ -79,13 +89,28 @@ FLUSH_RUNTIME_KIND_FIELDS = {
                  "real_flush_s", "sim_flush_s"},
 }
 
+CHAOS_KIND_FIELDS = {
+    "schedule": {"seed", "strategy", "partner_replication", "codec",
+                 "fired_kinds", "flush_errors", "quarantined_steps",
+                 "restored_identical", "repair_success",
+                 "invariant_violations"},
+    "chaos_summary": {"n_schedules", "n_violations", "restored_identical",
+                      "transient_zero_errors", "repair_success_frac",
+                      "kinds_covered", "strategies_covered", "quick"},
+}
+
 ALL_STRATEGIES = {
     "file_per_process", "posix", "mpiio", "stripe_aligned", "gio_sync"
+}
+ALL_FAULT_KINDS = {
+    "transient_eio", "enospc", "torn_write", "bit_flip", "stall", "node_crash"
 }
 
 SAVE_SPEEDUP_BAR = 3.0
 SUPERSESSION_SKIP_BAR = 0.5     # skipped_frac >= this (ISSUE 5a)
 RESUME_REWRITE_BAR = 0.25       # rewrite_frac < this (ISSUE 5b)
+CHAOS_MIN_SCHEDULES = 100       # full-sweep size floor (ISSUE 6)
+CHAOS_REPAIR_BAR = 0.95         # repair_success_frac >= this (ISSUE 6)
 
 
 def fail(msg: str, errors: list) -> None:
@@ -110,11 +135,12 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
         return fail(f"{path.name}: rows must be a non-empty list", errors)
     for i, row in enumerate(rows):
         need = set(fields)
-        if benchmark in ("restore_scale", "codec_phase", "flush_runtime"):
+        if benchmark in ("restore_scale", "codec_phase", "flush_runtime", "chaos"):
             kinds = {
                 "restore_scale": RESTORE_KIND_FIELDS,
                 "codec_phase": CODEC_KIND_FIELDS,
                 "flush_runtime": FLUSH_RUNTIME_KIND_FIELDS,
+                "chaos": CHAOS_KIND_FIELDS,
             }[benchmark]
             kind = row.get("kind")
             if kind not in kinds:
@@ -176,6 +202,58 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
             fail(
                 f"{path.name}: resume rows missing strategies "
                 f"{sorted(ALL_STRATEGIES - covered)}", errors,
+            )
+
+    if benchmark == "chaos" and not errors:
+        sched = [r for r in rows if r.get("kind") == "schedule"]
+        summaries = [r for r in rows if r.get("kind") == "chaos_summary"]
+        if len(summaries) != 1:
+            return fail(
+                f"{path.name}: want exactly one chaos_summary row, "
+                f"got {len(summaries)}", errors,
+            )
+        s = summaries[0]
+        if s["quick"]:
+            fail(f"{path.name}: committed sweep must be a full run, not --quick",
+                 errors)
+        if s["n_schedules"] < CHAOS_MIN_SCHEDULES or len(sched) < CHAOS_MIN_SCHEDULES:
+            fail(
+                f"{path.name}: {s['n_schedules']} schedules < "
+                f"{CHAOS_MIN_SCHEDULES} floor", errors,
+            )
+        for r in sched:
+            if r["invariant_violations"]:
+                fail(
+                    f"{path.name}: seed {r.get('seed')} recorded violations "
+                    f"{r['invariant_violations']}", errors,
+                )
+            if not r["restored_identical"]:
+                fail(
+                    f"{path.name}: seed {r.get('seed')} did not restore "
+                    "byte-identically", errors,
+                )
+        if s["n_violations"] or not s["restored_identical"]:
+            fail(f"{path.name}: summary records invariant violations", errors)
+        if not s["transient_zero_errors"]:
+            fail(
+                f"{path.name}: transient-only schedules produced flush "
+                "errors", errors,
+            )
+        if s["repair_success_frac"] < CHAOS_REPAIR_BAR:
+            fail(
+                f"{path.name}: repair_success_frac "
+                f"{s['repair_success_frac']} < {CHAOS_REPAIR_BAR} bar", errors,
+            )
+        if not ALL_FAULT_KINDS <= set(s["kinds_covered"]):
+            fail(
+                f"{path.name}: fault kinds not covered: "
+                f"{sorted(ALL_FAULT_KINDS - set(s['kinds_covered']))}", errors,
+            )
+        if not ALL_STRATEGIES <= set(s["strategies_covered"]):
+            fail(
+                f"{path.name}: strategies not covered: "
+                f"{sorted(ALL_STRATEGIES - set(s['strategies_covered']))}",
+                errors,
             )
 
 
