@@ -1,0 +1,362 @@
+"""Serve-fleet bench: cold-start TTFT, concurrent fleet boot, hot swap.
+
+The restore-for-inference workload the aggregation strategies exist
+for, measured on real files.  Three row kinds, committed as
+``BENCH_serve.json`` and gated by ``tools/bench_check.py``:
+
+* ``ttft`` — one server cold-starting from an aggregated step written
+  by a paper-scale training geometry (full run: 1024 ranks).  Streamed
+  layer-priority loading must get the prefill-critical prefix
+  (embedding + first blocks) resident before a full
+  ``restore_subtree`` even finishes: the acceptance bar is
+  ``ttft_s < full_restore_s``.
+* ``cold_start_fleet`` — N replicas booting concurrently from ONE
+  step through the shared node-local decoded-chunk cache; every
+  replica must come up byte-identical (``byte_identical``), and with a
+  chunk-framed codec the replicas after the first mostly hit the cache
+  (``cache_hits``/``cache_bytes_saved``).
+* ``hot_swap`` — a live fleet serving generates while the follower
+  adopts a newer flush_done step: the bar is ``dropped == 0`` and
+  ``torn == 0`` (every generate completes and matches exactly the
+  params version it reports — no request ever sees half a swap).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/serve_fleet.py              # full run
+    PYTHONPATH=src python benchmarks/serve_fleet.py --quick      # CI smoke
+    PYTHONPATH=src python benchmarks/serve_fleet.py --out BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+MiB = 1 << 20
+
+
+def make_model_state(n_blocks: int, block_kib: int, seed: int = 0):
+    """A synthetic LM-shaped train state: embed + numbered blocks +
+    head under ``params``, plus optimizer baggage serving must skip."""
+    rng = np.random.default_rng(seed)
+
+    def arr(kib):
+        return rng.standard_normal(kib * 1024 // 8).astype(np.float64)
+
+    params = {"embed": arr(4 * block_kib)}
+    for i in range(n_blocks):
+        params[f"block_{i:03d}"] = {"w": arr(block_kib), "b": arr(1)}
+    params["head"] = arr(4 * block_kib)
+    return {"params": params, "opt": {"mu": arr(4 * block_kib)}}
+
+
+class _NullModel:
+    """Placeholder for rows that never run a forward pass."""
+
+    def decode_step(self, params, cache, tok):  # pragma: no cover
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# TTFT: streamed priority prefix vs full restore_subtree
+# ---------------------------------------------------------------------------
+
+
+def bench_ttft(
+    nodes: int, ppn: int, serve_nodes: int, n_blocks: int, block_kib: int,
+) -> Dict[str, object]:
+    import jax
+
+    from repro.core import CheckpointConfig, CheckpointManager, theta_like
+    from repro.serve.stream import stream_restore
+    from repro.utils.treelib import tree_bytes
+
+    state = make_model_state(n_blocks, block_kib)
+    template = jax.tree_util.tree_map(np.asarray, state["params"])
+    with tempfile.TemporaryDirectory(prefix="bench_ttft_") as root:
+        train = CheckpointManager(
+            CheckpointConfig(
+                root=root, cluster=theta_like(nodes, ppn),
+                strategy="stripe_aligned", async_flush=False,
+            )
+        )
+        try:
+            train.save(1, state)
+        finally:
+            train.close()
+        serve = CheckpointManager(
+            CheckpointConfig(
+                root=root, cluster=theta_like(serve_nodes, 1),
+                strategy="stripe_aligned", async_flush=False,
+            )
+        )
+        try:
+            t0 = time.perf_counter()
+            step, full = serve.restore_subtree(template, "['params']")
+            full_s = time.perf_counter() - t0
+            sr = stream_restore(serve, template, priority_blocks=2)
+            identical = all(
+                np.array_equal(a, b)
+                for a, b in zip(
+                    jax.tree_util.tree_leaves(sr.params),
+                    jax.tree_util.tree_leaves(full),
+                )
+            )
+        finally:
+            serve.close()
+    row = {
+        "kind": "ttft",
+        "config": f"{nodes}x{ppn}->r{serve_nodes}/{n_blocks}blk/{block_kib}KiB",
+        "nodes": nodes,
+        "ppn": ppn,
+        "n_ranks": nodes * ppn,
+        "serve_readers": serve_nodes,
+        "n_blocks": n_blocks,
+        "params_bytes": tree_bytes(template),
+        "priority_bytes": sr.priority_bytes,
+        "full_restore_s": round(full_s, 4),
+        "stream_total_s": round(sr.total_s, 4),
+        "ttft_s": round(sr.ttft_s, 4),
+        "ttft_speedup": round(full_s / max(sr.ttft_s, 1e-9), 2),
+        "byte_identical": bool(identical),
+    }
+    print(
+        f"  ttft {row['config']}: full {row['full_restore_s']}s, "
+        f"ttft {row['ttft_s']}s ({row['ttft_speedup']}x), "
+        f"stream total {row['stream_total_s']}s",
+        flush=True,
+    )
+    return row
+
+
+# ---------------------------------------------------------------------------
+# concurrent fleet cold start through the shared chunk cache
+# ---------------------------------------------------------------------------
+
+
+def bench_cold_start_fleet(
+    nodes: int, ppn: int, serve_nodes: int, n_servers: int,
+    n_blocks: int, block_kib: int,
+) -> Dict[str, object]:
+    import jax
+
+    from repro.core import CheckpointConfig, CheckpointManager, theta_like
+    from repro.serve import FleetConfig, ServeFleet
+
+    state = make_model_state(n_blocks, block_kib)
+    template = jax.tree_util.tree_map(np.asarray, state["params"])
+    with tempfile.TemporaryDirectory(prefix="bench_fleet_") as root:
+        common = dict(strategy="stripe_aligned", codec="zstd",
+                      chunk_size=256 * 1024, async_flush=False)
+        train = CheckpointManager(
+            CheckpointConfig(root=root, cluster=theta_like(nodes, ppn), **common)
+        )
+        try:
+            train.save(1, state)
+        finally:
+            train.close()
+        serve = CheckpointManager(
+            CheckpointConfig(root=root, cluster=theta_like(serve_nodes, 1), **common)
+        )
+        fleet = ServeFleet(
+            _NullModel(), serve, template,
+            cfg=FleetConfig(n_servers=n_servers),
+        )
+        try:
+            cs = fleet.cold_start()
+            ref = jax.tree_util.tree_leaves(template)
+            got0 = jax.tree_util.tree_leaves(fleet.servers[0].params)
+            identical = all(
+                all(np.array_equal(a, b) for a, b in zip(
+                    jax.tree_util.tree_leaves(srv.params), got0))
+                for srv in fleet.servers
+            ) and all(a.shape == b.shape for a, b in zip(got0, ref))
+            cache = cs.cache or {}
+        finally:
+            fleet.close()
+            serve.close()
+    row = {
+        "kind": "cold_start_fleet",
+        "config": f"{nodes}x{ppn}->r{serve_nodes}/{n_servers}srv/{n_blocks}blk",
+        "nodes": nodes,
+        "ppn": ppn,
+        "n_ranks": nodes * ppn,
+        "serve_readers": serve_nodes,
+        "n_servers": n_servers,
+        "fleet_total_s": round(cs.total_s, 4),
+        "ttft_max_s": round(max(cs.ttft_s), 4),
+        "ttft_mean_s": round(sum(cs.ttft_s) / len(cs.ttft_s), 4),
+        "cache_hits": int(cache.get("hits", 0)),
+        "cache_misses": int(cache.get("misses", 0)),
+        "cache_bytes_saved": int(cache.get("bytes_saved", 0)),
+        "byte_identical": bool(identical),
+    }
+    print(
+        f"  cold_start_fleet {row['config']}: {row['fleet_total_s']}s total, "
+        f"ttft max {row['ttft_max_s']}s, cache hits {row['cache_hits']} "
+        f"({row['cache_bytes_saved'] / MiB:.1f} MiB saved)",
+        flush=True,
+    )
+    return row
+
+
+# ---------------------------------------------------------------------------
+# hot swap under live generates
+# ---------------------------------------------------------------------------
+
+
+def bench_hot_swap(run_seconds: float) -> Dict[str, object]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core import CheckpointConfig, CheckpointManager, theta_like
+    from repro.models import get_model
+    from repro.serve import FleetConfig, ServeConfig, ServeFleet, Server
+
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = get_model(cfg)
+    p0 = model.init(jax.random.PRNGKey(0))
+    p1 = model.init(jax.random.PRNGKey(1))
+    prompts = {"tokens": jnp.asarray(np.full((2, 8), 7, np.int32))}
+    serve_cfg = ServeConfig(max_new_tokens=4)
+    refs = {
+        0: Server(model, p0, serve_cfg).generate(prompts)[0],
+        1: Server(model, p1, serve_cfg).generate(prompts)[0],
+    }
+    with tempfile.TemporaryDirectory(prefix="bench_swap_") as root:
+        def save(step, params):
+            train = CheckpointManager(
+                CheckpointConfig(root=root, cluster=theta_like(4, 2),
+                                 strategy="stripe_aligned", async_flush=False)
+            )
+            try:
+                train.save(step, {"params": params})
+            finally:
+                train.close()
+
+        save(1, p0)
+        serve = CheckpointManager(
+            CheckpointConfig(root=root, cluster=theta_like(2, 1),
+                             strategy="stripe_aligned", async_flush=False)
+        )
+        fleet = ServeFleet(
+            model, serve, jax.tree_util.tree_map(np.asarray, p0),
+            cfg=FleetConfig(n_servers=1, serve=serve_cfg, poll_interval=0.02),
+        )
+        try:
+            fleet.cold_start()
+            results: List = []
+            dropped = [0]
+            stop = threading.Event()
+
+            def hammer():
+                srv = fleet.servers[0]
+                while not stop.is_set():
+                    try:
+                        toks, _, v = srv.generate(prompts, with_version=True)
+                        results.append((v, toks))
+                    except Exception:
+                        dropped[0] += 1
+                        return
+
+            threads = [threading.Thread(target=hammer) for _ in range(2)]
+            for t in threads:
+                t.start()
+            fleet.start_follower()
+            time.sleep(run_seconds / 2)
+            save(2, p1)                    # training publishes a new step
+            deadline = time.monotonic() + 60
+            while fleet.current_step != 2 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            t_end = time.time() + run_seconds / 2
+            while time.time() < t_end or not any(v == 1 for v, _ in results):
+                if time.monotonic() > deadline:
+                    break
+                time.sleep(0.02)
+            stop.set()
+            for t in threads:
+                t.join(timeout=120)
+                if t.is_alive():
+                    dropped[0] += 1
+            fleet.stop()
+            torn = sum(
+                0 if np.array_equal(toks, refs[min(v, 1)]) else 1
+                for v, toks in results
+            )
+            swap_step, swap_s = (
+                fleet.swap_history[-1] if fleet.swap_history else (-1, -1.0)
+            )
+        finally:
+            fleet.close()
+            serve.close()
+    row = {
+        "kind": "hot_swap",
+        "config": f"tinyllama-smoke/{run_seconds:g}s",
+        "n_generates": len(results),
+        "pre_swap_generates": sum(1 for v, _ in results if v == 0),
+        "post_swap_generates": sum(1 for v, _ in results if v >= 1),
+        "dropped": int(dropped[0]),
+        "torn": int(torn),
+        "adopted_step": int(swap_step),
+        "swap_latency_s": round(float(swap_s), 4),
+    }
+    print(
+        f"  hot_swap {row['config']}: {row['n_generates']} generates "
+        f"({row['pre_swap_generates']} pre / {row['post_swap_generates']} post), "
+        f"dropped={row['dropped']}, torn={row['torn']}, "
+        f"swap {row['swap_latency_s']}s",
+        flush=True,
+    )
+    return row
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    args = ap.parse_args(argv)
+
+    rows: List[Dict[str, object]] = []
+    if args.quick:
+        print("ttft (quick)", flush=True)
+        rows.append(bench_ttft(8, 2, 4, n_blocks=8, block_kib=64))
+        print("cold_start_fleet (quick)", flush=True)
+        rows.append(bench_cold_start_fleet(8, 2, 4, 2, n_blocks=8, block_kib=64))
+        print("hot_swap (quick)", flush=True)
+        rows.append(bench_hot_swap(run_seconds=1.0))
+    else:
+        print("ttft (paper-scale geometries)", flush=True)
+        rows.append(bench_ttft(16, 16, 8, n_blocks=16, block_kib=256))
+        rows.append(bench_ttft(64, 16, 8, n_blocks=32, block_kib=512))
+        print("cold_start_fleet", flush=True)
+        rows.append(bench_cold_start_fleet(16, 16, 8, 4, n_blocks=16,
+                                           block_kib=256))
+        rows.append(bench_cold_start_fleet(64, 16, 8, 4, n_blocks=32,
+                                           block_kib=512))
+        print("hot_swap", flush=True)
+        rows.append(bench_hot_swap(run_seconds=4.0))
+
+    doc = {"benchmark": "serve_fleet", "quick": bool(args.quick), "rows": rows}
+    text = json.dumps(doc, indent=1)
+    if args.out:
+        from pathlib import Path
+
+        Path(args.out).write_text(text + "\n")
+        print(f"wrote {args.out}")
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -100,6 +100,7 @@ from repro.core.serialize import (
     DEFAULT_CHUNK_SIZE,
     Buffer,
     EncodedState,
+    LeafEntry,
     Manifest,
     decode_blob_reference,
     decode_chunk_into,
@@ -301,6 +302,16 @@ class CheckpointManager:
         )
         # Stats of the most recent aggregated PFS read (restore telemetry).
         self.last_read_result: Optional[ReadResult] = None
+        # New-step notification: callbacks fired (with the step number)
+        # after a manifest flips to flush_done — the serving fleet's
+        # hot-swap follower subscribes here when it shares the process.
+        self._subscribers: List[Callable[[int], None]] = []
+        # Optional node-local decoded-chunk cache (duck-typed:
+        # get(key)/put(key, bytes) — see repro.serve.stream.ChunkCache).
+        # Keyed (step, chunk row); the delta-base recursion reuses the
+        # same keying for the base step, so co-located replicas dedup
+        # CHUNK_BASE/delta-base decodes for free.
+        self.chunk_cache = None
         if config.async_flush:
             self._worker = threading.Thread(
                 target=self._scheduler_loop, name="active-backend", daemon=True
@@ -614,6 +625,7 @@ class CheckpointManager:
             raise
         man.status = "flush_done"
         self._write_manifest_pfs(man)
+        self._notify_flush_done(enc.step)
         if journal is not None:
             journal.unlink()
         if self.cfg.keep_n is not None:
@@ -659,6 +671,7 @@ class CheckpointManager:
                 )
                 man.status = "flush_done"
                 self._write_manifest_pfs(man)
+                self._notify_flush_done(man.step)
                 journal.unlink()
             except Exception as e:  # one dead step must not block the rest
                 log.exception("resume of step %d failed", man.step)
@@ -807,6 +820,94 @@ class CheckpointManager:
         local = self.steps("local")
         allsteps = sorted(set(pfs) | set(local))
         return allsteps[-1] if allsteps else None
+
+    def step_status(self, step: int, level: str = "pfs") -> Optional[str]:
+        """Manifest lifecycle status of ``step`` at ``level`` (``"pfs"``
+        or ``"local"``), or ``None`` if no manifest exists there.
+
+        Unlike :meth:`steps` this reports *every* state — including
+        ``flush_partial``/``superseded``/``quarantined`` — so operators
+        and the serving follower can see why a step is not servable.
+        """
+        if level == "pfs":
+            p = self.pfs_dir / f"step_{step:08d}" / "manifest.json"
+        elif level == "local":
+            p = self.root / "local" / "manifests" / f"step_{step:08d}.json"
+        else:
+            raise ValueError(level)
+        try:
+            return self._cached_manifest(p).status
+        except (OSError, ValueError):
+            return None
+
+    # ------------------------------------------------- new-step notification
+
+    def subscribe(self, fn: Callable[[int], None]) -> None:
+        """Register ``fn(step)`` to fire after each flush reaches
+        ``flush_done`` (sync saves, async flushes, and resumed partials
+        alike).  Callbacks run on the flushing thread and must be
+        cheap/non-blocking — the serving follower just records the step
+        and wakes its own thread.  Exceptions are logged, never allowed
+        to fail the flush."""
+        with self._lock:
+            self._subscribers.append(fn)
+
+    def unsubscribe(self, fn: Callable[[int], None]) -> None:
+        with self._lock:
+            try:
+                self._subscribers.remove(fn)
+            except ValueError:
+                pass
+
+    def _notify_flush_done(self, step: int) -> None:
+        with self._lock:
+            subs = list(self._subscribers)
+        for fn in subs:
+            try:
+                fn(step)
+            except Exception:
+                log.exception("flush_done subscriber failed for step %d", step)
+
+    def leaf_catalog(
+        self, step: Optional[int] = None, prefix: str = ""
+    ) -> Tuple[int, List["LeafEntry"]]:
+        """Enumerate the stored leaves of a step without reading any data.
+
+        Returns ``(step, entries)`` where each entry carries the leaf's
+        manifest name, dtype, shape, and raw byte range — everything a
+        streamed restore needs to plan layer groups before issuing a
+        single read.  ``prefix`` filters to a subtree (e.g.
+        ``"['params']"``); ``step=None`` picks the newest restorable
+        step, falling back PFS → L1 like :meth:`restore_leaves`.
+        Raises ``FileNotFoundError`` when no step has leaves under the
+        prefix."""
+        candidates = (
+            [step]
+            if step is not None
+            else sorted(
+                set(self.steps("pfs")) | set(self.steps("local")), reverse=True
+            )
+        )
+        errors: List[str] = []
+        for s in candidates:
+            for getter, level in (
+                (self._manifest_pfs, "pfs"),
+                (self._manifest_local, "local"),
+            ):
+                try:
+                    man = getter(s)
+                except Exception as e:
+                    errors.append(f"step {s} via {level}: {e!r}")
+                    continue
+                entries = [l for l in man.leaves if l.name.startswith(prefix)]
+                if entries:
+                    return s, entries
+                errors.append(f"step {s}: no leaves under prefix {prefix!r}")
+                break  # both levels carry the same leaf table
+        raise FileNotFoundError(
+            "no step with leaves under prefix "
+            f"{prefix!r}; attempts: " + "; ".join(errors[:8])
+        )
 
     def restore(
         self,
@@ -1219,13 +1320,32 @@ class CheckpointManager:
                     table.covering(rk, max(a, e.offset) - e.offset,
                                    min(b, e.offset + e.raw_size) - e.offset)
                 )
-        rows = np.unique(np.concatenate(need)) if need else np.empty(0, np.int64)
+        all_rows = (
+            np.unique(np.concatenate(need)) if need else np.empty(0, np.int64)
+        )
+
+        # 1b. decoded-chunk cache (node-local, shared across co-located
+        #     servers): rows already decoded for this step — by an
+        #     earlier replica's restore, or as another step's delta
+        #     base — skip the stored read AND the decode entirely.
+        cache = self.chunk_cache
+        cached: Dict[int, np.ndarray] = {}
+        if cache is not None and len(all_rows):
+            for row in all_rows.tolist():
+                hit = cache.get((step, int(row)))
+                if hit is not None:
+                    cached[int(row)] = hit
+        rows = (
+            all_rows[~np.isin(all_rows, np.fromiter(cached, np.int64))]
+            if cached
+            else all_rows
+        )
         rank_of = np.searchsorted(table.rank_starts, rows, side="right") - 1
 
         # 2. fetch the stored payloads of every non-base-ref chunk
         payloads: Dict[int, Buffer] = {}
         stored = rows[table.stored_len[rows] > 0]
-        if pfs:
+        if pfs and len(stored):
             offsets = man.stored_offsets()
             g_off = (
                 offsets[np.searchsorted(table.rank_starts, stored, side="right") - 1]
@@ -1307,6 +1427,11 @@ class CheckpointManager:
             )
 
         _run_grouped(self._decode_pool(), decode_row, rows.tolist())
+
+        if cache is not None:
+            for row, arr in decoded.items():
+                cache.put((step, row), arr)
+        decoded.update(cached)
 
         # 5. assemble each interval from the decoded chunks
         out: List[Buffer] = []

@@ -1,3 +1,22 @@
 from repro.serve.engine import ServeConfig, Server
+from repro.serve.fleet import FleetColdStart, FleetConfig, ServeFleet
+from repro.serve.stream import (
+    ChunkCache,
+    LayerGroup,
+    StreamedRestore,
+    plan_layer_groups,
+    stream_restore,
+)
 
-__all__ = ["ServeConfig", "Server"]
+__all__ = [
+    "ChunkCache",
+    "FleetColdStart",
+    "FleetConfig",
+    "LayerGroup",
+    "ServeConfig",
+    "ServeFleet",
+    "Server",
+    "StreamedRestore",
+    "plan_layer_groups",
+    "stream_restore",
+]

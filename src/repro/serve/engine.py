@@ -4,12 +4,22 @@ Serving snapshots (params + live caches/recurrent state) checkpoint
 through the same CheckpointManager as training state — recurrent-state
 snapshots are what make long-context serving restartable, one of the
 paper-system's selling points for inference fleets.
+
+Hot-swap safety: the server's weights live in one ``(params, version)``
+tuple replaced atomically by :meth:`Server.swap_params`.  Each
+:meth:`Server.generate` captures the tuple exactly once at entry, so a
+swap landing mid-decode never tears a request across versions — the
+in-flight generate finishes on the version it started with, the next
+one picks up the new weights.  That single invariant is what lets
+:class:`repro.serve.fleet.ServeFleet`'s follower roll a live fleet onto
+each new training step without draining requests.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,11 +37,34 @@ class ServeConfig:
 class Server:
     def __init__(self, model: Model, params: Any, cfg: ServeConfig = ServeConfig()):
         self.model = model
-        self.params = params
+        # (params, version): replaced as ONE reference by swap_params so
+        # readers can never observe half a swap
+        self._current: Tuple[Any, int] = (params, 0)
+        self._swap_lock = threading.Lock()
         self.cfg = cfg
         self._decode = jax.jit(
             lambda p, c, t: self.model.decode_step(p, c, t)
         )
+
+    @property
+    def params(self) -> Any:
+        return self._current[0]
+
+    @property
+    def params_version(self) -> int:
+        return self._current[1]
+
+    def swap_params(self, params: Any) -> int:
+        """Atomically roll the server onto new weights.
+
+        In-flight :meth:`generate` calls keep the reference they
+        captured at entry and finish undisturbed; calls entering after
+        the swap see only the new version.  Returns the new version
+        number (monotonic from 0)."""
+        with self._swap_lock:  # serialize swappers; readers never block
+            version = self._current[1] + 1
+            self._current = (params, version)
+        return version
 
     @classmethod
     def from_checkpoint(
@@ -60,13 +93,20 @@ class Server:
         ``retry`` (a :class:`~repro.core.storage.RetryPolicy`) retries
         the whole restore: a serving fleet cold-starting hundreds of
         replicas against a PFS that is briefly unavailable should back
-        off and re-pull, not crash-loop.  Every error is retried here —
-        the ladder inside ``restore_subtree`` folds transient I/O
-        failures into its fallback errors, so errno classification
-        cannot see them from this level.
+        off and re-pull, not crash-loop.  Only I/O failures
+        (``OSError``, which covers :class:`StorageError` and the
+        ``FileNotFoundError`` the restore ladder raises when every
+        candidate fails) are treated as transient — a programming error
+        (``TypeError``, ``KeyError``, a bad template) raises
+        immediately instead of burning the retry deadline.
         """
         if retry is not None:
-            restore = dataclasses.replace(retry, classify=lambda e: "transient")
+            restore = dataclasses.replace(
+                retry,
+                classify=lambda e: (
+                    "transient" if isinstance(e, OSError) else "permanent"
+                ),
+            )
             step_out, params = restore.run(
                 lambda: manager.restore_subtree(
                     params_template, prefix, step=step, sharding_fn=sharding_fn
@@ -78,19 +118,30 @@ class Server:
             )
         return cls(model, params, cfg), step_out
 
-    def generate(self, batch: Dict[str, Any]) -> Tuple[np.ndarray, Any]:
-        """Greedy decode; returns (generated tokens (B, T_new), final cache)."""
+    def generate(
+        self, batch: Dict[str, Any], *, with_version: bool = False
+    ) -> Union[Tuple[np.ndarray, Any], Tuple[np.ndarray, Any, int]]:
+        """Greedy decode; returns (generated tokens (B, T_new), final cache).
+
+        With ``with_version=True`` also returns the params version this
+        generate ran against.  The params reference is captured ONCE
+        here — a concurrent :meth:`swap_params` cannot change the
+        weights mid-request."""
+        params, version = self._current  # the one atomic capture
         prompt = batch["tokens"]
         b, s = prompt.shape
         s_max = self.cfg.s_max or (s + self.cfg.max_new_tokens)
-        cache, logits = self.model.prefill(self.params, batch, s_max=s_max)
+        cache, logits = self.model.prefill(params, batch, s_max=s_max)
         outs = []
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         for _ in range(self.cfg.max_new_tokens):
             outs.append(np.asarray(tok)[:, 0])
-            logits, cache = self._decode(self.params, cache, tok)
+            logits, cache = self._decode(params, cache, tok)
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        return np.stack(outs, axis=1), cache
+        toks = np.stack(outs, axis=1)
+        if with_version:
+            return toks, cache, version
+        return toks, cache
 
     def snapshot_state(self, cache: Any) -> Dict[str, Any]:
         """Checkpointable serving snapshot (params + cache)."""

@@ -689,3 +689,77 @@ def test_sim_prices_flush_bw_cap_consistently(strategy):
         plan, io_threads=4, flush_bw_cap=1e3 * plan.total_bytes / base.flush_time
     )
     assert uncapped.flush_time == pytest.approx(base.flush_time, rel=0.05)
+
+
+def test_concurrent_cold_start_during_flush_and_supersession(tmp_path):
+    """Fleet stress: N threads cold-start from a settled step while a
+    newer step's flush is mid-flight AND a supersession cancels that
+    flush under them.  Every cold start must return byte-identical
+    params (pinned to the settled step) and nothing may deadlock —
+    reads share the executor's worker pool with the throttled writers.
+
+    A tiny ``flush_bw_cap`` makes the mid-flight window deterministic:
+    the newer flush's writers sit in ``TokenBucket.acquire`` (which a
+    fired CancelToken aborts with FlushCancelled) while restore reads —
+    which are never throttled — proceed on the free pool workers."""
+    from repro.serve.stream import stream_restore
+
+    armed = threading.Event()
+    started = threading.Event()
+
+    def hook(_w):
+        if armed.is_set():
+            started.set()
+
+    def big(step):
+        return {
+            "params": {"w": jnp.full((1 << 20,), step, jnp.float32)},
+            "opt": {"mu": jnp.full((64,), step, jnp.float32)},
+        }
+
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            root=str(tmp_path), cluster=theta_like(8, 1),
+            strategy="posix", supersede_stale=True,
+            max_pending_flushes=2, flush_bw_cap=2 * MiB,
+        ),
+        fault_hook=hook,
+    )
+    try:
+        mgr.save(1, big(1))
+        mgr.wait()                          # step 1 settled on the PFS
+        armed.set()
+        mgr.save(2, big(2))                 # 4 MiB at 2 MiB/s: ~2 s window
+        assert started.wait(timeout=10)     # step 2's flush is mid-flight
+
+        n = 6
+        results = [None] * n
+        errors = []
+        template = {"w": np.zeros((1 << 20,), np.float32)}
+
+        def cold(i):
+            try:
+                sr = stream_restore(mgr, template, "['params']", step=1)
+                results[i] = sr.params
+            except Exception as e:  # pragma: no cover - failure reporting
+                errors.append(e)
+
+        threads = [threading.Thread(target=cold, args=(i,)) for i in range(n)]
+        for t in threads:
+            t.start()
+        mgr.save(3, big(3))                 # supersession fires on step 2
+        for t in threads:
+            t.join(timeout=60)
+            assert not t.is_alive(), "cold start deadlocked"
+        mgr.wait()
+
+        assert not errors
+        ref = np.full((1 << 20,), 1, np.float32)
+        for params in results:
+            np.testing.assert_array_equal(params["w"], ref)
+        assert mgr.flush_errors == []       # cancellation is not an error
+        assert 2 in mgr.superseded_steps
+        done = mgr.steps("pfs")
+        assert 1 in done and 3 in done and 2 not in done
+    finally:
+        mgr.close()

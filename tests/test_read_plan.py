@@ -302,3 +302,56 @@ def test_restore_leaves_unknown_name_raises(tmp_path):
     with pytest.raises(FileNotFoundError, match="leaves not in checkpoint"):
         mgr.restore_leaves(["['nope']"])
     mgr.close()
+
+
+def test_assign_readers_property_sweep():
+    """Property sweep (hypothesis-style; the library is not vendored,
+    so cases come from seeded generators): for adversarial stored
+    layouts and arbitrary N-writer -> M-reader geometries,
+    ``assign_readers`` must (1) assign every blob, (2) keep assignments
+    contiguous and monotonic, (3) stay within the midpoint balance
+    bound — no reader carries more than an even byte share plus one
+    largest blob.
+    """
+    rng = np.random.default_rng(0xA55E7)
+
+    def cases():
+        for case in range(120):
+            n_readers = int(rng.integers(1, 20))
+            n_blobs = int(rng.integers(1, 200))
+            kind = case % 5
+            if kind == 0:      # uniform
+                sizes = rng.integers(0, 1 << 20, n_blobs)
+            elif kind == 1:    # power-law skew
+                sizes = (rng.pareto(0.5, n_blobs) * 4096).astype(np.int64)
+            elif kind == 2:    # one giant among dust
+                sizes = rng.integers(0, 64, n_blobs)
+                sizes[rng.integers(0, n_blobs)] = 1 << 28
+            elif kind == 3:    # many zeros (empty ranks)
+                sizes = rng.integers(0, 4096, n_blobs)
+                sizes[rng.random(n_blobs) < 0.5] = 0
+            else:              # N -> M: more readers than blobs
+                n_readers = int(rng.integers(n_blobs, n_blobs + 50))
+                sizes = rng.integers(1, 1 << 16, n_blobs)
+            yield sizes.astype(np.int64), n_readers
+        yield np.zeros(17, np.int64), 5          # all-empty layout
+        yield np.asarray([1], np.int64), 19      # single tiny blob, many readers
+
+    for sizes, n_readers in cases():
+        a = assign_readers(sizes, n_readers)
+        ctx = (sizes[:8], n_readers)
+        # (1) full coverage: one reader per blob, all in range
+        assert len(a) == len(sizes), ctx
+        assert a.min() >= 0 and a.max() < n_readers, ctx
+        # (2) contiguous + monotonic: each reader owns one run of blobs
+        assert (np.diff(a) >= 0).all(), ctx
+        # (3) byte-balance bound from the midpoint rule
+        per = np.zeros(n_readers, np.int64)
+        np.add.at(per, a, sizes)
+        assert per.sum() == sizes.sum(), ctx
+        total = int(sizes.sum())
+        if total == 0:
+            assert (a == 0).all(), ctx
+            continue
+        bound = total / n_readers + int(sizes.max())
+        assert per.max() <= bound + 1e-9, (per.max(), bound, ctx)

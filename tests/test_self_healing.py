@@ -704,3 +704,187 @@ def test_chaos_smoke_fixed_seeds(tmp_path):
         row = run_schedule(seed, root=str(tmp_path / f"s{seed}"))
         assert row["invariant_violations"] == [], (seed, row)
         assert row["restored_identical"], (seed, row)
+
+
+# ----------------------------------------------------- serve x self-healing
+
+
+def serve_state(step, kib=64):
+    """A train state with a ``params`` subtree, as the fleet restores it."""
+    return {
+        "params": state(step, kib),
+        "opt": {"mu": np.full((64,), step, np.float64)},
+    }
+
+
+def test_serve_cold_start_heals_corrupt_pfs_extents(tmp_path):
+    """A fleet cold start against a step whose PFS extents are corrupt
+    falls back through the ladder (chunk CRCs catch the damage, L1
+    serves the bytes) and still streams byte-identical params."""
+    pytest.importorskip("jax")
+    from repro.serve.stream import stream_restore
+
+    mgr = make_mgr(tmp_path, codec="zstd", chunk_size=4 * 1024)
+    try:
+        mgr.save(1, serve_state(1))
+        forget_memory(mgr)
+        for f in (mgr.pfs_dir / "step_00000001").glob("*"):
+            if f.name != "manifest.json":
+                b = bytearray(f.read_bytes())
+                if b:
+                    b[len(b) // 2] ^= 0xFF
+                    f.write_bytes(bytes(b))
+        template = {k: np.zeros_like(v) for k, v in state(1).items()}
+        sr = stream_restore(mgr, template)
+        assert sr.step == 1
+        assert trees_equal(sr.params, state(1))
+    finally:
+        mgr.close()
+
+
+def test_serve_cold_start_from_quarantined_step_raises_cleanly(tmp_path):
+    """Explicitly cold-starting from a quarantined step must raise a
+    clean error naming the quarantine — never serve wrong bytes — and
+    the default (newest-step) cold start falls back to the healthy
+    predecessor."""
+    pytest.importorskip("jax")
+    from repro.serve.stream import stream_restore
+
+    mgr = make_mgr(tmp_path)
+    try:
+        mgr.save(1, serve_state(1))
+        mgr.save(2, serve_state(2))
+        for n in range(2):
+            mgr.local.drop_node(n, 2)
+        for f in (mgr.pfs_dir / "step_00000002").glob("*"):
+            if f.name != "manifest.json":
+                b = bytearray(f.read_bytes())
+                if b:
+                    b[0] ^= 0xFF
+                    f.write_bytes(bytes(b))
+        rep = mgr.validate(2, repair=True)
+        assert rep["repair"].quarantined
+        forget_memory(mgr)
+        template = {k: np.zeros_like(v) for k, v in state(1).items()}
+        with pytest.raises(FileNotFoundError) as ei:
+            stream_restore(mgr, template, step=2)
+        assert "quarantined" in str(ei.value)
+        sr = stream_restore(mgr, template)  # ladder falls back to step 1
+        assert sr.step == 1 and trees_equal(sr.params, state(1))
+    finally:
+        mgr.close()
+
+
+def test_follower_skips_quarantined_step(tmp_path):
+    """The hot-swap follower never adopts a step that scrub-and-repair
+    quarantined: it keeps serving the old step until a genuinely
+    healthy newer step lands, then adopts that."""
+    pytest.importorskip("jax")
+    from repro.serve import FleetConfig, ServeFleet
+
+    class _NoModel:
+        def decode_step(self, p, c, t):  # never traced in this test
+            raise AssertionError("decode unused")
+
+    mgr = make_mgr(tmp_path)
+    fleet = None
+    try:
+        mgr.save(1, serve_state(1))
+        mgr.save(2, serve_state(2))
+        for n in range(2):
+            mgr.local.drop_node(n, 2)
+        for f in (mgr.pfs_dir / "step_00000002").glob("*"):
+            if f.name != "manifest.json":
+                b = bytearray(f.read_bytes())
+                if b:
+                    b[0] ^= 0xFF
+                    f.write_bytes(bytes(b))
+        assert mgr.validate(2, repair=True)["repair"].quarantined
+        forget_memory(mgr)
+        template = {k: np.zeros_like(v) for k, v in state(1).items()}
+        fleet = ServeFleet(
+            _NoModel(), mgr, template,
+            cfg=FleetConfig(n_servers=1, poll_interval=0.02),
+        )
+        fleet.cold_start(step=1)
+        fleet.start_follower()
+        time.sleep(0.3)
+        assert fleet.current_step == 1        # quarantined step 2 skipped
+        mgr.save(3, serve_state(3))           # healthy newer step
+        deadline = time.monotonic() + 30
+        while fleet.current_step != 3 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert fleet.current_step == 3
+        assert trees_equal(fleet.servers[0].params, state(3))
+    finally:
+        if fleet is not None:
+            fleet.stop()
+        mgr.close()
+
+
+def test_serve_from_checkpoint_non_io_error_raises_immediately(tmp_path):
+    """Regression: ``from_checkpoint(retry=...)`` used to classify EVERY
+    exception transient, so a programming error (bad template, typo'd
+    prefix → TypeError/KeyError) burned the whole retry deadline.  Now
+    only I/O errors (OSError/StorageError) retry; anything else raises
+    on the first attempt."""
+    pytest.importorskip("jax")
+    from repro.serve.engine import Server
+
+    class _TinyModel:
+        pass
+
+    class _Mgr:
+        def __init__(self, exc):
+            self.exc = exc
+            self.calls = 0
+
+        def restore_subtree(self, template, prefix, *, step=None, sharding_fn=None):
+            self.calls += 1
+            raise self.exc
+
+    pol = RetryPolicy(attempts=5, base_delay=0.001, max_delay=0.002, seed=0)
+    for exc in (TypeError("template is not a pytree"), KeyError("['params']['w']")):
+        mgr = _Mgr(exc)
+        with pytest.raises(type(exc)):
+            Server.from_checkpoint(_TinyModel(), mgr, {"w": np.zeros(3)}, retry=pol)
+        assert mgr.calls == 1, "non-I/O errors must not retry"
+    # while genuine I/O failures (StorageError is an OSError) still do
+    mgr = _Mgr(StorageError("pfs", 1, 0, "/gone", OSError(errno.EIO, "eio")))
+    with pytest.raises(StorageError):
+        Server.from_checkpoint(_TinyModel(), mgr, {"w": np.zeros(3)}, retry=pol)
+    assert mgr.calls == 5, "I/O errors retry to the attempt budget"
+
+
+def test_retry_policy_non_oserror_respects_classify():
+    """Non-OSErrors are never retried — a classify override only
+    widens retries *within* the OSError family.  That is the contract
+    ``Server.from_checkpoint``'s transient-I/O classifier relies on:
+    programming errors propagate on the first call, while the
+    ``FileNotFoundError`` the restore ladder raises during a PFS
+    brown-out (an OSError subclass) is re-pulled."""
+    calls = {"n": 0}
+
+    def flaky_default():
+        calls["n"] += 1
+        raise ValueError("not I/O")
+
+    pol = RetryPolicy(attempts=4, base_delay=0.001, max_delay=0.002, seed=0)
+    with pytest.raises(ValueError):
+        pol.run(flaky_default)
+    assert calls["n"] == 1                    # not caught: no retry, ever
+
+    calls["n"] = 0
+
+    def flaky_fnf():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise FileNotFoundError("no restorable checkpoint yet")
+        return "ok"
+
+    wide = RetryPolicy(
+        attempts=5, base_delay=0.001, max_delay=0.002, seed=0,
+        classify=lambda e: "transient",
+    )
+    assert wide.run(flaky_fnf) == "ok"
+    assert calls["n"] == 3

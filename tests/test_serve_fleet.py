@@ -1,0 +1,760 @@
+"""Fleet serving from one aggregated checkpoint — the ISSUE 7 spec.
+
+Written test-first: this suite specifies the serving runtime the
+tentpole adds before the runtime exists.
+
+* **Layer-granular streaming** (`repro.serve.stream`): leaf names are
+  grouped into layer groups (embedding first, numbered blocks
+  ascending, head last) and loaded in priority order, so
+  time-to-first-token — the moment the priority prefix is resident —
+  beats a full ``restore_subtree``; the streamed result is
+  byte-identical to the full restore, pinned to ONE step even when a
+  newer step lands mid-stream.
+* **Decoded-chunk cache** (`repro.serve.stream.ChunkCache`): a
+  node-local LRU shared across co-located servers; the second replica
+  restoring the same step (and delta steps sharing a base) hits the
+  cache instead of re-reading/re-decoding `CHUNK_BASE`/delta-base
+  chunks.
+* **Snapshot hot-swap** (`repro.serve.fleet.ServeFleet`): a follower
+  adopts only ``flush_done`` steps (never partial/superseded/
+  quarantined) and rolls params atomically — every generate uses
+  exactly ONE params version, in-flight generates are never dropped.
+* **Engine hooks** (`repro.core.engine.CheckpointManager`):
+  ``leaf_catalog`` (leaf-range enumeration), ``subscribe`` (new-step
+  notification on flush_done), ``step_status``, ``chunk_cache``.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (
+    CheckpointConfig,
+    CheckpointManager,
+    assign_readers,
+    theta_like,
+)
+
+ALL_STRATEGIES = ["file_per_process", "posix", "mpiio", "stripe_aligned", "gio_sync"]
+KiB = 1024
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def blocky_state(step: int, n_blocks: int = 4, kib: int = 8):
+    """A train state whose params look like a layered LM: embedding,
+    numbered blocks, head — plus optimizer baggage serving must skip."""
+    rng = np.random.default_rng(1000 + step)
+
+    def arr(n):
+        return rng.standard_normal(n).astype(np.float64) + step
+
+    params = {"embed": arr(kib * KiB // 8)}
+    for i in range(n_blocks):
+        params[f"block_{i:03d}"] = {
+            "w": arr(kib * KiB // 8), "b": arr(32),
+        }
+    params["head"] = arr(kib * KiB // 8)
+    return {"params": params, "opt": {"mu": arr(kib * KiB // 8), "t": arr(4)}}
+
+
+def params_template(state):
+    return jax.tree_util.tree_map(np.asarray, state["params"])
+
+
+def trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def make_mgr(root, cluster=None, **kw):
+    kw.setdefault("async_flush", False)
+    return CheckpointManager(
+        CheckpointConfig(root=str(root), cluster=cluster or theta_like(2, 2), **kw)
+    )
+
+
+def forget_memory(mgr):
+    mgr._l0 = None
+    mgr._last_full = None
+
+
+def smoke_server(max_new_tokens=4, seed=0):
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    from repro.serve import ServeConfig, Server
+
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return model, params, Server(model, params, ServeConfig(max_new_tokens=max_new_tokens))
+
+
+# ---------------------------------------------------------------------------
+# layer grouping + leaf catalog
+# ---------------------------------------------------------------------------
+
+
+def test_plan_layer_groups_order_and_priority():
+    from repro.serve.stream import plan_layer_groups
+
+    entries = [
+        ("['params']['head']", 10),
+        ("['params']['block_001']['w']", 30),
+        ("['params']['embed']", 20),
+        ("['params']['block_000']['b']", 5),
+        ("['params']['block_000']['w']", 25),
+    ]
+    groups = plan_layer_groups(entries, priority_blocks=1)
+    names = [g.name for g in groups]
+    assert names[0] == "embed"
+    assert names[1].startswith("block") and "0" in names[1]
+    assert names[-1] == "tail"
+    # block order ascending, both block_000 leaves in one group
+    b0 = groups[1]
+    assert set(b0.leaves) == {
+        "['params']['block_000']['w']", "['params']['block_000']['b']"
+    }
+    assert b0.nbytes == 30
+    # priority prefix: embed + first block
+    assert [g.priority for g in groups] == [True, True, False, False]
+
+
+def test_plan_layer_groups_cover_every_leaf_exactly_once():
+    from repro.serve.stream import plan_layer_groups
+
+    state = blocky_state(1, n_blocks=6)
+    from repro.utils.treelib import flatten_with_names
+
+    named, _ = flatten_with_names(state["params"])
+    entries = [("['params']" + n, int(np.asarray(l).nbytes)) for n, l in named]
+    groups = plan_layer_groups(entries, priority_blocks=2)
+    seen = [n for g in groups for n in g.leaves]
+    assert sorted(seen) == sorted(n for n, _ in entries)
+    assert len(seen) == len(set(seen))
+    assert sum(g.nbytes for g in groups) == sum(s for _, s in entries)
+    # priority prefix = embed + 2 blocks
+    assert sum(g.priority for g in groups) == 3
+
+
+def test_plan_layer_groups_unnumbered_stacked_fallback():
+    """Stacked-layer params (one leaf spans all layers, tinyllama
+    style) still plan: embedding first, un-numbered middle, head last,
+    and the priority prefix degrades to the embedding group."""
+    from repro.serve.stream import plan_layer_groups
+
+    entries = [
+        ("['embed']", 8), ("['final_norm']", 1), ("['layers']['wq']", 64),
+        ("['layers']['wk']", 16), ("['out']", 8),
+    ]
+    groups = plan_layer_groups(entries)
+    assert groups[0].name == "embed" and groups[0].priority
+    assert groups[-1].name == "tail"
+    mid = [g for g in groups if g.name == "mid"]
+    assert len(mid) == 1 and set(mid[0].leaves) == {
+        "['layers']['wq']", "['layers']['wk']"
+    }
+    assert not mid[0].priority
+
+
+def test_leaf_catalog_newest_step_and_prefix(tmp_path):
+    mgr = make_mgr(tmp_path)
+    mgr.save(1, blocky_state(1))
+    mgr.save(2, blocky_state(2))
+    step, entries = mgr.leaf_catalog(prefix="['params']")
+    assert step == 2
+    assert entries and all(e.name.startswith("['params']") for e in entries)
+    # sizes must match the saved arrays
+    total = sum(e.size for e in entries)
+    from repro.utils.treelib import tree_bytes
+
+    assert total == tree_bytes(blocky_state(2)["params"])
+    # explicit step
+    step1, e1 = mgr.leaf_catalog(step=1, prefix="['opt']")
+    assert step1 == 1 and all(e.name.startswith("['opt']") for e in e1)
+    mgr.close()
+
+
+def test_leaf_catalog_missing_prefix_and_empty_root(tmp_path):
+    mgr = make_mgr(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        mgr.leaf_catalog()
+    mgr.save(1, blocky_state(1))
+    with pytest.raises(FileNotFoundError):
+        mgr.leaf_catalog(prefix="['nope']")
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# streamed (lazy) restore
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["none", "zstd", "zstd+delta"])
+def test_stream_restore_matches_full_restore(tmp_path, codec):
+    from repro.serve.stream import stream_restore
+
+    mgr = make_mgr(tmp_path, codec=codec, delta_every=2)
+    for s in (1, 2, 3):  # a delta chain under zstd+delta
+        mgr.save(s, blocky_state(s))
+    forget_memory(mgr)
+    template = params_template(blocky_state(3))
+    sr = stream_restore(mgr, template)
+    assert sr.step == 3
+    ref_step, ref = mgr.restore_subtree(template, "['params']")
+    assert ref_step == 3
+    assert trees_equal(sr.params, ref)
+    assert 0 < sr.ttft_s <= sr.total_s
+    mgr.close()
+
+
+def test_stream_restore_priority_prefix_and_byte_accounting(tmp_path):
+    from repro.serve.stream import stream_restore
+
+    mgr = make_mgr(tmp_path)
+    mgr.save(5, blocky_state(5, n_blocks=8))
+    forget_memory(mgr)
+    template = params_template(blocky_state(5, n_blocks=8))
+    sr = stream_restore(mgr, template, priority_blocks=1)
+    # priority prefix (embed + 1 block) is a strict subset of the bytes
+    assert 0 < sr.priority_bytes < sr.total_bytes
+    from repro.utils.treelib import tree_bytes
+
+    assert sr.total_bytes == tree_bytes(template)
+    # groups completed in plan order; ttft recorded at the prefix
+    order = [g.name for g in sr.groups]
+    assert order[0] == "embed" and order[-1] == "tail"
+    done = [sr.group_done_s[n] for n in order]
+    assert done == sorted(done)
+    prefix_end = max(
+        sr.group_done_s[g.name] for g in sr.groups if g.priority
+    )
+    assert abs(sr.ttft_s - prefix_end) < 1e-9
+    mgr.close()
+
+
+def test_stream_restore_pins_step_against_newer_arrivals(tmp_path):
+    """A newer step landing mid-stream must NOT mix into the result:
+    every group is pinned to the step chosen at stream start."""
+    from repro.serve import stream as stream_mod
+    from repro.serve.stream import stream_restore
+
+    mgr = make_mgr(tmp_path)
+    mgr.save(1, blocky_state(1))
+    forget_memory(mgr)
+    template = params_template(blocky_state(1))
+
+    real = mgr.restore_leaves
+    fired = []
+
+    def racing_restore_leaves(names, step=None):
+        if not fired:
+            fired.append(True)
+            mgr.save(2, blocky_state(2))  # newer step lands mid-stream
+            forget_memory(mgr)
+        return real(names, step=step)
+
+    mgr.restore_leaves = racing_restore_leaves
+    try:
+        sr = stream_restore(mgr, template)
+    finally:
+        mgr.restore_leaves = real
+    assert sr.step == 1
+    assert trees_equal(sr.params, params_template(blocky_state(1)))
+    mgr.close()
+
+
+def test_stream_restore_applies_sharding_fn(tmp_path):
+    from repro.serve.stream import stream_restore
+
+    mgr = make_mgr(tmp_path)
+    mgr.save(1, blocky_state(1))
+    forget_memory(mgr)
+    template = params_template(blocky_state(1))
+    seen = []
+
+    def shard(name, leaf):
+        seen.append(name)
+        return jnp.asarray(leaf)
+
+    sr = stream_restore(mgr, template, sharding_fn=shard)
+    assert len(seen) == len(jax.tree_util.tree_leaves(template))
+    assert all(isinstance(l, jnp.ndarray) for l in jax.tree_util.tree_leaves(sr.params))
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# decoded-chunk cache
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_cache_unit_hits_misses_lru():
+    from repro.serve.stream import ChunkCache
+
+    c = ChunkCache(capacity_bytes=300)
+    assert c.get(("s", 0)) is None           # miss
+    a = np.arange(100, dtype=np.uint8)
+    c.put(("s", 0), a)
+    hit = c.get(("s", 0))
+    assert hit is not None and np.array_equal(hit, a)
+    assert not hit.flags.writeable            # frozen: shared across servers
+    c.put(("s", 1), np.zeros(100, np.uint8))
+    c.put(("s", 2), np.zeros(100, np.uint8))
+    c.get(("s", 0))                           # refresh 0's recency
+    c.put(("s", 3), np.zeros(100, np.uint8))  # evicts LRU (key 1)
+    assert c.get(("s", 1)) is None
+    assert c.get(("s", 0)) is not None
+    st = c.stats()
+    assert st["hits"] >= 3 and st["misses"] >= 2 and st["evictions"] >= 1
+    assert st["size_bytes"] <= 300
+
+
+def test_chunk_cache_dedups_second_restore(tmp_path):
+    from repro.serve.stream import ChunkCache, stream_restore
+
+    mgr = make_mgr(tmp_path, codec="zstd", chunk_size=4 * KiB)
+    mgr.save(1, blocky_state(1, kib=32))
+    forget_memory(mgr)
+    mgr.chunk_cache = ChunkCache()
+    template = params_template(blocky_state(1, kib=32))
+    a = stream_restore(mgr, template)
+    misses_after_first = mgr.chunk_cache.stats()["misses"]
+    assert misses_after_first > 0
+    b = stream_restore(mgr, template)
+    st = mgr.chunk_cache.stats()
+    assert st["hits"] > 0
+    assert st["misses"] == misses_after_first  # second replica: all hits
+    assert st["bytes_saved"] > 0
+    assert trees_equal(a.params, b.params)
+    mgr.close()
+
+
+def test_chunk_cache_dedups_delta_base_reads(tmp_path):
+    """Two delta steps share a full-snapshot base: after restoring the
+    first, the second's base-referencing chunks hit the cache instead
+    of re-reading the base step."""
+    from repro.serve.stream import ChunkCache, stream_restore
+
+    mgr = make_mgr(tmp_path, codec="zstd+delta", delta_every=4,
+                   chunk_size=4 * KiB)
+    base = blocky_state(1, kib=32)
+    mgr.save(1, base)                 # full anchor
+    s2 = jax.tree_util.tree_map(np.copy, jax.tree_util.tree_map(np.asarray, base))
+    s2["params"]["embed"] = s2["params"]["embed"] + 1.0   # small update
+    mgr.save(2, s2)
+    s3 = jax.tree_util.tree_map(np.copy, s2)
+    s3["params"]["head"] = s3["params"]["head"] + 1.0
+    mgr.save(3, s3)
+    forget_memory(mgr)
+    mgr.chunk_cache = ChunkCache()
+    template = params_template(base)
+    a = stream_restore(mgr, template, step=2)
+    st1 = mgr.chunk_cache.stats()
+    b = stream_restore(mgr, template, step=3)
+    st2 = mgr.chunk_cache.stats()
+    assert st2["hits"] > st1["hits"]  # base chunks served from cache
+    assert trees_equal(a.params, jax.tree_util.tree_map(np.asarray, s2)["params"] if isinstance(s2, dict) else s2)
+    assert trees_equal(b.params, s3["params"])
+    mgr.close()
+
+
+def test_chunk_cache_capacity_zero_disables_without_breaking(tmp_path):
+    from repro.serve.stream import ChunkCache, stream_restore
+
+    mgr = make_mgr(tmp_path, codec="zstd", chunk_size=4 * KiB)
+    mgr.save(1, blocky_state(1))
+    forget_memory(mgr)
+    mgr.chunk_cache = ChunkCache(capacity_bytes=0)
+    template = params_template(blocky_state(1))
+    sr = stream_restore(mgr, template)
+    assert trees_equal(sr.params, params_template(blocky_state(1)))
+    assert mgr.chunk_cache.stats()["size_bytes"] == 0
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# engine hooks: subscribe / step_status
+# ---------------------------------------------------------------------------
+
+
+def test_subscribe_fires_on_flush_done_sync_and_async(tmp_path):
+    got = []
+    mgr = make_mgr(tmp_path)                      # sync flush
+    mgr.subscribe(got.append)
+    mgr.save(1, blocky_state(1))
+    assert got == [1]
+    mgr.close()
+
+    got2 = []
+    mgr2 = CheckpointManager(
+        CheckpointConfig(root=str(tmp_path / "async"), cluster=theta_like(2, 2))
+    )
+    mgr2.subscribe(got2.append)
+    mgr2.save(7, blocky_state(7))
+    mgr2.wait()
+    assert got2 == [7]
+    mgr2.close()
+
+
+def test_unsubscribe_and_callback_errors_are_isolated(tmp_path):
+    def boom(step):
+        raise RuntimeError("subscriber bug")
+
+    got = []
+    mgr = make_mgr(tmp_path)
+    mgr.subscribe(boom)
+    mgr.subscribe(got.append)
+    mgr.save(1, blocky_state(1))      # boom must not break the flush
+    assert got == [1]
+    assert mgr.flush_errors == []
+    assert 1 in mgr.steps("pfs")
+    mgr.unsubscribe(got.append)
+    mgr.save(2, blocky_state(2))
+    assert got == [1]
+    mgr.unsubscribe(boom)
+    mgr.close()
+
+
+def test_step_status_reports_lifecycle(tmp_path):
+    mgr = make_mgr(tmp_path)
+    assert mgr.step_status(9) is None
+    mgr.save(9, blocky_state(9))
+    assert mgr.step_status(9) == "flush_done"
+    assert mgr.step_status(9, level="local") == "local_done"
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# Server hot-swap primitives
+# ---------------------------------------------------------------------------
+
+
+def test_swap_params_bumps_version_and_generate_reports_it():
+    model, p0, server = smoke_server()
+    assert server.params_version == 0
+    prompts = {"tokens": jnp.asarray(np.full((2, 5), 7, np.int32))}
+    toks0, _, v0 = server.generate(prompts, with_version=True)
+    assert v0 == 0
+    p1 = model.init(jax.random.PRNGKey(1))
+    v = server.swap_params(p1)
+    assert v == 1 and server.params_version == 1
+    toks1, _, v1 = server.generate(prompts, with_version=True)
+    assert v1 == 1
+    ref1, _ = type(server)(model, p1, server.cfg).generate(prompts)
+    np.testing.assert_array_equal(toks1, ref1)
+    # params property follows the swap
+    assert server.params is p1
+
+
+def test_generate_uses_exactly_one_version_under_concurrent_swaps():
+    """Linearizability: each generate's output equals the reference of
+    exactly the version it reports — never a torn mix."""
+    from repro.serve import ServeConfig, Server
+
+    model, p0, server = smoke_server(max_new_tokens=3)
+    p1 = model.init(jax.random.PRNGKey(1))
+    prompts = {"tokens": jnp.asarray(np.full((2, 4), 5, np.int32))}
+    refs = {
+        0: Server(model, p0, ServeConfig(max_new_tokens=3)).generate(prompts)[0],
+        1: Server(model, p1, ServeConfig(max_new_tokens=3)).generate(prompts)[0],
+    }
+    assert not np.array_equal(refs[0], refs[1])  # distinguishable versions
+    results, errors = [], []
+    stop = threading.Event()
+
+    def hammer():
+        while not stop.is_set():
+            try:
+                toks, _, v = server.generate(prompts, with_version=True)
+                results.append((v, toks))
+            except Exception as e:  # pragma: no cover - failure reporting
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=hammer) for _ in range(3)]
+    for t in threads:
+        t.start()
+    versions = [p1, p0, p1, p0, p1]
+    for p in versions:
+        time.sleep(0.05)
+        server.swap_params(p)
+    stop.set()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive()
+    assert not errors
+    assert results                           # nothing dropped
+    for v, toks in results:
+        np.testing.assert_array_equal(toks, refs[v % 2])
+
+
+def test_snapshot_state_tracks_swapped_params():
+    model, p0, server = smoke_server()
+    p1 = model.init(jax.random.PRNGKey(1))
+    server.swap_params(p1)
+    snap = server.snapshot_state(cache={"k": jnp.zeros((1,))})
+    assert snap["params"] is p1
+
+
+# ---------------------------------------------------------------------------
+# ServeFleet: concurrent cold start
+# ---------------------------------------------------------------------------
+
+
+def fleet_checkpoint(tmp_path, strategy="stripe_aligned", **kw):
+    """Save a real model train state under the training geometry; return
+    (model, params, serving manager over the same root)."""
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt": {"mu": jnp.zeros((4096,), jnp.float32)}}
+    train = make_mgr(tmp_path, cluster=theta_like(4, 2), strategy=strategy, **kw)
+    train.save(3, state)
+    train.close()
+    serve_mgr = make_mgr(tmp_path, cluster=theta_like(2, 1), strategy=strategy, **kw)
+    return model, params, serve_mgr
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_fleet_cold_start_concurrent_byte_identity(tmp_path, strategy):
+    from repro.serve import FleetConfig, ServeConfig, ServeFleet
+
+    model, params, mgr = fleet_checkpoint(tmp_path, strategy)
+    fleet = ServeFleet(
+        model, mgr, jax.tree_util.tree_map(np.asarray, params),
+        cfg=FleetConfig(n_servers=3, serve=ServeConfig(max_new_tokens=3)),
+    )
+    cs = fleet.cold_start()
+    assert cs.step == 3 and fleet.current_step == 3
+    assert len(fleet.servers) == 3
+    ref = jax.tree_util.tree_map(np.asarray, params)
+    for srv in fleet.servers:
+        assert trees_equal(srv.params, ref)
+    assert len(cs.ttft_s) == 3 and all(t > 0 for t in cs.ttft_s)
+    fleet.close()
+    mgr.close()
+
+
+def test_fleet_cold_start_shares_cache_across_servers(tmp_path):
+    from repro.serve import FleetConfig, ServeFleet
+
+    model, params, mgr = fleet_checkpoint(
+        tmp_path, codec="zstd", chunk_size=4 * KiB
+    )
+    fleet = ServeFleet(
+        model, mgr, jax.tree_util.tree_map(np.asarray, params),
+        cfg=FleetConfig(n_servers=3),
+    )
+    cs = fleet.cold_start()
+    st = cs.cache
+    assert st is not None and st["hits"] > 0         # replicas 2..n dedup
+    assert st["bytes_saved"] > 0
+    assert mgr.chunk_cache is fleet.cache            # node-local, shared
+    fleet.close()
+    mgr.close()
+
+
+def test_fleet_reader_balance_uses_serving_geometry(tmp_path):
+    from repro.serve import FleetConfig, ServeFleet
+
+    model, params, mgr = fleet_checkpoint(tmp_path)
+    fleet = ServeFleet(
+        model, mgr, jax.tree_util.tree_map(np.asarray, params),
+        cfg=FleetConfig(n_servers=1),
+    )
+    bal = fleet.reader_balance()
+    assert bal["n_readers"] == mgr.cluster.n_nodes   # the SERVING geometry
+    assert bal["max_bytes"] >= bal["min_bytes"] >= 0
+    # byte-balance: no reader exceeds an even share by more than the
+    # largest single blob (the midpoint-assignment bound)
+    man = mgr._manifest_pfs(3)
+    sizes = [r.stored_size for r in man.ranks]
+    assert bal["max_bytes"] <= sum(sizes) / bal["n_readers"] + max(sizes)
+    np.testing.assert_array_equal(
+        bal["readers"], assign_readers(sizes, mgr.cluster.n_nodes)
+    )
+    fleet.close()
+    mgr.close()
+
+
+def test_fleet_cold_start_generates_after_lazy_load(tmp_path):
+    from repro.serve import FleetConfig, ServeConfig, ServeFleet, Server
+
+    model, params, mgr = fleet_checkpoint(tmp_path)
+    fleet = ServeFleet(
+        model, mgr, jax.tree_util.tree_map(np.asarray, params),
+        cfg=FleetConfig(n_servers=2, serve=ServeConfig(max_new_tokens=4)),
+    )
+    fleet.cold_start()
+    prompts = {"tokens": jnp.asarray(np.full((2, 5), 7, np.int32))}
+    ref, _ = Server(model, params, ServeConfig(max_new_tokens=4)).generate(prompts)
+    for srv in fleet.servers:
+        toks, _ = srv.generate(prompts)
+        np.testing.assert_array_equal(toks, ref)
+    fleet.close()
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# ServeFleet: snapshot hot-swap
+# ---------------------------------------------------------------------------
+
+
+def test_swap_to_rolls_every_server(tmp_path):
+    from repro.serve import FleetConfig, ServeConfig, ServeFleet, Server
+
+    model, params, mgr = fleet_checkpoint(tmp_path)
+    fleet = ServeFleet(
+        model, mgr, jax.tree_util.tree_map(np.asarray, params),
+        cfg=FleetConfig(n_servers=2, serve=ServeConfig(max_new_tokens=3)),
+    )
+    fleet.cold_start()
+    # a newer step from "training" over the same PFS root
+    p2 = model.init(jax.random.PRNGKey(2))
+    train = make_mgr(tmp_path, cluster=theta_like(4, 2))
+    train.save(5, {"params": p2, "opt": {"mu": jnp.zeros((4096,), jnp.float32)}})
+    train.close()
+
+    adopted = fleet.swap_to()
+    assert adopted == 5 and fleet.current_step == 5
+    prompts = {"tokens": jnp.asarray(np.full((1, 4), 3, np.int32))}
+    ref, _ = Server(model, p2, ServeConfig(max_new_tokens=3)).generate(prompts)
+    for srv in fleet.servers:
+        toks, _, v = srv.generate(prompts, with_version=True)
+        np.testing.assert_array_equal(toks, ref)
+        assert v == 1                      # exactly one roll happened
+    assert fleet.swap_history and fleet.swap_history[-1][0] == 5
+    fleet.close()
+    mgr.close()
+
+
+def test_follower_adopts_only_flush_done(tmp_path):
+    """Manifests at flush_partial / superseded / quarantined newer than
+    the served step must never be adopted; a real flush_done step is."""
+    from repro.core import Manifest
+    from repro.serve import FleetConfig, ServeFleet
+
+    model, params, mgr = fleet_checkpoint(tmp_path)
+    fleet = ServeFleet(
+        model, mgr, jax.tree_util.tree_map(np.asarray, params),
+        cfg=FleetConfig(n_servers=1, poll_interval=0.02),
+    )
+    fleet.cold_start()
+    # plant newer NON-final manifests on the PFS
+    src = mgr.pfs_dir / "step_00000003" / "manifest.json"
+    for step, status in ((7, "flush_partial"), (8, "superseded"),
+                         (9, "quarantined")):
+        man = Manifest.from_json(src.read_text())
+        man.step = step
+        man.status = status
+        d = mgr.pfs_dir / f"step_{step:08d}"
+        d.mkdir(parents=True, exist_ok=True)
+        (d / "manifest.json").write_text(man.to_json())
+    fleet.start_follower()
+    time.sleep(0.3)
+    assert fleet.current_step == 3          # nothing non-final adopted
+    # now a genuine newer step
+    p2 = model.init(jax.random.PRNGKey(2))
+    train = make_mgr(tmp_path, cluster=theta_like(4, 2))
+    train.save(11, {"params": p2, "opt": {"mu": jnp.zeros((4096,), jnp.float32)}})
+    train.close()
+    deadline = time.monotonic() + 30
+    while fleet.current_step != 11 and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert fleet.current_step == 11
+    assert trees_equal(
+        fleet.servers[0].params, jax.tree_util.tree_map(np.asarray, p2)
+    )
+    fleet.stop()
+    fleet.close()
+    mgr.close()
+
+
+def test_follower_hot_swap_drops_no_generates(tmp_path):
+    """Generates hammering the fleet while the follower rolls params:
+    every generate completes and matches exactly one version's
+    reference output (no torn swap, nothing dropped)."""
+    from repro.serve import FleetConfig, ServeConfig, ServeFleet, Server
+
+    model, params, mgr = fleet_checkpoint(tmp_path)
+    fleet = ServeFleet(
+        model, mgr, jax.tree_util.tree_map(np.asarray, params),
+        cfg=FleetConfig(n_servers=1, poll_interval=0.02,
+                        serve=ServeConfig(max_new_tokens=3)),
+    )
+    fleet.cold_start()
+    prompts = {"tokens": jnp.asarray(np.full((2, 4), 5, np.int32))}
+    p2 = model.init(jax.random.PRNGKey(2))
+    refs = {
+        0: Server(model, params, ServeConfig(max_new_tokens=3)).generate(prompts)[0],
+        1: Server(model, p2, ServeConfig(max_new_tokens=3)).generate(prompts)[0],
+    }
+    results, errors = [], []
+    stop = threading.Event()
+
+    def hammer():
+        srv = fleet.servers[0]
+        while not stop.is_set():
+            try:
+                toks, _, v = srv.generate(prompts, with_version=True)
+                results.append((v, toks))
+            except Exception as e:  # pragma: no cover - failure reporting
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=hammer) for _ in range(2)]
+    for t in threads:
+        t.start()
+    fleet.start_follower()
+    train = make_mgr(tmp_path, cluster=theta_like(4, 2))
+    train.save(6, {"params": p2, "opt": {"mu": jnp.zeros((4096,), jnp.float32)}})
+    train.close()
+    deadline = time.monotonic() + 30
+    while fleet.current_step != 6 and time.monotonic() < deadline:
+        time.sleep(0.02)
+    # keep hammering until at least one post-swap generate lands
+    while not any(v == 1 for v, _ in list(results)) and time.monotonic() < deadline:
+        time.sleep(0.02)
+    stop.set()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive()
+    fleet.stop()
+    assert not errors
+    assert fleet.current_step == 6
+    versions = {v for v, _ in results}
+    assert 1 in versions                   # post-swap generates happened
+    for v, toks in results:
+        np.testing.assert_array_equal(toks, refs[min(v, 1)])
+    fleet.close()
+    mgr.close()
+
+
+def test_fleet_stop_and_close_idempotent(tmp_path):
+    from repro.serve import FleetConfig, ServeFleet
+
+    model, params, mgr = fleet_checkpoint(tmp_path)
+    fleet = ServeFleet(
+        model, mgr, jax.tree_util.tree_map(np.asarray, params),
+        cfg=FleetConfig(n_servers=1),
+    )
+    fleet.cold_start()
+    fleet.start_follower()
+    fleet.stop()
+    fleet.stop()                          # second stop is a no-op
+    fleet.close()
+    fleet.close()
+    mgr.close()

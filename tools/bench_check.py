@@ -24,7 +24,13 @@ Per-file schema (top level: ``benchmark`` string + non-empty ``rows``):
   ``schedule`` row with ``restored_identical`` true and zero
   ``invariant_violations``, the ``chaos_summary`` row with
   ``repair_success_frac >= 0.95``, all six fault kinds and all five
-  strategies covered.
+  strategies covered;
+* ``BENCH_serve.json``   — the serving-fleet rows (ISSUE 7): every
+  ``ttft`` row must beat the full restore (``ttft_s <
+  full_restore_s``) and restore byte-identically, with the largest
+  geometry at >= 1024 ranks; every ``cold_start_fleet`` row
+  ``byte_identical``; every ``hot_swap`` row with generates on both
+  sides of the swap and ``dropped == 0`` / ``torn == 0``.
 
 Exit code 0 = all good; 1 = any file missing/malformed (messages on
 stderr).  Run as ``python tools/bench_check.py [root]``.
@@ -60,6 +66,10 @@ EXPECTED = {
     ),
     "BENCH_chaos.json": (
         "chaos",
+        set(),  # rows are heterogeneous; per-kind fields checked below
+    ),
+    "BENCH_serve.json": (
+        "serve_fleet",
         set(),  # rows are heterogeneous; per-kind fields checked below
     ),
 }
@@ -99,6 +109,18 @@ CHAOS_KIND_FIELDS = {
                       "kinds_covered", "strategies_covered", "quick"},
 }
 
+SERVE_KIND_FIELDS = {
+    "ttft": {"config", "n_ranks", "serve_readers", "params_bytes",
+             "priority_bytes", "full_restore_s", "stream_total_s", "ttft_s",
+             "ttft_speedup", "byte_identical"},
+    "cold_start_fleet": {"config", "n_ranks", "serve_readers", "n_servers",
+                         "fleet_total_s", "ttft_max_s", "ttft_mean_s",
+                         "cache_hits", "cache_bytes_saved", "byte_identical"},
+    "hot_swap": {"config", "n_generates", "pre_swap_generates",
+                 "post_swap_generates", "dropped", "torn", "adopted_step",
+                 "swap_latency_s"},
+}
+
 ALL_STRATEGIES = {
     "file_per_process", "posix", "mpiio", "stripe_aligned", "gio_sync"
 }
@@ -111,6 +133,7 @@ SUPERSESSION_SKIP_BAR = 0.5     # skipped_frac >= this (ISSUE 5a)
 RESUME_REWRITE_BAR = 0.25       # rewrite_frac < this (ISSUE 5b)
 CHAOS_MIN_SCHEDULES = 100       # full-sweep size floor (ISSUE 6)
 CHAOS_REPAIR_BAR = 0.95         # repair_success_frac >= this (ISSUE 6)
+SERVE_MIN_RANKS = 1024          # largest ttft geometry floor (ISSUE 7)
 
 
 def fail(msg: str, errors: list) -> None:
@@ -135,12 +158,14 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
         return fail(f"{path.name}: rows must be a non-empty list", errors)
     for i, row in enumerate(rows):
         need = set(fields)
-        if benchmark in ("restore_scale", "codec_phase", "flush_runtime", "chaos"):
+        if benchmark in ("restore_scale", "codec_phase", "flush_runtime",
+                         "chaos", "serve_fleet"):
             kinds = {
                 "restore_scale": RESTORE_KIND_FIELDS,
                 "codec_phase": CODEC_KIND_FIELDS,
                 "flush_runtime": FLUSH_RUNTIME_KIND_FIELDS,
                 "chaos": CHAOS_KIND_FIELDS,
+                "serve_fleet": SERVE_KIND_FIELDS,
             }[benchmark]
             kind = row.get("kind")
             if kind not in kinds:
@@ -204,6 +229,9 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
                 f"{sorted(ALL_STRATEGIES - covered)}", errors,
             )
 
+    if benchmark == "serve_fleet" and not errors:
+        check_serve(path, rows, errors)
+
     if benchmark == "chaos" and not errors:
         sched = [r for r in rows if r.get("kind") == "schedule"]
         summaries = [r for r in rows if r.get("kind") == "chaos_summary"]
@@ -254,6 +282,50 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
                 f"{path.name}: strategies not covered: "
                 f"{sorted(ALL_STRATEGIES - set(s['strategies_covered']))}",
                 errors,
+            )
+
+
+def check_serve(path: Path, rows: list, errors: list) -> None:
+    ttft = [r for r in rows if r.get("kind") == "ttft"]
+    fleet = [r for r in rows if r.get("kind") == "cold_start_fleet"]
+    swap = [r for r in rows if r.get("kind") == "hot_swap"]
+    if not ttft:
+        fail(f"{path.name}: no ttft rows", errors)
+    for r in ttft:
+        if r["ttft_s"] >= r["full_restore_s"]:
+            fail(
+                f"{path.name}: {r['config']} ttft {r['ttft_s']}s did not "
+                f"beat full restore {r['full_restore_s']}s", errors,
+            )
+        if not r["byte_identical"]:
+            fail(
+                f"{path.name}: {r['config']} streamed restore is not "
+                "byte-identical to the full restore", errors,
+            )
+    if ttft and max(r["n_ranks"] for r in ttft) < SERVE_MIN_RANKS:
+        fail(
+            f"{path.name}: largest ttft geometry "
+            f"{max(r['n_ranks'] for r in ttft)} ranks < {SERVE_MIN_RANKS} "
+            "floor", errors,
+        )
+    for r in fleet:
+        if not r["byte_identical"]:
+            fail(
+                f"{path.name}: {r['config']} fleet replicas are not "
+                "byte-identical", errors,
+            )
+    if not swap:
+        fail(f"{path.name}: no hot_swap rows", errors)
+    for r in swap:
+        if r["dropped"] or r["torn"]:
+            fail(
+                f"{path.name}: {r['config']} hot swap dropped={r['dropped']} "
+                f"torn={r['torn']} (bar: zero of each)", errors,
+            )
+        if not r["pre_swap_generates"] or not r["post_swap_generates"]:
+            fail(
+                f"{path.name}: {r['config']} needs generates on both sides "
+                "of the swap to witness linearizability", errors,
             )
 
 
