@@ -1,0 +1,324 @@
+"""Degraded-mode availability sweep: PFS outages and straggler readers
+vs the circuit-breaker runtime (ISSUE 8 acceptance harness).
+
+Two scenario kinds:
+
+* ``outage_survival`` — one row per aggregation strategy.  A total PFS
+  outage covers the whole save phase; the acceptance bars are that **no
+  ``save()`` fails and no retry budget gives up** (the circuit opens
+  and flushes park at ``flush_partial`` instead), and that after the
+  outage heals the parked backlog **auto-drains byte-identically**
+  (verified from the PFS copy alone — L0 forgotten, L1 dropped).
+* ``hedged_restore`` — repeated restores against one straggler reader
+  node, hedged vs unhedged.  The bar is that the hedged p99 beats the
+  unhedged p99: the hedge re-issues slowed extents from L1 so the
+  restore tail is bounded by the healthy medium, not the straggler.
+
+Any violation is recorded per row (``violations``) and fails the
+sweep's exit code; the committed ``BENCH_outage.json`` is the CI-gated
+record (``python tools/bench_check.py``).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/outage.py                  # full sweep
+    PYTHONPATH=src python benchmarks/outage.py --quick          # CI smoke
+    PYTHONPATH=src python benchmarks/outage.py --out BENCH_outage.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import (  # noqa: E402
+    CheckpointConfig,
+    CheckpointManager,
+    FaultPlan,
+    FaultSpec,
+    theta_like,
+)
+
+ALL_STRATEGIES = ["file_per_process", "posix", "mpiio", "stripe_aligned", "gio_sync"]
+N_STEPS = 3
+DRAIN_TIMEOUT_S = 60.0
+STRAGGLER_DELAY_S = 0.12
+FULL_TRIALS = 8
+QUICK_TRIALS = 4
+
+
+def ref_state(step: int) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(step * 7919 + 5)
+    return {
+        "w": rng.standard_normal((2048, 4)).astype(np.float32),
+        "b": np.full((64,), step, np.float32),
+        "c": rng.integers(0, 255, (4096,), dtype=np.uint8),
+    }
+
+
+def trees_equal(a: Dict, b: Dict) -> bool:
+    return set(a) == set(b) and all(
+        np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a
+    )
+
+
+def base_cfg(root: str, **kw: Any) -> CheckpointConfig:
+    kw.setdefault("cluster", theta_like(2, 2))
+    kw.setdefault("async_flush", False)
+    kw.setdefault("retry_attempts", 5)
+    kw.setdefault("retry_base_delay", 0.002)
+    kw.setdefault("retry_max_delay", 0.02)
+    kw.setdefault("health_min_ops", 2)
+    kw.setdefault("health_cooldown", 0.05)
+    return CheckpointConfig(root=root, **kw)
+
+
+def run_outage_survival(strategy: str, *, root: str) -> Dict[str, Any]:
+    """Total PFS outage across every save; heal; drain; verify."""
+    row: Dict[str, Any] = {
+        "kind": "outage_survival",
+        "config": f"outage[{strategy}]",
+        "strategy": strategy,
+        "n_steps": N_STEPS,
+        "violations": [],
+    }
+    violations: List[str] = row["violations"]
+    faults = FaultPlan(
+        [FaultSpec(kind="outage", domain="pfs", op="write", index=0, count=10**9)]
+    )
+    t0 = time.perf_counter()
+    mgr = CheckpointManager(
+        base_cfg(str(Path(root) / "ckpt"), strategy=strategy), faults=faults
+    )
+    try:
+        faults.arm("save")
+        saves_failed = 0
+        for s in range(1, N_STEPS + 1):
+            try:
+                mgr.save(s, ref_state(s))
+            except Exception as e:
+                saves_failed += 1
+                violations.append(f"save({s}) raised during outage: {e!r}")
+        h = mgr.health()
+        row["saves_failed"] = saves_failed
+        row["parked_steps"] = len(h.parked_steps)
+        row["mode_during_outage"] = h.mode
+        row["giveups"] = mgr.retry.giveups
+        row["flush_errors"] = len(mgr.flush_errors)
+        if mgr.retry.giveups:
+            violations.append(
+                f"{mgr.retry.giveups} retry giveups during outage "
+                "(the circuit must open first)"
+            )
+        if mgr.flush_errors:
+            violations.append(f"flush_errors during outage: {mgr.flush_errors}")
+        if h.mode != "degraded" or len(h.parked_steps) != N_STEPS:
+            violations.append(
+                f"expected {N_STEPS} parked steps in degraded mode, got "
+                f"{h.parked_steps} in mode {h.mode!r}"
+            )
+        # ---- heal and drain ----
+        faults.heal()
+        faults.disarm()
+        deadline = time.monotonic() + DRAIN_TIMEOUT_S
+        while mgr.health().parked_steps and time.monotonic() < deadline:
+            mgr.health_check()
+            time.sleep(0.01)
+        drained = (
+            not mgr.health().parked_steps
+            and mgr.steps("pfs") == list(range(1, N_STEPS + 1))
+            and not mgr.flush_errors
+        )
+        row["drained"] = drained
+        row["drained_steps"] = mgr.health().drained_steps
+        if not drained:
+            violations.append(
+                f"drain incomplete: pfs={mgr.steps('pfs')} "
+                f"parked={mgr.health().parked_steps} "
+                f"errors={mgr.flush_errors}"
+            )
+    finally:
+        mgr.close()
+    # ---- byte-identical from the PFS copy alone ----
+    identical = True
+    m2 = CheckpointManager(base_cfg(str(Path(root) / "ckpt"), strategy=strategy))
+    try:
+        m2._l0 = None
+        m2._last_full = None
+        m2.local.drop_node(0)
+        m2.local.drop_node(1)
+        for s in range(1, N_STEPS + 1):
+            try:
+                got, tree = m2.restore(ref_state(s), step=s)
+            except Exception as e:
+                identical = False
+                violations.append(f"step {s}: post-drain restore raised {e!r}")
+                continue
+            if got != s or not trees_equal(tree, ref_state(s)):
+                identical = False
+                violations.append(f"step {s}: post-drain restore not identical")
+    finally:
+        m2.close()
+    row["byte_identical"] = identical
+    row["elapsed_s"] = round(time.perf_counter() - t0, 4)
+    return row
+
+
+def run_hedged_restore(trials: int, *, root: str) -> Dict[str, Any]:
+    """Straggler reader node: unhedged vs hedged restore tail."""
+    row: Dict[str, Any] = {
+        "kind": "hedged_restore",
+        "config": f"hedge[posix,{trials}x]",
+        "trials": trials,
+        "straggler_delay_s": STRAGGLER_DELAY_S,
+        "violations": [],
+    }
+    violations: List[str] = row["violations"]
+    ckpt_root = str(Path(root) / "ckpt")
+    writer = CheckpointManager(base_cfg(ckpt_root, strategy="posix"))
+    try:
+        writer.save(1, ref_state(1))
+    finally:
+        writer.close()
+
+    def trial_times(hedged: bool) -> List[float]:
+        faults = FaultPlan(
+            [FaultSpec(kind="straggler", domain="pfs", op="read", node=1,
+                       delay=STRAGGLER_DELAY_S, phase="verify")]
+        )
+        mgr = CheckpointManager(
+            base_cfg(
+                ckpt_root, strategy="posix",
+                hedged_reads=hedged, hedge_min_delay=0.01,
+            ),
+            faults=faults,
+        )
+        times: List[float] = []
+        issued = wins = 0
+        try:
+            faults.arm("verify")
+            for _ in range(trials):
+                mgr._l0 = None
+                mgr._last_full = None
+                t0 = time.perf_counter()
+                got, tree = mgr.restore(ref_state(1), step=1)
+                times.append(time.perf_counter() - t0)
+                if got != 1 or not trees_equal(tree, ref_state(1)):
+                    violations.append(
+                        f"{'hedged' if hedged else 'unhedged'} restore "
+                        "not byte-identical"
+                    )
+                # accumulate per trial: once straggler demotion shifts
+                # the assignment off the slow reader, later trials may
+                # legitimately need no hedges at all
+                rr = mgr.last_read_result
+                if rr is not None:
+                    issued += rr.hedges_issued
+                    wins += rr.hedge_wins
+            if hedged:
+                row["hedges_issued"] = issued
+                row["hedge_wins"] = wins
+        finally:
+            mgr.close()
+        return times
+
+    def p99(times: List[float]) -> float:
+        arr = sorted(times)
+        return arr[min(len(arr) - 1, int(0.99 * len(arr)))]
+
+    t_plain = trial_times(hedged=False)
+    t_hedge = trial_times(hedged=True)
+    row["unhedged_p99_s"] = round(p99(t_plain), 4)
+    row["hedged_p99_s"] = round(p99(t_hedge), 4)
+    row["unhedged_mean_s"] = round(float(np.mean(t_plain)), 4)
+    row["hedged_mean_s"] = round(float(np.mean(t_hedge)), 4)
+    row["speedup_p99"] = round(
+        row["unhedged_p99_s"] / max(row["hedged_p99_s"], 1e-9), 2
+    )
+    row["byte_identical"] = not any("identical" in v for v in violations)
+    if row["hedged_p99_s"] >= row["unhedged_p99_s"]:
+        violations.append(
+            f"hedged p99 {row['hedged_p99_s']}s did not beat unhedged "
+            f"p99 {row['unhedged_p99_s']}s"
+        )
+    if not row.get("hedge_wins"):
+        violations.append("no hedge ever won the race against the straggler")
+    return row
+
+
+def summarize(rows: List[Dict[str, Any]], quick: bool) -> Dict[str, Any]:
+    surv = [r for r in rows if r["kind"] == "outage_survival"]
+    hedge = [r for r in rows if r["kind"] == "hedged_restore"]
+    return {
+        "kind": "outage_summary",
+        "n_rows": len(rows),
+        "n_violations": sum(len(r["violations"]) for r in rows),
+        "zero_failed_saves": all(r["saves_failed"] == 0 for r in surv),
+        "zero_giveups": all(r["giveups"] == 0 for r in surv),
+        "all_drained": all(r["drained"] for r in surv),
+        "all_byte_identical": all(r["byte_identical"] for r in rows),
+        "strategies_covered": sorted({r["strategy"] for r in surv}),
+        "unhedged_p99_s": max((r["unhedged_p99_s"] for r in hedge), default=0.0),
+        "hedged_p99_s": max((r["hedged_p99_s"] for r in hedge), default=0.0),
+        "hedged_beats_unhedged": all(
+            r["hedged_p99_s"] < r["unhedged_p99_s"] for r in hedge
+        ) and bool(hedge),
+        "quick": quick,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke (fewer trials)")
+    ap.add_argument("--trials", type=int, default=None, help="hedge trials override")
+    ap.add_argument("--out", type=str, default=None, help="write BENCH json here")
+    args = ap.parse_args()
+    trials = args.trials or (QUICK_TRIALS if args.quick else FULL_TRIALS)
+    rows: List[Dict[str, Any]] = []
+    with tempfile.TemporaryDirectory(prefix="outage_") as workdir:
+        for i, strategy in enumerate(ALL_STRATEGIES):
+            row = run_outage_survival(
+                strategy, root=str(Path(workdir) / f"surv_{strategy}")
+            )
+            rows.append(row)
+            flag = "" if not row["violations"] else "  VIOLATION"
+            print(
+                f"[{i + 1}/{len(ALL_STRATEGIES) + 1}] {row['config']:<28s}"
+                f" parked={row['parked_steps']} giveups={row['giveups']}"
+                f" drained={row['drained']}"
+                f" identical={row['byte_identical']}{flag}"
+            )
+        row = run_hedged_restore(trials, root=str(Path(workdir) / "hedge"))
+        rows.append(row)
+        flag = "" if not row["violations"] else "  VIOLATION"
+        print(
+            f"[{len(ALL_STRATEGIES) + 1}/{len(ALL_STRATEGIES) + 1}]"
+            f" {row['config']:<28s} p99 unhedged={row['unhedged_p99_s']}s"
+            f" hedged={row['hedged_p99_s']}s"
+            f" wins={row.get('hedge_wins', 0)}{flag}"
+        )
+    summary = summarize(rows, args.quick)
+    rows.append(summary)
+    print(json.dumps(summary, indent=1))
+    if args.out:
+        doc = {"benchmark": "outage", "quick": args.quick, "rows": rows}
+        Path(args.out).write_text(json.dumps(doc, indent=1) + "\n")
+        print(f"wrote {args.out}")
+    if summary["n_violations"]:
+        for r in rows:
+            for v in r.get("violations", []):
+                print(f"outage: {r.get('config', '?')}: {v}", file=sys.stderr)
+        return 1
+    print(f"outage: OK ({len(rows) - 1} rows, zero violations)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

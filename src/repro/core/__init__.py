@@ -11,7 +11,13 @@ Public API:
   Theta-like machine (benchmark harness).
 """
 from repro.core.cluster import ClusterSpec, NodeSpec, PFSSpec, theta_like
-from repro.core.engine import CheckpointConfig, CheckpointManager, SaveStats
+from repro.core.engine import (
+    CheckpointConfig,
+    CheckpointManager,
+    L1CapacityError,
+    ManagerHealth,
+    SaveStats,
+)
 from repro.core.faults import FaultPlan, FaultSpec
 from repro.core.repair import RepairReport, repair_step
 from repro.core.plan import (
@@ -54,14 +60,18 @@ from repro.core.serialize import (
 from repro.core.sim import FlushSimulator, SimReport, simulate_flush
 from repro.core.storage import (
     CancelToken,
+    CircuitOpenError,
+    DomainHealth,
     FlushCancelled,
     FlushJournal,
     FlushResult,
+    HedgePolicy,
     LocalStore,
     MissingBlobError,
     RealExecutor,
     RetryPolicy,
     StorageError,
+    StorageHealth,
     TokenBucket,
     classify_error,
 )
@@ -74,6 +84,8 @@ __all__ = [
     "theta_like",
     "CheckpointConfig",
     "CheckpointManager",
+    "L1CapacityError",
+    "ManagerHealth",
     "SaveStats",
     "FileLayout",
     "FlushPlan",
@@ -110,14 +122,18 @@ __all__ = [
     "SimReport",
     "simulate_flush",
     "CancelToken",
+    "CircuitOpenError",
+    "DomainHealth",
     "FlushCancelled",
     "FlushJournal",
     "FlushResult",
+    "HedgePolicy",
     "LocalStore",
     "MissingBlobError",
     "RealExecutor",
     "RetryPolicy",
     "StorageError",
+    "StorageHealth",
     "TokenBucket",
     "classify_error",
     "FaultPlan",

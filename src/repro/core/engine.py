@@ -57,6 +57,21 @@ docs/OPERATIONS.md for the full lifecycle state machine):
   extent instead of rewriting the whole checkpoint.  ``restore()``
   never trusts a ``flush_partial``/``superseded`` manifest — those
   steps fall back to L1 until resumed.
+* **degraded-mode availability** (``health_enabled``, on by default
+  with the retry layer): a per-domain
+  :class:`~repro.core.storage.StorageHealth` circuit breaker watches
+  every retry attempt.  When the PFS circuit opens, flushes **park**
+  at ``flush_partial`` (write set + journal persisted) instead of
+  burning retry budgets — ``save()`` keeps succeeding on L0/L1, an
+  ``l1_capacity_bytes`` budget applies backpressure by evicting the
+  oldest non-pinned step, and the scheduler probes the PFS
+  (:meth:`~repro.core.storage.RealExecutor.probe_pfs`) until the
+  circuit closes, then auto-drains the parked steps through
+  ``resume_flushes()``.  :meth:`CheckpointManager.health` surfaces
+  the mode / circuits / parked set; ``hedged_reads`` adds
+  deadline-aware read hedging (PFS extent re-issued from L1/partner
+  past the latency-quantile deadline) plus health-weighted reader
+  assignment.  See docs/OPERATIONS.md "Degraded mode".
 
 Elasticity: L2 checkpoints are mesh-agnostic (logical byte stream +
 manifest); a checkpoint saved under one cluster geometry restores under
@@ -75,6 +90,7 @@ from __future__ import annotations
 import logging
 import os
 import queue
+import random
 import shutil
 import threading
 import time
@@ -114,13 +130,16 @@ from repro.core.serialize import (
 from repro.core.faults import FaultPlan
 from repro.core.storage import (
     CancelToken,
+    CircuitOpenError,
     FlushCancelled,
     FlushJournal,
     FlushResult,
+    HedgePolicy,
     LocalStore,
     ReadResult,
     RealExecutor,
     RetryPolicy,
+    StorageHealth,
     TokenBucket,
     placement_from_plan,
 )
@@ -193,6 +212,38 @@ class CheckpointConfig:
     retry_base_delay: float = 0.02     # seconds, doubles per attempt
     retry_max_delay: float = 0.5       # backoff ceiling per sleep
     retry_deadline: float = 30.0       # per-op wall-clock budget
+    # ---- degraded-mode availability runtime (docs/OPERATIONS.md) ----
+    # Storage health registry + circuit breaker per domain ("pfs",
+    # "l1:n{j}", "partner:n{j}").  Fed per retry attempt; when the PFS
+    # circuit opens, flushes *park* at flush_partial (journals intact)
+    # instead of burning retry budgets, and the scheduler probes +
+    # auto-drains via resume_flushes() once the circuit closes.
+    # Requires the retry layer (retry_attempts > 1); health_enabled is
+    # ignored without it.
+    health_enabled: bool = True
+    health_min_ops: int = 8            # window attempts before rate trips
+    health_error_threshold: float = 0.5
+    health_cooldown: float = 2.0       # open -> half-open probe delay (s)
+    health_tick: float = 0.25          # idle scheduler probe/drain cadence
+    # Re-queue flush_partial steps found under root at construction
+    # (crash recovery without an explicit resume_flushes() call).  The
+    # degraded-mode auto-drain reuses the same path.
+    auto_resume: bool = False
+    # L1 byte budget across all nodes (0 = unbounded).  When a save
+    # would overflow it, the oldest evictable step's L1 blobs are
+    # dropped first (never delta anchors, live-window bases, keep_n
+    # steps, or queued/mid-flight flushes; parked steps are superseded,
+    # not silently lost); save() raises L1CapacityError only when
+    # nothing is evictable.
+    l1_capacity_bytes: int = 0
+    # Deadline-aware read hedging: a PFS extent pread outstanding past
+    # the hedge_quantile of observed latencies (floored at
+    # hedge_min_delay seconds) is re-issued from the L1/partner copy;
+    # first success wins, the loser's bytes are discarded.  Also turns
+    # on health-weighted reader assignment (straggler demotion).
+    hedged_reads: bool = False
+    hedge_quantile: float = 0.95
+    hedge_min_delay: float = 0.02
 
 
 @dataclass
@@ -216,6 +267,38 @@ class SaveStats:
     superseded: bool = False
 
 
+class L1CapacityError(RuntimeError):
+    """``save()`` refused: the L1 byte budget is full and every resident
+    step is pinned (delta anchor, live delta window, ``keep_n``, or
+    queued/mid-flight).  Raised *before* any byte of the new step is
+    written — the caller can drop the save, raise the budget, or wait
+    for a flush to retire a pinned step."""
+
+
+@dataclass
+class ManagerHealth:
+    """Operator/follower view of the manager's availability state.
+
+    ``mode`` is ``"normal"`` (PFS circuit closed, nothing parked),
+    ``"degraded"`` (PFS circuit open or probing: new flushes park at
+    ``flush_partial`` with journals intact, saves keep landing on
+    L0/L1), or ``"draining"`` (circuit closed again, parked flushes
+    re-queuing through ``resume_flushes()``).  The serving fleet's
+    follower treats ``degraded`` as "do not adopt new steps" — only a
+    ``flush_done`` manifest published after the drain is trustworthy.
+    """
+
+    mode: str
+    queue_depth: int            # jobs queued/mid-flight in the scheduler
+    parked_steps: List[int]     # flush_partial steps awaiting the drain
+    l1_bytes: int               # tracked L1 occupancy (replicas included)
+    l1_capacity: int            # configured budget (0 = unbounded)
+    circuits: Dict[str, str]    # domain -> closed | open | half_open
+    degraded_since: Optional[float] = None  # monotonic ts of first park
+    drained_steps: int = 0      # parked flushes completed by auto-drain
+    evicted_steps: List[int] = dfield(default_factory=list)
+
+
 @dataclass
 class _FlushJob:
     """One enqueued flush: the encoded step, its plan, and the runtime
@@ -226,6 +309,12 @@ class _FlushJob:
     token: CancelToken
     protected: bool          # delta-base anchor / keep_n-pinned
     superseded: bool = False  # set (under the manager lock) by newer saves
+
+
+# Scheduler-queue sentinel: run resume_flushes() on the flush worker
+# (auto_resume re-queues crash-leftover flush_partial steps this way so
+# the constructor never blocks on PFS I/O).
+_AUTO_RESUME = object()
 
 
 class CheckpointManager:
@@ -250,6 +339,16 @@ class CheckpointManager:
             if config.retry_attempts > 1
             else None
         )
+        # Storage health registry: fed per retry attempt, drives the
+        # PFS circuit breaker and the degraded-mode scheduler below.
+        self.storage_health: Optional[StorageHealth] = None
+        if config.health_enabled and self.retry is not None:
+            self.storage_health = StorageHealth(
+                min_ops=config.health_min_ops,
+                error_threshold=config.health_error_threshold,
+                cooldown=config.health_cooldown,
+            )
+            self.retry.health = self.storage_health
         self.faults = faults  # deterministic chaos schedule (core/faults.py)
         self.local = LocalStore(
             self.root / "local", self.cluster.n_nodes,
@@ -312,11 +411,31 @@ class CheckpointManager:
         # same keying for the base step, so co-located replicas dedup
         # CHUNK_BASE/delta-base decodes for free.
         self.chunk_cache = None
+        # Degraded-mode availability runtime state (docs/OPERATIONS.md
+        # "Degraded mode"): parked flush_partial steps awaiting the
+        # post-outage drain, L1 occupancy accounting for backpressure,
+        # and the seeded probe-payload generator for half-open checks.
+        self._parked: Dict[int, None] = {}  # insertion-ordered step set
+        self._degraded_since: Optional[float] = None
+        self._draining = False
+        self._drained_total = 0
+        self._evicted: Deque[int] = deque(maxlen=4096)
+        self._l1_bytes: Dict[int, int] = {}
+        self._l1_anchors: set = set()  # full snapshots under zstd+delta
+        self._last_l1_cost = 0  # newest step's L1 bytes (reserve estimate)
+        self._probe_rng = random.Random(0x5EED)
+        if config.l1_capacity_bytes > 0:
+            self._scan_l1_occupancy()
         if config.async_flush:
             self._worker = threading.Thread(
                 target=self._scheduler_loop, name="active-backend", daemon=True
             )
             self._worker.start()
+        if config.auto_resume:
+            if self._worker is not None:
+                self._q.put(_AUTO_RESUME)  # re-queue partials on the worker
+            else:
+                self.resume_flushes()
 
     # ------------------------------------------------------------------ save
 
@@ -336,6 +455,11 @@ class CheckpointManager:
         c = self.cluster
         pool = self._local_pool() if cfg.parallel_local else None
         replicate = cfg.partner_replication and c.n_nodes > 1
+        # L1 backpressure: make room for this step *before* its first
+        # blob lands (the fused path writes L1 inside encode).  The
+        # newest step's cost is the estimate; the post-write true-up
+        # below reconciles against the real size.
+        self._enforce_l1_budget(step, self._last_l1_cost, strict=True)
 
         def drain_rank(rank: int, blob: Any) -> None:
             # non-atomic, unsynced writes: the local manifest written
@@ -400,13 +524,18 @@ class CheckpointManager:
             stored_bytes=sum(r.stored_size for r in enc.manifest.ranks),
             encode_time=t_enc,
         )
+        l1_cost = st.stored_bytes * (2 if replicate else 1)
         with self._lock:
             self._l0 = enc
             if enc.manifest.base_step is None:
                 self._last_full = enc
                 self._saves_since_full = 0
+                if cfg.codec == "zstd+delta":
+                    self._l1_anchors.add(step)
             else:
                 self._saves_since_full += 1
+            self._l1_bytes[step] = l1_cost
+            self._last_l1_cost = l1_cost
             self.stats.append(st)
             self._stats_by_step[step] = st
             self._saved_steps.append(step)
@@ -433,7 +562,18 @@ class CheckpointManager:
                 self._pending[step] = job
             self._q.put(job)
         else:
-            st.flush = self._do_flush(job)
+            try:
+                st.flush = self._do_flush(job)
+            except (CircuitOpenError, OSError) as e:
+                # degraded mode, sync flavor: save() still succeeds —
+                # the step parks at flush_partial, health_check() drains
+                if self._pfs_degraded() and cfg.resumable_flushes:
+                    self._park_job(job, e)
+                else:
+                    raise
+        # post-write true-up: the real cost is now known; evict (never
+        # raise — the bytes are already durable on L1) if it overshot
+        self._enforce_l1_budget(step, 0, strict=False)
         return st
 
     # ----------------------------------------------------------------- flush
@@ -511,8 +651,14 @@ class CheckpointManager:
         flush would leave newer flush_done deltas unrestorable from the
         PFS alone.  Delta-window steps only become superseded-able when
         the next full snapshot opens a new window.
+
+        *Parked* steps (degraded mode) follow the same rule: a newer
+        save supersedes an older parked flush under the identical
+        protections, so an outage with a live save cadence drains only
+        the newest state afterwards instead of replaying the backlog.
         """
         keep = self.cfg.keep_n
+        parked_stale: List[int] = []
         with self._lock:
             pinned = set(self._saved_steps[-keep:]) if keep is not None else set()
             window_floor = None
@@ -527,6 +673,21 @@ class CheckpointManager:
                     continue  # live delta window: s is a base of new_step
                 job.superseded = True
                 job.token.cancel()
+            for s in list(self._parked):
+                if s >= new_step or s in pinned or s in self._l1_anchors:
+                    continue
+                if window_floor is not None and s >= window_floor:
+                    continue
+                self._parked.pop(s, None)
+                parked_stale.append(s)
+        for s in parked_stale:
+            try:
+                man = self._gc_manifest_any(s)
+                man.status = "superseded"
+                self._write_manifest_pfs(man)
+            except Exception:
+                log.exception("failed to supersede parked step %d", s)
+            self._note_superseded(s, "parked")
 
     def _journal_path(self, step: int) -> Path:
         return self.pfs_dir / f"step_{step:08d}" / "flush_journal.bin"
@@ -536,12 +697,29 @@ class CheckpointManager:
         ``_flush_loop``): skips superseded queued jobs, runs the rest
         through the cancellable/throttled/journaled executor, and
         classifies every outcome — delivered, superseded (queued or
-        mid-flush), interrupted-but-resumable, or failed."""
+        mid-flush), interrupted-but-resumable, parked (PFS circuit
+        open: journaled flush_partial awaiting the post-outage drain),
+        or failed.  Between jobs the loop wakes every
+        ``cfg.health_tick`` seconds to probe an open PFS circuit and to
+        auto-drain parked steps once it closes."""
+        tick = max(0.05, float(self.cfg.health_tick))
         while True:
-            job = self._q.get()
+            try:
+                job = self._q.get(timeout=tick)
+            except queue.Empty:
+                self._health_tick()
+                continue
             if job is None:
                 self._q.task_done()
                 return
+            if job is _AUTO_RESUME:
+                try:
+                    self.resume_flushes()
+                except Exception:
+                    log.exception("auto_resume drain failed")
+                finally:
+                    self._q.task_done()
+                continue
             step = job.enc.step
             try:
                 with self._lock:
@@ -549,13 +727,26 @@ class CheckpointManager:
                 if skip:
                     self._note_superseded(step, "queued")
                 else:
-                    res = self._do_flush(job)
-                    # deliver by step, under the lock save() appends
-                    # under — never scan the list a save() is growing
-                    with self._lock:
-                        st = self._stats_by_step.get(step)
-                        if st is not None:
-                            st.flush = res
+                    if self._pfs_degraded():
+                        # a busy queue must not starve recovery: give the
+                        # circuit its probe/drain opportunity before
+                        # deciding this job's fate
+                        self._health_tick()
+                    if self._pfs_degraded():
+                        # fail fast — park with the placement persisted
+                        # instead of burning a retry budget per job
+                        # against a PFS the breaker already knows is out
+                        self._park_job(job, CircuitOpenError("pfs"))
+                    else:
+                        res = self._do_flush(job)
+                        # deliver by step, under the lock save() appends
+                        # under — never scan the list a save() is growing
+                        with self._lock:
+                            st = self._stats_by_step.get(step)
+                            if st is not None:
+                                st.flush = res
+            except CircuitOpenError as e:
+                self._park_job(job, e)
             except FlushCancelled:
                 if job.superseded:
                     self._note_superseded(step, "mid_flush")
@@ -576,6 +767,15 @@ class CheckpointManager:
                             "L1 only — re-save or re-flush it before "
                             "relying on the PFS", step,
                         )
+            except OSError as e:
+                if self._pfs_degraded():
+                    # the op that tripped the breaker: same parking as a
+                    # short-circuited job — its journaled state drains
+                    self._park_job(job, e)
+                else:
+                    log.exception("flush for step %d failed", step)
+                    with self._lock:
+                        self._flush_errors.append((step, repr(e)))
             except Exception as e:  # crash of the active backend
                 log.exception("flush for step %d failed", step)
                 with self._lock:
@@ -593,6 +793,276 @@ class CheckpointManager:
             if st is not None:
                 st.superseded = True
         log.info("flush for step %d superseded (%s)", step, phase)
+
+    # ------------------------------------------- degraded-mode availability
+
+    def _pfs_degraded(self) -> bool:
+        """True while the PFS circuit is open or probing (half-open)."""
+        sh = self.storage_health
+        return sh is not None and sh.state("pfs") != "closed"
+
+    def _park_job(self, job: _FlushJob, err: BaseException) -> None:
+        """Park a flush the PFS outage prevented: persist the write set
+        (manifest at ``flush_partial`` with full placement) so the
+        post-outage drain finishes it via :meth:`resume_flushes` —
+        journaled progress, if any, is kept.  Without
+        ``resumable_flushes`` there is nothing to park *with*, so the
+        step records a flush error exactly like the pre-health runtime.
+        """
+        step = job.enc.step
+        if not self.cfg.resumable_flushes:
+            log.error(
+                "flush for step %d failed with the PFS circuit open and "
+                "resumable_flushes=False: the step exists on L1 only", step,
+            )
+            with self._lock:
+                self._flush_errors.append((step, repr(err)))
+            return
+        man = job.enc.manifest
+        if man.status != "flush_partial" or man.placement is None:
+            # short-circuited before _do_flush persisted the write set
+            man.strategy = job.plan.strategy
+            man.files = dict(job.plan.files)
+            man.placement = placement_from_plan(job.plan)
+            man.status = "flush_partial"
+            self._write_manifest_pfs(man)
+        with self._lock:
+            self._parked[step] = None
+            if self._degraded_since is None:
+                self._degraded_since = time.monotonic()
+        log.warning(
+            "flush for step %d parked (%s); journaled state drains "
+            "automatically when the PFS circuit closes", step, err,
+        )
+
+    def _health_tick(self) -> None:
+        """One probe/drain opportunity: probe an open PFS circuit once
+        its cooldown elapses; once it closes, drain parked flushes.
+        Driven by the scheduler between jobs; sync managers and tests
+        drive it through :meth:`health_check`."""
+        sh = self.storage_health
+        if sh is None:
+            return
+        state = sh.state("pfs")
+        if state == "closed":
+            with self._lock:
+                parked = bool(self._parked)
+                if not parked:
+                    self._degraded_since = None
+            if parked:
+                self._drain_parked()
+            return
+        if state == "half_open":
+            self._probe_pfs_once()
+
+    def _probe_pfs_once(self) -> None:
+        """One half-open probe op (seeded payload) through
+        :meth:`RealExecutor.probe_pfs`; the outcome feeds the breaker."""
+        sh = self.storage_health
+        try:
+            sh.check("pfs")  # open -> half_open; admits this op as a probe
+        except CircuitOpenError:
+            return
+        payload = self._probe_rng.getrandbits(64).to_bytes(8, "little") * 2
+        try:
+            lat = self.executor.probe_pfs(payload)
+        except OSError:
+            sh.record("pfs", False)
+            return
+        sh.record("pfs", True, lat)
+
+    def _drain_parked(self) -> None:
+        """Finish every parked flush now that the circuit closed.
+
+        Reuses :meth:`resume_flushes` (placement + journal on disk is
+        exactly the resume input).  Steps the resume finished — or
+        definitively failed, or that stopped being ``flush_partial``
+        (superseded/GC'd) — leave the parked set; steps deferred by a
+        circuit that re-opened mid-drain stay parked for the next tick.
+        """
+        with self._lock:
+            if self._draining or not self._parked:
+                return
+            self._draining = True
+            n = len(self._parked)
+        log.info("PFS circuit closed: draining %d parked flush(es)", n)
+        try:
+            with self._lock:
+                pre_err = {s for s, _ in self._flush_errors}
+            out = self.resume_flushes()
+            with self._lock:
+                new_err = {s for s, _ in self._flush_errors} - pre_err
+                for s in list(self._parked):
+                    if s in out or s in new_err:
+                        self._parked.pop(s, None)
+                for s, res in out.items():
+                    st = self._stats_by_step.get(s)
+                    if st is not None:
+                        st.flush = res
+                self._drained_total += len(out)
+            for s in sorted(self._parked):
+                if self.step_status(s, "pfs") != "flush_partial":
+                    with self._lock:
+                        self._parked.pop(s, None)
+            with self._lock:
+                if not self._parked:
+                    self._degraded_since = None
+        finally:
+            with self._lock:
+                self._draining = False
+
+    def health(self) -> ManagerHealth:
+        """Current availability snapshot (see :class:`ManagerHealth`)."""
+        sh = self.storage_health
+        circuits: Dict[str, str] = {}
+        pfs_state = "closed"
+        if sh is not None:
+            circuits = {name: sh.state(name) for name in sh.snapshot()}
+            pfs_state = sh.state("pfs")
+        with self._lock:
+            parked = sorted(self._parked)
+            l1 = sum(self._l1_bytes.values())
+            since = self._degraded_since
+            drained = self._drained_total
+            evicted = list(self._evicted)
+            draining = self._draining
+        if pfs_state != "closed":
+            mode = "degraded"
+        elif parked or draining:
+            mode = "draining"
+        else:
+            mode = "normal"
+        return ManagerHealth(
+            mode=mode,
+            queue_depth=self._q.qsize(),
+            parked_steps=parked,
+            l1_bytes=l1,
+            l1_capacity=self.cfg.l1_capacity_bytes,
+            circuits=circuits,
+            degraded_since=since,
+            drained_steps=drained,
+            evicted_steps=evicted,
+        )
+
+    def health_check(self) -> ManagerHealth:
+        """Drive one probe/drain opportunity, then return the snapshot.
+
+        The async scheduler ticks on its own; sync managers (and
+        deterministic tests) call this to advance the open → half-open
+        → closed → drained recovery explicitly."""
+        self._health_tick()
+        return self.health()
+
+    # ------------------------------------------------ L1 capacity accounting
+
+    def _scan_l1_occupancy(self) -> None:
+        """Rebuild L1 byte accounting from the local manifests on disk
+        (manager constructed over an existing root with a budget set)."""
+        mult = 2 if (
+            self.cfg.partner_replication and self.cluster.n_nodes > 1
+        ) else 1
+        for p in sorted(
+            (self.root / "local" / "manifests").glob("step_*.json")
+        ):
+            try:
+                man = self._cached_manifest(p)
+            except Exception:
+                continue
+            if man.status == "quarantined":
+                continue
+            cost = sum(r.stored_size for r in man.ranks) * mult
+            self._l1_bytes[man.step] = cost
+            self._last_l1_cost = cost
+            if man.base_step is None and self.cfg.codec == "zstd+delta":
+                self._l1_anchors.add(man.step)
+
+    def _enforce_l1_budget(self, new_step: int, need: int, *, strict: bool) -> None:
+        """Evict oldest evictable steps until ``need`` more L1 bytes fit.
+
+        ``strict=True`` (the pre-write reservation in :meth:`save`)
+        raises :class:`L1CapacityError` when the budget is full and
+        nothing is evictable; ``strict=False`` (the post-write
+        true-up, where the step's real cost is first known) only logs —
+        the bytes are already on disk and the next save reconciles.
+        """
+        cap = self.cfg.l1_capacity_bytes
+        if cap <= 0:
+            return
+        while True:
+            with self._lock:
+                occ = sum(self._l1_bytes.values())
+                if occ + need <= cap:
+                    return
+                victim = self._pick_l1_victim_locked(new_step)
+            if victim is None:
+                if strict:
+                    raise L1CapacityError(
+                        f"save({new_step}): L1 budget of {cap} bytes is "
+                        f"full ({occ} resident + ~{need} incoming) and "
+                        "every resident step is pinned (delta anchor, "
+                        "live delta window, keep_n, or in-flight flush)"
+                    )
+                log.warning(
+                    "L1 occupancy %d exceeds the %d-byte budget and no "
+                    "step is evictable", occ, cap,
+                )
+                return
+            self._evict_l1(victim)
+
+    def _pick_l1_victim_locked(self, new_step: int) -> Optional[int]:
+        """Oldest L1-resident step safe to drop (caller holds _lock).
+
+        Never: the incoming step, delta anchors, live-delta-window
+        bases, ``keep_n``-pinned steps, or steps queued/mid-flight/
+        mid-resume.  Parked steps *are* candidates — last in save
+        order — and are superseded (not silently lost) by the evictor.
+        """
+        keep = self.cfg.keep_n
+        pinned = set(self._saved_steps[-keep:]) if keep is not None else set()
+        window_floor = None
+        if self.cfg.codec == "zstd+delta" and self._last_full is not None:
+            window_floor = self._last_full.step
+        for s in sorted(self._l1_bytes):
+            if s == new_step or s in pinned or s in self._l1_anchors:
+                continue
+            if s in self._pending or s in self._resuming:
+                continue
+            if window_floor is not None and s >= window_floor:
+                continue
+            return s
+        return None
+
+    def _evict_l1(self, step: int) -> None:
+        """Drop one step's L1 blobs (+ replicas + local manifest) for
+        the byte budget.  A parked step loses its only path to the PFS
+        with its L1, so it is superseded first — visible in
+        ``superseded_steps``, skipped by the drain — never silently
+        unfinishable."""
+        with self._lock:
+            parked = step in self._parked
+        if parked:
+            try:
+                man = self._gc_manifest_any(step)
+                man.status = "superseded"
+                self._write_manifest_pfs(man)
+            except Exception:
+                log.exception(
+                    "failed to mark evicted parked step %d superseded", step
+                )
+            with self._lock:
+                self._parked.pop(step, None)
+            self._note_superseded(step, "parked")
+        self.local.gc_step(step)
+        mp = self.root / "local" / "manifests" / f"step_{step:08d}.json"
+        if mp.exists():
+            mp.unlink()
+        with self._lock:
+            self._l1_bytes.pop(step, None)
+            self._l1_anchors.discard(step)
+            self._evicted.append(step)
+            self._man_cache.pop(str(mp), None)
+        log.info("L1 budget: evicted step %d%s", step,
+                 " (parked; superseded)" if parked else "")
 
     def _do_flush(self, job: _FlushJob) -> FlushResult:
         enc, plan = job.enc, job.plan
@@ -673,6 +1143,14 @@ class CheckpointManager:
                 self._write_manifest_pfs(man)
                 self._notify_flush_done(man.step)
                 journal.unlink()
+            except CircuitOpenError:
+                # the PFS circuit (re)opened mid-resume: not a dead
+                # step — it stays flush_partial/journaled/parked and a
+                # later drain retries it once the circuit closes
+                log.warning(
+                    "resume of step %d deferred: PFS circuit open", man.step
+                )
+                continue
             except Exception as e:  # one dead step must not block the rest
                 log.exception("resume of step %d failed", man.step)
                 with self._lock:
@@ -1003,6 +1481,95 @@ class CheckpointManager:
         sequential decode."""
         return self._local_pool() if self.cfg.parallel_local else None
 
+    def _hedge_policy(
+        self, man: Manifest, step: int
+    ) -> Optional[HedgePolicy]:
+        """Alternate-source read policy for one PFS plan (or ``None``
+        when ``hedged_reads`` is off / the manifest has no placement).
+
+        ``alt_read(file_id, file_offset, size)`` inverts the manifest's
+        placement back to (rank, blob offset) and serves the extent
+        from the surviving L1/partner copy via :meth:`_local_slice` —
+        the L1 → partner → PFS preference order the restore ladder
+        already encodes.  It returns ``None`` (hedge declines) when no
+        local copy survives: hedging may only ever help the tail.
+        """
+        if not self.cfg.hedged_reads or man.placement is None:
+            return None
+        pl = man.placement
+        order = np.argsort(np.asarray(pl.file_offset), kind="stable")
+        fids = np.asarray(pl.file_id)[order]
+        f_off = np.asarray(pl.file_offset)[order]
+        s_off = np.asarray(pl.src_offset)[order]
+        f_sz = np.asarray(pl.size)[order]
+        f_rk = np.asarray(pl.rank)[order]
+        by_file: Dict[int, Tuple[np.ndarray, ...]] = {}
+        for f in np.unique(fids).tolist():
+            m = fids == f
+            by_file[int(f)] = (f_off[m], s_off[m], f_sz[m], f_rk[m])
+
+        def alt_read(fid: int, foff: int, size: int) -> Optional[bytes]:
+            ent = by_file.get(int(fid))
+            if ent is None:
+                return None
+            offs, srcs, szs, rks = ent
+            parts: List[bytes] = []
+            cur, remaining = int(foff), int(size)
+            try:
+                while remaining > 0:
+                    i = int(np.searchsorted(offs, cur, side="right")) - 1
+                    if i < 0 or cur >= int(offs[i]) + int(szs[i]):
+                        return None  # hole: not covered by this placement
+                    take = min(remaining, int(offs[i]) + int(szs[i]) - cur)
+                    parts.append(self._local_slice(
+                        man, step, int(rks[i]),
+                        int(srcs[i]) + cur - int(offs[i]), take,
+                    ))
+                    cur += take
+                    remaining -= take
+            except OSError:
+                return None  # no surviving L1/partner copy: decline
+            return b"".join(parts)
+
+        return HedgePolicy(
+            alt_read=alt_read,
+            quantile=self.cfg.hedge_quantile,
+            min_delay_s=self.cfg.hedge_min_delay,
+        )
+
+    def _reader_weights(self) -> Optional[np.ndarray]:
+        """Health-derived per-reader byte weights for
+        :func:`~repro.core.plan.assign_readers` — straggler demotion.
+
+        A reader whose observed median pread latency exceeds twice the
+        cross-reader median gets its byte share scaled down by the
+        slowdown ratio (floored at 1/8 so no reader is starved and its
+        recovery stays observable).  ``None`` — the exact unweighted
+        assignment — until at least two readers have latency history.
+        """
+        sh = self.storage_health
+        if sh is None or not self.cfg.hedged_reads:
+            return None
+        n = self.cluster.n_nodes
+        if n < 2:
+            return None
+        meds = [sh.latency_quantile(f"reader:n{k}", 0.5) for k in range(n)]
+        known = sorted(m for m in meds if m > 0)
+        if len(known) < 2:
+            return None
+        # lower middle on even counts: with two readers the straggler
+        # must compare against the healthy one, not against itself
+        global_med = known[(len(known) - 1) // 2]
+        if global_med <= 0:
+            return None
+        w = np.ones(n, np.float64)
+        for k, m in enumerate(meds):
+            if m > 2.0 * global_med:
+                w[k] = max(0.125, global_med / m)
+        if np.allclose(w, 1.0):
+            return None
+        return w
+
     def _read_blobs_pfs(
         self, man: Manifest, step: int, ranks: Optional[List[int]] = None,
         *, record: bool = True, verify: bool = False,
@@ -1027,7 +1594,9 @@ class CheckpointManager:
         layout = man.file_layout()
         offsets = man.stored_offsets()
         sizes = np.asarray([r.stored_size for r in man.ranks], np.int64)
-        readers = assign_readers(sizes, self.cluster.n_nodes)
+        readers = assign_readers(
+            sizes, self.cluster.n_nodes, weights=self._reader_weights()
+        )
         sel = (
             np.arange(man.world_size, dtype=np.int64)
             if ranks is None
@@ -1044,7 +1613,7 @@ class CheckpointManager:
                     bad.append(int(sel[i]))  # list.append is atomic
 
         bufs, res = self.executor.execute_read_plan(
-            rp, step, on_request=on_request
+            rp, step, on_request=on_request, hedge=self._hedge_policy(man, step)
         )
         if record:  # the scrub passes False so restore telemetry survives
             self.last_read_result = res
@@ -1290,9 +1859,13 @@ class CheckpointManager:
         if pfs:
             offs = [a for a, _ in intervals]
             szs = [b - a for a, b in intervals]
-            readers = assign_readers(szs, self.cluster.n_nodes)
+            readers = assign_readers(
+                szs, self.cluster.n_nodes, weights=self._reader_weights()
+            )
             rp = build_read_plan(man.file_layout(), offs, szs, readers)
-            bufs, res = self.executor.execute_read_plan(rp, step)
+            bufs, res = self.executor.execute_read_plan(
+                rp, step, hedge=self._hedge_policy(man, step)
+            )
             self.last_read_result = res
             return bufs
         out: List[Buffer] = []
@@ -1353,9 +1926,13 @@ class CheckpointManager:
             )
             g_len = table.stored_len[stored]
             req_start, req_size = merge_intervals(g_off, g_len)
-            readers = assign_readers(req_size, self.cluster.n_nodes)
+            readers = assign_readers(
+                req_size, self.cluster.n_nodes, weights=self._reader_weights()
+            )
             rp = build_read_plan(man.file_layout(), req_start, req_size, readers)
-            bufs, res = self.executor.execute_read_plan(rp, step)
+            bufs, res = self.executor.execute_read_plan(
+                rp, step, hedge=self._hedge_policy(man, step)
+            )
             self.last_read_result = res
             views = [memoryview(b) for b in bufs]
             req_of = np.searchsorted(req_start, g_off, side="right") - 1
@@ -1658,7 +2235,10 @@ class CheckpointManager:
         # steps still queued/mid-flight, are left alone (they may still
         # be flushing or awaiting resume).
         with self._lock:
-            pending = set(self._pending) | set(self._resuming)
+            # parked steps are shielded like mid-resume ones: their
+            # journaled flush_partial state is what the post-outage
+            # drain finishes — only supersession/eviction may drop it
+            pending = set(self._pending) | set(self._resuming) | set(self._parked)
         max_kept = max(kept)
         known = set(pfs_steps)
         for d in self.pfs_dir.glob("step_*"):
@@ -1687,6 +2267,8 @@ class CheckpointManager:
             with self._lock:
                 self._man_cache.pop(str(sdir / "manifest.json"), None)
                 self._man_cache.pop(str(mp), None)
+                self._l1_bytes.pop(s, None)
+                self._l1_anchors.discard(s)
 
     # ------------------------------------------------------------- manifests
 

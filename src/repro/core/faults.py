@@ -45,7 +45,26 @@ Fault kinds
                    (:meth:`~repro.core.storage.LocalStore.drop_node`)
                    — subsequent source reads fall back to the partner
                    replica or fail the flush.
+``outage``         the whole domain fails (``OSError(EIO)`` on every
+                   op, both reads and writes) from attempt ``index``
+                   until the window closes — ``duration`` seconds of
+                   wall clock, or ``count`` ops when ``duration`` is 0,
+                   or an explicit :meth:`FaultPlan.heal`.  The signal
+                   the PFS circuit breaker exists to absorb.
+``brownout``       sustained high latency: every op in the domain
+                   sleeps ``delay`` seconds for the same window shape
+                   as ``outage`` — slow, not failing.
+``straggler``      node ``node`` is slow for the *whole armed phase*:
+                   every op that reports that node sleeps ``delay``
+                   seconds — exercises hedged reads and reader
+                   demotion, not retries.
 =================  ======================================================
+
+``outage``/``brownout``/``straggler`` are *windowed* kinds: they are
+listed in :data:`FAULT_KINDS_V2` but deliberately **not** in the
+:data:`FAULT_KINDS` default of :meth:`FaultPlan.generate`, so existing
+seeded chaos schedules (``benchmarks/chaos.py``) are byte-identical to
+before.
 
 Phases
 ------
@@ -73,6 +92,10 @@ FAULT_KINDS = (
     "stall",
     "node_crash",
 )
+#: windowed availability kinds (PR 8) — valid in specs, excluded from
+#: the ``generate`` default so old seeds replay identically
+WINDOW_KINDS = ("outage", "brownout", "straggler")
+FAULT_KINDS_V2 = FAULT_KINDS + WINDOW_KINDS
 DOMAINS = ("l1", "partner", "pfs")
 PHASES = ("save", "verify")
 
@@ -94,11 +117,12 @@ class FaultSpec:
     phase: str = "save"
     frac: float = 0.5  # fraction actually written by a torn write
     bit: int = 0  # bit position flipped by bit_flip (mod payload bits)
-    delay: float = 0.02  # stall seconds
-    node: int = 0  # node dropped by node_crash
+    delay: float = 0.02  # stall / brownout / straggler seconds per op
+    node: int = 0  # node dropped by node_crash, or slowed by straggler
+    duration: float = 0.0  # outage/brownout wall-clock window (0 -> count ops)
 
     def __post_init__(self) -> None:
-        if self.kind not in FAULT_KINDS:
+        if self.kind not in FAULT_KINDS_V2:
             raise ValueError(f"unknown fault kind: {self.kind!r}")
         if self.domain not in DOMAINS:
             raise ValueError(f"unknown fault domain: {self.domain!r}")
@@ -143,6 +167,10 @@ class FaultPlan:
         self._phase = "save"
         self._local = None  # bound LocalStore (node_crash target)
         self._enabled = True
+        # domain -> (spec, deadline_monotonic | None, ops_left | None)
+        self._windows: dict = {}
+        self._straggler_fired: set = set()
+        self.window_hits: dict = {}  # domain -> ops hit while a window was active
         self.fired: List[Tuple[str, str, str, int]] = []
 
     # ---- lifecycle --------------------------------------------------------
@@ -161,11 +189,31 @@ class FaultPlan:
             self._enabled = True
             self._counters.clear()
             self._armed.clear()
+            self._windows.clear()
+            self._straggler_fired.clear()
 
     def disarm(self) -> None:
         """Stop injecting entirely (schedule exhausted / out of window)."""
         with self._lock:
             self._enabled = False
+            self._windows.clear()
+
+    def heal(self, domain: Optional[str] = None) -> None:
+        """Close active outage/brownout windows (all domains, or one).
+
+        Lets a harness end an op-count or long wall-clock window at an
+        exact point instead of waiting out the clock.
+        """
+        with self._lock:
+            if domain is None:
+                self._windows.clear()
+            else:
+                self._windows.pop(domain, None)
+
+    def outage_active(self, domain: str) -> bool:
+        """True while an ``outage``/``brownout`` window covers ``domain``."""
+        with self._lock:
+            return self._window_check(domain) is not None
 
     @property
     def phase(self) -> str:
@@ -176,7 +224,28 @@ class FaultPlan:
 
     # ---- injection surface -----------------------------------------------
 
-    def on_op(self, domain: str, op: str, what: str = "") -> Optional[FaultSpec]:
+    def _window_check(self, domain: str, consume: bool = False):
+        """Return the spec of an active outage/brownout window covering
+        ``domain`` (or ``None``), expiring stale windows.  Lock held by
+        the caller; ``consume`` burns one op of an op-count window."""
+        w = self._windows.get(domain)
+        if w is None:
+            return None
+        spec, deadline, ops_left = w
+        if deadline is not None and time.monotonic() >= deadline:
+            del self._windows[domain]
+            return None
+        if ops_left is not None:
+            if ops_left <= 0:
+                del self._windows[domain]
+                return None
+            if consume:
+                self._windows[domain] = (spec, deadline, ops_left - 1)
+        return spec
+
+    def on_op(
+        self, domain: str, op: str, what: str = "", node: Optional[int] = None
+    ) -> Optional[FaultSpec]:
         """Account one attempt of ``(domain, op)`` and inject its fault.
 
         Raises for ``transient_eio``/``enospc``/``torn-write-less``
@@ -184,34 +253,88 @@ class FaultPlan:
         ``node_crash``; returns the spec for the data-transforming
         kinds (``bit_flip``, ``torn_write``) so the write site can
         apply them, else ``None``.
+
+        ``node`` identifies the L1/partner node or the PFS reader the
+        op runs on — ``straggler`` specs match it; windowed
+        ``outage``/``brownout`` specs cover every op of the domain
+        regardless of node once activated at their stream ``index``.
         """
+        sleep_s = 0.0
         with self._lock:
             if not self._enabled:
                 return None
             key = (domain, op)
             idx = self._counters.get(key, 0)
             self._counters[key] = idx + 1
-            spec = self._armed.get(key)
-            if spec is None:
-                for s in self.specs:
-                    if (
-                        s.phase == self._phase
-                        and s.domain == domain
-                        and s.op == op
-                        and s.index == idx
-                        and self._remaining[id(s)] > 0
-                    ):
-                        spec = s
-                        break
+            # stragglers are ambient: every matching-node op of the
+            # armed phase is slowed, no index bookkeeping
+            for s in self.specs:
+                if (
+                    s.kind == "straggler"
+                    and s.phase == self._phase
+                    and s.domain == domain
+                    and node is not None
+                    and s.node == node
+                ):
+                    sleep_s += max(0.0, s.delay)
+                    fkey = (id(s), self._phase)
+                    if fkey not in self._straggler_fired:
+                        self._straggler_fired.add(fkey)
+                        self.fired.append((s.kind, domain, op, idx))
+            wspec = self._window_check(domain, consume=True)
+            if wspec is not None:
+                self.window_hits[domain] = self.window_hits.get(domain, 0) + 1
+            spec = None
+            if wspec is None:
+                spec = self._armed.get(key)
                 if spec is None:
-                    return None
-            self._remaining[id(spec)] -= 1
-            if spec.kind == "transient_eio" and self._remaining[id(spec)] > 0:
-                self._armed[key] = spec  # keep failing the next attempts
-            else:
-                self._armed.pop(key, None)
-            self.fired.append((spec.kind, domain, op, idx))
+                    for s in self.specs:
+                        if (
+                            s.phase == self._phase
+                            and s.domain == domain
+                            and s.op == op
+                            and s.index == idx
+                            and self._remaining[id(s)] > 0
+                            and s.kind != "straggler"
+                        ):
+                            spec = s
+                            break
+                if spec is not None:
+                    self._remaining[id(spec)] -= 1
+                    if spec.kind == "transient_eio" and self._remaining[id(spec)] > 0:
+                        self._armed[key] = spec  # keep failing the next attempts
+                    else:
+                        self._armed.pop(key, None)
+                    self.fired.append((spec.kind, domain, op, idx))
+                    if spec.kind in ("outage", "brownout"):
+                        deadline = (
+                            time.monotonic() + spec.duration
+                            if spec.duration > 0
+                            else None
+                        )
+                        ops_left = (
+                            None
+                            if spec.duration > 0
+                            else max(0, int(spec.count) - 1)
+                        )
+                        self._windows[domain] = (spec, deadline, ops_left)
+                        self.window_hits[domain] = (
+                            self.window_hits.get(domain, 0) + 1
+                        )
+                        wspec = spec
+                        spec = None  # handled as a window below
             local = self._local
+        if sleep_s > 0.0:
+            time.sleep(sleep_s)
+        if wspec is not None:
+            if wspec.kind == "outage":
+                raise OSError(
+                    errno.EIO, f"injected outage: {domain}/{op}[{idx}] {what}"
+                )
+            time.sleep(max(0.0, wspec.delay))  # brownout: slow, not failing
+            return None
+        if spec is None:
+            return None
         if spec.kind == "transient_eio":
             raise OSError(
                 errno.EIO, f"injected transient EIO: {domain}/{op}[{idx}] {what}"
@@ -307,6 +430,7 @@ def inject_write(
     what: str,
     data,
     write_fn: Callable,
+    node: Optional[int] = None,
 ) -> None:
     """Run one write through the injection surface.
 
@@ -315,7 +439,9 @@ def inject_write(
     ``torn_write`` writes a prefix and then raises ``EIO`` (the retry
     layer rewrites the full extent — destinations are idempotent).
     """
-    spec = faults.on_op(domain, "write", what) if faults is not None else None
+    spec = (
+        faults.on_op(domain, "write", what, node=node) if faults is not None else None
+    )
     if spec is None:
         write_fn(data)
         return

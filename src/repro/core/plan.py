@@ -1069,12 +1069,25 @@ def merge_intervals(
     return starts, ends - starts
 
 
-def assign_readers(stored_sizes: Sequence[int], n_readers: int) -> np.ndarray:
+def assign_readers(
+    stored_sizes: Sequence[int],
+    n_readers: int,
+    *,
+    weights: Optional[Sequence[float]] = None,
+) -> np.ndarray:
     """Balanced contiguous assignment of producer ranks to consumer nodes.
 
     Rank r goes to the reader whose byte share contains the midpoint of
     r's blob, so each of the ``n_readers`` consumers pulls ~equal bytes
-    even when blob sizes are skewed.  Pure array program."""
+    even when blob sizes are skewed.  Pure array program.
+
+    ``weights`` (optional, one per reader, positive) skews the byte
+    shares: a reader with weight 0.5 receives half the bytes of a
+    weight-1.0 peer.  The health registry's straggler demotion feeds
+    observed per-reader latency ratios through here so a slow node
+    serves fewer extents instead of gating the whole restore.  With
+    ``weights=None`` (or all-equal weights) the assignment is exactly
+    the unweighted midpoint rule above — byte-identical plans."""
     sizes = _i64(stored_sizes)
     n_readers = max(1, int(n_readers))
     offsets = stored_space_offsets(sizes)
@@ -1082,6 +1095,19 @@ def assign_readers(stored_sizes: Sequence[int], n_readers: int) -> np.ndarray:
     if total == 0:
         return np.zeros(len(sizes), np.int64)
     mid = offsets[:-1] + sizes // 2
+    if weights is not None:
+        w = np.asarray(weights, np.float64)
+        if len(w) != n_readers:
+            raise PlanError("assign_readers: one weight per reader required")
+        if (w <= 0).any():
+            raise PlanError("assign_readers: weights must be positive")
+        if not np.allclose(w, w[0]):
+            # reader k covers stored space (cum[k-1], cum[k]] of the
+            # weight-proportional partition of [0, total]
+            bounds = np.cumsum(w) * (total / float(w.sum()))
+            return np.minimum(
+                np.searchsorted(bounds, mid, side="right"), n_readers - 1
+            ).astype(np.int64)
     return np.minimum(mid * n_readers // total, n_readers - 1)
 
 

@@ -71,7 +71,9 @@ import random
 import shutil
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor, as_completed
+from concurrent.futures import wait as futures_wait
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -197,6 +199,266 @@ def wrap_storage_error(level: str, step: int, rank: int, path, cause) -> Storage
     return cls(level, step, rank, path, cause)
 
 
+class CircuitOpenError(OSError):
+    """Fail-fast: the storage domain's circuit breaker is open.
+
+    Raised *before* the raw op is attempted, so an unavailable domain
+    costs microseconds instead of a full retry schedule.  Carries
+    ``errno.EHOSTDOWN`` — deliberately **not** in
+    :data:`TRANSIENT_ERRNOS`, so the retry layer re-raises it
+    immediately (no backoff, no giveup accounting): the breaker, not
+    the retry budget, owns recovery timing.
+    """
+
+    def __init__(self, domain: str, retry_in: float = 0.0):
+        super().__init__(
+            errno.EHOSTDOWN,
+            f"storage domain {domain!r} circuit open"
+            + (f" (probe in {retry_in:.2f}s)" if retry_in > 0 else ""),
+        )
+        self.domain = domain
+        self.retry_in = float(retry_in)
+
+
+@dataclass
+class DomainHealth:
+    """Point-in-time health snapshot of one storage domain."""
+
+    domain: str
+    state: str  # "closed" | "open" | "half_open"
+    ops: int
+    errors: int
+    giveups: int
+    error_rate: float  # over the sliding window
+    p50_latency: float
+    p95_latency: float
+    opened_at: Optional[float] = None
+    probes_ok: int = 0
+
+
+class _DomainStats:
+    __slots__ = (
+        "outcomes", "lats", "ops", "errors", "giveups",
+        "state", "opened_at", "probes_ok", "half_inflight",
+    )
+
+    def __init__(self, window: int):
+        self.outcomes: deque = deque(maxlen=window)  # True=ok per attempt
+        self.lats: deque = deque(maxlen=window)  # success latencies (s)
+        self.ops = 0
+        self.errors = 0
+        self.giveups = 0
+        self.state = "closed"
+        self.opened_at: Optional[float] = None
+        self.probes_ok = 0
+        self.half_inflight = 0
+
+
+class StorageHealth:
+    """Per-domain sliding-window health registry + circuit breaker.
+
+    Domains are free-form strings — the runtime uses ``"pfs"``,
+    per-node ``"l1:n{j}"``/``"partner:n{j}"``, and per-reader
+    ``"reader:n{k}"`` (latency-only, for straggler demotion).  Outcomes
+    are fed per *attempt* by :meth:`RetryPolicy.run` (``domain=`` at
+    the call sites), so the registry sees exactly what the retry layer
+    sees: every transient failure, every giveup, every success with its
+    latency.
+
+    Circuit states (per domain):
+
+    * **closed** — healthy.  Trips to *open* when a retry budget gives
+      up (``open_on_giveup``) or when the sliding-window error rate
+      reaches ``error_threshold`` over ≥ ``min_ops`` attempts — with
+      concurrent writers each failed attempt lands here *between*
+      backoff sleeps, so a real outage opens the circuit before any
+      single op can burn its whole budget.
+    * **open** — :meth:`check` raises :class:`CircuitOpenError`
+      immediately.  After ``cooldown`` seconds the next ``check``
+      admits up to ``probe_parallel`` ops as half-open probes.
+    * **half_open** — probe ops flow, everything else still fails
+      fast.  ``probe_successes`` consecutive successes close the
+      circuit (window reset); one failure re-opens it with a fresh
+      cooldown.
+
+    ``clock`` is injectable so circuit-transition tests are pure
+    functions of their fault schedule, not of wall-clock scheduling.
+    """
+
+    def __init__(
+        self,
+        *,
+        window: int = 64,
+        min_ops: int = 8,
+        error_threshold: float = 0.5,
+        open_on_giveup: bool = True,
+        cooldown: float = 2.0,
+        probe_successes: int = 2,
+        probe_parallel: int = 2,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.window = max(4, int(window))
+        self.min_ops = max(1, int(min_ops))
+        self.error_threshold = float(error_threshold)
+        self.open_on_giveup = bool(open_on_giveup)
+        self.cooldown = float(cooldown)
+        self.probe_successes = max(1, int(probe_successes))
+        self.probe_parallel = max(1, int(probe_parallel))
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._domains: Dict[str, _DomainStats] = {}
+        self.trips = 0  # closed->open transitions (telemetry)
+
+    def _dom(self, domain: str) -> _DomainStats:
+        d = self._domains.get(domain)
+        if d is None:
+            d = self._domains[domain] = _DomainStats(self.window)
+        return d
+
+    def _trip(self, d: _DomainStats) -> None:
+        d.state = "open"
+        d.opened_at = self.clock()
+        d.probes_ok = 0
+        d.half_inflight = 0
+        d.outcomes.clear()
+        self.trips += 1
+
+    def record(
+        self,
+        domain: str,
+        ok: bool,
+        latency: float = 0.0,
+        *,
+        giveup: bool = False,
+    ) -> None:
+        """Feed one attempt outcome (the retry layer calls this)."""
+        with self._lock:
+            d = self._dom(domain)
+            d.ops += 1
+            d.outcomes.append(bool(ok))
+            if ok and latency > 0.0:
+                d.lats.append(float(latency))
+            if d.state == "half_open":
+                d.half_inflight = max(0, d.half_inflight - 1)
+                if ok:
+                    d.probes_ok += 1
+                    if d.probes_ok >= self.probe_successes:
+                        d.state = "closed"
+                        d.opened_at = None
+                        d.outcomes.clear()
+                else:
+                    d.errors += 1
+                    if giveup:
+                        d.giveups += 1
+                    self._trip(d)  # failed probe: fresh cooldown
+                return
+            if ok:
+                return
+            d.errors += 1
+            if giveup:
+                d.giveups += 1
+            if d.state != "closed":
+                return
+            if giveup and self.open_on_giveup:
+                self._trip(d)
+                return
+            n = len(d.outcomes)
+            bad = n - sum(d.outcomes)
+            if n >= self.min_ops and bad / n >= self.error_threshold:
+                self._trip(d)
+
+    def note_latency(self, domain: str, latency: float) -> None:
+        """Latency-only sample (read-side reader stats): no outcome,
+        no circuit effect — feeds quantiles for hedging/demotion."""
+        with self._lock:
+            d = self._dom(domain)
+            d.ops += 1
+            d.lats.append(float(latency))
+
+    def check(self, domain: str) -> None:
+        """Gate one op: no-op when closed, admits probes when
+        half-open, raises :class:`CircuitOpenError` otherwise."""
+        with self._lock:
+            d = self._domains.get(domain)
+            if d is None or d.state == "closed":
+                return
+            now = self.clock()
+            if d.state == "open":
+                waited = now - (d.opened_at or now)
+                if waited < self.cooldown:
+                    raise CircuitOpenError(domain, self.cooldown - waited)
+                d.state = "half_open"
+                d.probes_ok = 0
+                d.half_inflight = 0
+            if d.half_inflight < self.probe_parallel:
+                d.half_inflight += 1  # admitted as a half-open probe
+                return
+            raise CircuitOpenError(domain)
+
+    def allow(self, domain: str) -> bool:
+        """Non-raising :meth:`check` (restore-ladder gating)."""
+        try:
+            self.check(domain)
+            return True
+        except CircuitOpenError:
+            return False
+
+    def state(self, domain: str) -> str:
+        with self._lock:
+            d = self._domains.get(domain)
+            if d is None:
+                return "closed"
+            if (
+                d.state == "open"
+                and d.opened_at is not None
+                and self.clock() - d.opened_at >= self.cooldown
+            ):
+                return "half_open"  # a check() would admit probes now
+            return d.state
+
+    def probe_due(self, domain: str) -> bool:
+        """True when an explicit probe op would be admitted — the
+        engine's degraded tick drives :meth:`RealExecutor.probe_pfs`
+        off this, so a fully parked scheduler still recovers."""
+        return self.state(domain) in ("half_open",)
+
+    def latency_quantile(
+        self, domain: str, q: float, default: float = 0.0
+    ) -> float:
+        with self._lock:
+            d = self._domains.get(domain)
+            if d is None or not d.lats:
+                return default
+            arr = sorted(d.lats)
+            i = min(len(arr) - 1, max(0, int(q * len(arr))))
+            return float(arr[i])
+
+    def snapshot(self) -> Dict[str, DomainHealth]:
+        with self._lock:
+            out: Dict[str, DomainHealth] = {}
+            for name, d in self._domains.items():
+                n = len(d.outcomes)
+                bad = n - sum(d.outcomes)
+                lats = sorted(d.lats)
+                out[name] = DomainHealth(
+                    domain=name,
+                    state=d.state,
+                    ops=d.ops,
+                    errors=d.errors,
+                    giveups=d.giveups,
+                    error_rate=(bad / n) if n else 0.0,
+                    p50_latency=lats[len(lats) // 2] if lats else 0.0,
+                    p95_latency=(
+                        lats[min(len(lats) - 1, int(0.95 * len(lats)))]
+                        if lats
+                        else 0.0
+                    ),
+                    opened_at=d.opened_at,
+                    probes_ok=d.probes_ok,
+                )
+            return out
+
+
 @dataclass
 class RetryPolicy:
     """Bounded retry with errno classification for raw storage ops.
@@ -214,6 +476,15 @@ class RetryPolicy:
     callers; per-call deltas go to the optional ``stats`` dict (keys
     ``"retries"``/``"giveups"``, updated under the policy lock) which
     the executor uses to fill :class:`FlushResult`/:class:`ReadResult`.
+
+    When a :class:`StorageHealth` registry is attached (``health``) and
+    the caller names its ``domain``, every attempt is gated by
+    ``health.check(domain)`` — **before each try, including re-tries
+    mid-backoff** — and every outcome is recorded.  That per-attempt
+    gate is what makes an outage cheap: once concurrent failures trip
+    the domain's breaker, every op still inside its retry schedule
+    fails fast with :class:`CircuitOpenError` on its next attempt
+    instead of sleeping out the budget and giving up.
     """
 
     attempts: int = 5
@@ -223,6 +494,7 @@ class RetryPolicy:
     jitter: float = 0.5
     seed: Optional[int] = None
     classify: Optional[Callable[[BaseException], str]] = None
+    health: Optional[StorageHealth] = None
 
     def __post_init__(self) -> None:
         self._rng = random.Random(self.seed)
@@ -242,23 +514,44 @@ class RetryPolicy:
         *,
         cancel: Optional[CancelToken] = None,
         stats: Optional[dict] = None,
+        domain: Optional[str] = None,
     ):
+        health = self.health if domain is not None else None
         t0 = time.monotonic()
         attempt = 0
         while True:
+            if health is not None:
+                health.check(domain)  # fail fast while the circuit is open
+            t_att = time.monotonic()
             try:
-                return fn()
+                r = fn()
             except FlushCancelled:
                 raise  # a scheduling outcome, never an I/O failure
+            except CircuitOpenError:
+                # a *nested* domain's breaker (our own check already
+                # passed): propagate unrecorded — it is not an outcome
+                # of this domain, and never worth a backoff
+                raise
             except OSError as e:
                 attempt += 1
                 kind = (self.classify or classify_error)(e)
                 if kind != "transient":
+                    # ENOENT is a *correct answer* from a healthy medium
+                    # — the fallback ladder probes for missing blobs all
+                    # the time — so it must never charge the circuit
+                    if health is not None and not isinstance(
+                        e, FileNotFoundError
+                    ):
+                        health.record(domain, False)
                     raise
                 elapsed = time.monotonic() - t0
                 if attempt >= max(1, self.attempts) or elapsed >= self.deadline:
                     self._bump("giveups", stats)
+                    if health is not None:
+                        health.record(domain, False, giveup=True)
                     raise
+                if health is not None:
+                    health.record(domain, False)
                 delay = min(self.max_delay, self.base_delay * (2 ** (attempt - 1)))
                 with self._lock:
                     delay *= 1.0 + self.jitter * self._rng.random()
@@ -269,6 +562,10 @@ class RetryPolicy:
                 elif delay > 0:
                     time.sleep(delay)
                 self._bump("retries", stats)
+            else:
+                if health is not None:
+                    health.record(domain, True, time.monotonic() - t_att)
+                return r
 
 
 class TokenBucket:
@@ -309,7 +606,11 @@ class TokenBucket:
                     self._tokens -= n  # may go negative: pay-ahead debt
                     self.wait_total += waited
                     return waited
-                delay = min(0.25, (1 - self._tokens) / self.rate)
+                # the exact refill time is computable from the debt:
+                # sleep it once instead of polling 0.25 s slices (the
+                # loop re-checks only because a concurrent acquirer may
+                # have deepened the debt meanwhile)
+                delay = (1 - self._tokens) / self.rate
             if cancel is not None:
                 if cancel.wait(delay):
                     raise FlushCancelled("cancelled while throttled")
@@ -543,11 +844,12 @@ class LocalStore:
 
         def attempt() -> None:
             inject_write(
-                self.faults, domain, f"step{step}/rank{rank}", data, _write
+                self.faults, domain, f"step{step}/rank{rank}", data, _write,
+                node=node,
             )
 
         if self.retry is not None:
-            self.retry.run(attempt)
+            self.retry.run(attempt, domain=f"{domain}:n{node}")
         else:
             attempt()
 
@@ -582,12 +884,12 @@ class LocalStore:
 
         def attempt() -> bytes:
             if self.faults is not None:
-                self.faults.on_op(domain, "read", str(p))
+                self.faults.on_op(domain, "read", str(p), node=node)
             return p.read_bytes()
 
         try:
             if self.retry is not None:
-                return self.retry.run(attempt)
+                return self.retry.run(attempt, domain=f"{domain}:n{node}")
             return attempt()
         except OSError as e:
             raise wrap_storage_error(domain, step, rank, p, e) from e
@@ -601,14 +903,14 @@ class LocalStore:
 
         def attempt() -> bytes:
             if self.faults is not None:
-                self.faults.on_op(domain, "read", str(p))
+                self.faults.on_op(domain, "read", str(p), node=node)
             with open(p, "rb") as f:
                 f.seek(offset)
                 return f.read(size)
 
         try:
             if self.retry is not None:
-                return self.retry.run(attempt)
+                return self.retry.run(attempt, domain=f"{domain}:n{node}")
             return attempt()
         except OSError as e:
             raise wrap_storage_error(domain, step, rank, p, e) from e
@@ -665,6 +967,34 @@ class ReadResult:
     n_readers: int
     io_retries: int = 0
     io_giveups: int = 0
+    # tail-robustness telemetry: hedge requests issued past the latency
+    # deadline, and how many beat their primary to the buffer.
+    hedges_issued: int = 0
+    hedge_wins: int = 0
+
+
+@dataclass
+class HedgePolicy:
+    """Deadline-aware read hedging for :meth:`RealExecutor.execute_read_plan`.
+
+    When a pread has been in flight longer than the hedge deadline —
+    the ``quantile`` of latencies observed so far in this plan (seeded
+    from the health registry's PFS history when attached), floored at
+    ``min_delay_s`` — the extent is re-issued through ``alt_read`` (the
+    engine maps it back to the L1/partner copy, ordered by health).
+    First success wins and claims the destination; the loser's bytes
+    are discarded (a blocking ``pread`` cannot be interrupted, so
+    "cancellation" is claim-or-discard at the buffer boundary).
+    Hedge *failures* are silent: hedging may only ever help the tail,
+    never fail a plan the primary path would have completed.
+    """
+
+    alt_read: Callable[[int, int, int], Optional[bytes]]
+    quantile: float = 0.95
+    min_delay_s: float = 0.02
+    poll_s: float = 0.005
+    max_hedges: int = 16
+    min_samples: int = 4  # latency samples needed before quantile kicks in
 
 
 class RealExecutor:
@@ -896,7 +1226,9 @@ class RealExecutor:
                     )
 
                 if self.retry is not None:
-                    self.retry.run(attempt, cancel=cancel, stats=retry_stats)
+                    self.retry.run(
+                        attempt, cancel=cancel, stats=retry_stats, domain="pfs"
+                    )
                 else:
                     attempt()
                 if journal is not None:
@@ -1068,6 +1400,7 @@ class RealExecutor:
     def execute_read_plan(
         self, rp: ReadPlan, step: int,
         *, on_request: Optional[Callable[[int, bytearray], None]] = None,
+        hedge: Optional[HedgePolicy] = None,
     ) -> Tuple[List[bytearray], ReadResult]:
         """Run a :class:`ReadPlan` as ranged ``pread``s via the thread pool.
 
@@ -1085,6 +1418,12 @@ class RealExecutor:
         running as a serial pass after the plan drains.  Exceptions it
         raises fail the plan like read errors.  Requests needing zero
         reads (zero-size, or none mapped) fire before the preads start.
+
+        ``hedge``, when given, arms deadline-aware tail hedging: a
+        watchdog re-issues any extent whose pread outlives the rolling
+        latency-quantile deadline through ``hedge.alt_read`` — first
+        success claims the destination buffer, the loser is discarded
+        (see :class:`HedgePolicy`).
         """
         t0 = time.perf_counter()
         sdir = self.step_dir(step)
@@ -1103,49 +1442,193 @@ class RealExecutor:
             )
         fds: Dict[int, int] = {}
         lock = threading.Lock()
-        total = {"bytes": 0, "reads": 0}
+        total = {
+            "bytes": 0, "reads": 0, "hedges": 0, "hedge_wins": 0,
+            "claimed": 0,
+        }
         retry_stats = {"retries": 0, "giveups": 0}
-        try:
-            for f in np.unique(r.file_id).tolist():
-                fds[f] = os.open(str(sdir / rp.file_names[f]), os.O_RDONLY)
-
-            rows = list(
-                zip(
-                    r.file_id.tolist(), r.file_offset.tolist(), r.size.tolist(),
-                    r.dst_req.tolist(), r.dst_offset.tolist(),
-                )
+        health = self.retry.health if self.retry is not None else None
+        rows = list(
+            zip(
+                r.file_id.tolist(), r.file_offset.tolist(), r.size.tolist(),
+                r.dst_req.tolist(), r.dst_offset.tolist(), r.reader.tolist(),
             )
+        )
+        # per-row race state (hedging): start time, winner claim, done
+        starts: Dict[int, float] = {}
+        claimed = [False] * len(rows)
+        finished = [False] * len(rows)
+        hedged = [False] * len(rows)
+        lat_samples: List[float] = (
+            [health.latency_quantile("pfs", 0.5)]
+            if health is not None and health.latency_quantile("pfs", 0.5) > 0
+            else []
+        )
+        stop = threading.Event()
+        all_claimed = threading.Event()
+        hedge_threads: List[threading.Thread] = []
 
-            def do_read(row: Tuple[int, int, int, int, int]) -> None:
-                fid, foff, size, req, doff = row
+        def complete(i: int, row, data, *, won_hedge: bool) -> bool:
+            """Claim row ``i`` for this result; the winner fills the
+            destination and fires request completion.  Returns False if
+            the other side already won (loser's bytes discarded)."""
+            fid, foff, size, req, doff, reader = row
+            with lock:
+                if claimed[i]:
+                    finished[i] = True
+                    return False
+                claimed[i] = True
+                finished[i] = True
+            bufs[req][doff : doff + size] = data
+            with lock:
+                total["bytes"] += size
+                total["reads"] += 1
+                if won_hedge:
+                    total["hedge_wins"] += 1
+                total["claimed"] += 1
+                if total["claimed"] == len(rows):
+                    all_claimed.set()  # plan complete: stop waiting on losers
+                remaining[req] -= 1
+                done = on_request is not None and remaining[req] == 0
+            if done:
+                on_request(req, bufs[req])
+            return True
 
-                def attempt() -> bytes:
-                    if self.faults is not None:
-                        self.faults.on_op("pfs", "read", rp.file_names[fid])
-                    return os.pread(fds[fid], size, foff)
+        def do_read(item) -> None:
+            i, row = item
+            fid, foff, size, req, doff, reader = row
+            with lock:
+                if claimed[i]:  # hedge already won while we queued
+                    finished[i] = True
+                    return
+                starts[i] = time.monotonic()
 
+            def attempt() -> bytes:
+                if self.faults is not None:
+                    self.faults.on_op(
+                        "pfs", "read", rp.file_names[fid], node=reader
+                    )
+                return os.pread(fds[fid], size, foff)
+
+            try:
                 data = (
-                    self.retry.run(attempt, stats=retry_stats)
+                    self.retry.run(attempt, stats=retry_stats, domain="pfs")
                     if self.retry is not None
                     else attempt()
                 )
-                if len(data) != size:
-                    raise IOError(
-                        f"short PFS read: {rp.file_names[fid]} "
-                        f"[{foff}:{foff + size})"
-                    )
-                bufs[req][doff : doff + size] = data
+            except OSError:
                 with lock:
-                    total["bytes"] += size
-                    total["reads"] += 1
-                    remaining[req] -= 1
-                    done = on_request is not None and remaining[req] == 0
-                if done:
-                    on_request(req, bufs[req])
+                    finished[i] = True
+                    if claimed[i]:
+                        return  # the hedge already delivered this extent
+                raise
+            dt = time.monotonic() - starts[i]
+            if len(data) != size:
+                with lock:
+                    finished[i] = True
+                raise IOError(
+                    f"short PFS read: {rp.file_names[fid]} "
+                    f"[{foff}:{foff + size})"
+                )
+            if health is not None:
+                health.note_latency(f"reader:n{reader}", dt)
+            with lock:
+                lat_samples.append(dt)
+            complete(i, row, data, won_hedge=False)
 
+        def run_hedge(i: int, row) -> None:
+            fid, foff, size, req, doff, reader = row
+            with lock:
+                if claimed[i]:
+                    return
+            try:
+                data = hedge.alt_read(fid, foff, size)
+            except Exception:
+                return  # hedge may only help, never hurt
+            if data is None or len(data) != size:
+                return
+            complete(i, row, data, won_hedge=True)
+
+        def watchdog() -> None:
+            while not stop.wait(hedge.poll_s):
+                now = time.monotonic()
+                fire: List[int] = []
+                with lock:
+                    if total["hedges"] >= hedge.max_hedges:
+                        return
+                    if len(lat_samples) >= hedge.min_samples:
+                        arr = sorted(lat_samples)
+                        q = arr[min(len(arr) - 1, int(hedge.quantile * len(arr)))]
+                        deadline = max(hedge.min_delay_s, q)
+                    else:
+                        deadline = hedge.min_delay_s
+                    for i, t_start in starts.items():
+                        if (
+                            not finished[i]
+                            and not hedged[i]
+                            and now - t_start > deadline
+                            and total["hedges"] < hedge.max_hedges
+                        ):
+                            hedged[i] = True
+                            total["hedges"] += 1
+                            fire.append(i)
+                for i in fire:
+                    th = threading.Thread(
+                        target=run_hedge, args=(i, rows[i]), daemon=True
+                    )
+                    th.start()
+                    hedge_threads.append(th)
+
+        stragglers: List = []
+        try:
+            for f in np.unique(r.file_id).tolist():
+                fds[f] = os.open(str(sdir / rp.file_names[f]), os.O_RDONLY)
             n_readers = len(np.unique(r.reader))
             workers = min(16, self.io_threads * max(1, n_readers))
-            self._run_rows(rows, do_read, workers)
+            mon: Optional[threading.Thread] = None
+            if hedge is not None:
+                mon = threading.Thread(target=watchdog, daemon=True)
+                mon.start()
+            items = list(enumerate(rows))
+            try:
+                if hedge is None or workers <= 1 or len(items) == 1:
+                    self._run_rows(items, do_read, workers)
+                else:
+                    # claim-aware variant of _run_rows: the plan returns
+                    # as soon as every row is *claimed* (by its primary
+                    # pread or a winning hedge) — a stragglered loser
+                    # keeps running in the background, its bytes are
+                    # discarded at the claim boundary, and the fds stay
+                    # open until it returns (deferred close below).
+                    pool = self.pool(workers)
+                    futs = [pool.submit(do_read, it) for it in items]
+                    first_err: Optional[BaseException] = None
+                    pending = set(futs)
+                    while pending:
+                        done, pending = futures_wait(
+                            pending, timeout=hedge.poll_s
+                        )
+                        for f in done:
+                            try:
+                                f.result()
+                            except BaseException as e:
+                                if first_err is None:
+                                    first_err = e
+                                    for g in futs:
+                                        g.cancel()
+                        if first_err is None and all_claimed.is_set():
+                            stragglers = [
+                                f for f in pending if not f.cancel()
+                            ]
+                            pending = set()
+                    if first_err is not None:
+                        raise first_err
+            finally:
+                stop.set()
+                if mon is not None:
+                    mon.join()
+                for th in hedge_threads:
+                    th.join()
             return bufs, ReadResult(
                 step=step,
                 duration=time.perf_counter() - t0,
@@ -1154,13 +1637,34 @@ class RealExecutor:
                 n_readers=n_readers,
                 io_retries=retry_stats["retries"],
                 io_giveups=retry_stats["giveups"],
+                hedges_issued=total["hedges"],
+                hedge_wins=total["hedge_wins"],
             )
         finally:
-            for fd in fds.values():
-                try:
-                    os.close(fd)
-                except OSError:
-                    pass
+            if stragglers:
+                # the losing preads still hold these fds; closing now
+                # would hand their fd numbers to the next step's files.
+                # A waiter owns the close instead — result() also
+                # swallows the losers' post-claim exceptions.
+                def _close_after(fs=list(stragglers), fdmap=dict(fds)):
+                    for f in fs:
+                        try:
+                            f.result()
+                        except BaseException:
+                            pass
+                    for fd in fdmap.values():
+                        try:
+                            os.close(fd)
+                        except OSError:
+                            pass
+
+                threading.Thread(target=_close_after, daemon=True).start()
+            else:
+                for fd in fds.values():
+                    try:
+                        os.close(fd)
+                    except OSError:
+                        pass
 
     def read_rank_blob(
         self, manifest: Manifest, step: int, rank: int,
@@ -1183,6 +1687,31 @@ class RealExecutor:
         )
         bufs, _ = self.execute_read_plan(rp, step)
         return bytes(bufs[0])
+
+    # ---- health probes -----------------------------------------------------
+
+    def probe_pfs(self, payload: bytes = b"\x00" * 16) -> float:
+        """One **single-attempt** write+readback through the ``pfs``
+        fault surface — the half-open circuit's probe op.
+
+        Deliberately unretried and unthrottled: a probe answers "is the
+        domain back?" and must fail in one op if it is not.  Returns
+        the op latency in seconds; raises the underlying ``OSError``
+        on failure (the caller records the outcome into
+        :class:`StorageHealth`).
+        """
+        self.pfs_dir.mkdir(parents=True, exist_ok=True)
+        path = self.pfs_dir / ".health_probe"
+        t0 = time.monotonic()
+        inject_write(
+            self.faults, "pfs", "health_probe", payload,
+            lambda buf: path.write_bytes(bytes(buf)),
+        )
+        if self.faults is not None:
+            self.faults.on_op("pfs", "read", "health_probe")
+        if path.read_bytes() != bytes(payload):
+            raise IOError("health probe readback mismatch")
+        return time.monotonic() - t0
 
 
 def placement_from_plan(plan: FlushPlan) -> Placement:

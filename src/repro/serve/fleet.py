@@ -13,7 +13,11 @@ replicas decode each chunk once per node.
 The follower watches the PFS for the newest ``flush_done`` step — it
 never adopts a ``flush_partial``, ``superseded``, or ``quarantined``
 manifest, which is exactly the trust rule
-:meth:`~repro.core.engine.CheckpointManager.steps` encodes — and rolls
+:meth:`~repro.core.engine.CheckpointManager.steps` encodes.  While
+the manager reports itself ``degraded`` (PFS circuit open, new steps
+parked on L1) the follower defers adoption entirely: nothing newer
+than what it already serves can have reached ``flush_done``, and the
+post-heal drain will wake it normally.  It rolls
 every server atomically via :meth:`Server.swap_params`.  In-flight
 generates finish on the version they captured; nothing is dropped or
 torn.  When the fleet shares a process with training it also
@@ -225,13 +229,39 @@ class ServeFleet:
         if hasattr(self.manager, "subscribe"):
             self.manager.subscribe(on_flush_done)
 
+        deferred = False  # degraded-mode notice logged once per outage
+
         def loop() -> None:
+            nonlocal deferred
             while not self._stop.is_set():
                 self._wake.wait(self.cfg.poll_interval)
                 self._wake.clear()
                 if self._stop.is_set():
                     return
                 try:
+                    health_fn = getattr(self.manager, "health", None)
+                    if callable(health_fn):
+                        mh = health_fn()
+                        if getattr(mh, "mode", "normal") == "degraded":
+                            # PFS circuit open: every step listed now
+                            # predates the outage, and anything newer is
+                            # parked on L1 — there is nothing new the
+                            # follower can trust until the post-heal
+                            # drain publishes flush_done manifests.
+                            if not deferred:
+                                deferred = True
+                                log.warning(
+                                    "fleet follower: manager degraded "
+                                    "(PFS circuit open); deferring "
+                                    "adoption until the drain completes"
+                                )
+                            continue
+                        if deferred:
+                            deferred = False
+                            log.info(
+                                "fleet follower: manager healthy again; "
+                                "resuming adoption"
+                            )
                     done = self.manager.steps("pfs")
                     if not done:
                         continue
@@ -253,21 +283,42 @@ class ServeFleet:
         )
         self._follower.start()
 
-    def stop(self) -> None:
-        """Stop the follower (idempotent; servers keep serving)."""
+    def stop(self, *, timeout: float = 30.0) -> None:
+        """Stop the follower (idempotent; servers keep serving).
+
+        Raises ``RuntimeError`` if the follower thread is still alive
+        after ``timeout`` seconds — a live thread holding a mid-swap
+        stream must not be silently discarded, because it still shares
+        the manager's read path and chunk cache.  The follower handle
+        is kept so a later ``stop()`` can re-join it; the flush-done
+        subscription is released either way so a wedged follower at
+        least stops receiving wakeups."""
         self._stop.set()
         self._wake.set()
-        if self._follower is not None:
-            self._follower.join(timeout=30)
+        follower = self._follower
+        if follower is not None:
+            follower.join(timeout=timeout)
+        try:
+            if follower is not None and follower.is_alive():
+                log.error(
+                    "fleet follower %r did not stop within %.1fs; "
+                    "a swap is still in flight", follower.name, timeout,
+                )
+                raise RuntimeError(
+                    f"fleet follower did not stop within {timeout:.1f}s"
+                )
             self._follower = None
-        if self._subscribed is not None:
-            if hasattr(self.manager, "unsubscribe"):
-                self.manager.unsubscribe(self._subscribed)
-            self._subscribed = None
+        finally:
+            if self._subscribed is not None:
+                if hasattr(self.manager, "unsubscribe"):
+                    self.manager.unsubscribe(self._subscribed)
+                self._subscribed = None
 
-    def close(self) -> None:
+    def close(self, *, timeout: float = 30.0) -> None:
         """Stop the follower and release the fleet (idempotent).  The
+        shutdown deadline is propagated to :meth:`stop`; the servers
+        are released only once the follower is actually down.  The
         shared chunk cache stays on the manager — another fleet on this
         node keeps its contents warm."""
-        self.stop()
+        self.stop(timeout=timeout)
         self.servers = []

@@ -30,7 +30,13 @@ Per-file schema (top level: ``benchmark`` string + non-empty ``rows``):
   full_restore_s``) and restore byte-identically, with the largest
   geometry at >= 1024 ranks; every ``cold_start_fleet`` row
   ``byte_identical``; every ``hot_swap`` row with generates on both
-  sides of the swap and ``dropped == 0`` / ``torn == 0``.
+  sides of the swap and ``dropped == 0`` / ``torn == 0``;
+* ``BENCH_outage.json``  — the degraded-mode sweep (ISSUE 8): a full
+  (non-quick) run; every ``outage_survival`` row with zero failed
+  saves, zero retry giveups, ``drained`` and ``byte_identical`` true,
+  all five strategies covered; the ``hedged_restore`` row
+  byte-identical with ``hedged_p99_s < unhedged_p99_s`` and at least
+  one hedge win; the ``outage_summary`` row with zero violations.
 
 Exit code 0 = all good; 1 = any file missing/malformed (messages on
 stderr).  Run as ``python tools/bench_check.py [root]``.
@@ -72,6 +78,10 @@ EXPECTED = {
         "serve_fleet",
         set(),  # rows are heterogeneous; per-kind fields checked below
     ),
+    "BENCH_outage.json": (
+        "outage",
+        set(),  # rows are heterogeneous; per-kind fields checked below
+    ),
 }
 
 RESTORE_KIND_FIELDS = {
@@ -107,6 +117,19 @@ CHAOS_KIND_FIELDS = {
     "chaos_summary": {"n_schedules", "n_violations", "restored_identical",
                       "transient_zero_errors", "repair_success_frac",
                       "kinds_covered", "strategies_covered", "quick"},
+}
+
+OUTAGE_KIND_FIELDS = {
+    "outage_survival": {"config", "strategy", "n_steps", "saves_failed",
+                        "parked_steps", "giveups", "flush_errors", "drained",
+                        "byte_identical", "violations"},
+    "hedged_restore": {"config", "trials", "straggler_delay_s",
+                       "unhedged_p99_s", "hedged_p99_s", "hedges_issued",
+                       "hedge_wins", "byte_identical", "violations"},
+    "outage_summary": {"n_rows", "n_violations", "zero_failed_saves",
+                       "zero_giveups", "all_drained", "all_byte_identical",
+                       "strategies_covered", "unhedged_p99_s",
+                       "hedged_p99_s", "hedged_beats_unhedged", "quick"},
 }
 
 SERVE_KIND_FIELDS = {
@@ -159,13 +182,14 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
     for i, row in enumerate(rows):
         need = set(fields)
         if benchmark in ("restore_scale", "codec_phase", "flush_runtime",
-                         "chaos", "serve_fleet"):
+                         "chaos", "serve_fleet", "outage"):
             kinds = {
                 "restore_scale": RESTORE_KIND_FIELDS,
                 "codec_phase": CODEC_KIND_FIELDS,
                 "flush_runtime": FLUSH_RUNTIME_KIND_FIELDS,
                 "chaos": CHAOS_KIND_FIELDS,
                 "serve_fleet": SERVE_KIND_FIELDS,
+                "outage": OUTAGE_KIND_FIELDS,
             }[benchmark]
             kind = row.get("kind")
             if kind not in kinds:
@@ -231,6 +255,9 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
 
     if benchmark == "serve_fleet" and not errors:
         check_serve(path, rows, errors)
+
+    if benchmark == "outage" and not errors:
+        check_outage(path, rows, errors)
 
     if benchmark == "chaos" and not errors:
         sched = [r for r in rows if r.get("kind") == "schedule"]
@@ -327,6 +354,73 @@ def check_serve(path: Path, rows: list, errors: list) -> None:
                 f"{path.name}: {r['config']} needs generates on both sides "
                 "of the swap to witness linearizability", errors,
             )
+
+
+def check_outage(path: Path, rows: list, errors: list) -> None:
+    surv = [r for r in rows if r.get("kind") == "outage_survival"]
+    hedge = [r for r in rows if r.get("kind") == "hedged_restore"]
+    summaries = [r for r in rows if r.get("kind") == "outage_summary"]
+    if len(summaries) != 1:
+        return fail(
+            f"{path.name}: want exactly one outage_summary row, "
+            f"got {len(summaries)}", errors,
+        )
+    s = summaries[0]
+    if s["quick"]:
+        fail(f"{path.name}: committed sweep must be a full run, not --quick",
+             errors)
+    for r in surv:
+        if r["saves_failed"]:
+            fail(
+                f"{path.name}: {r['config']} failed {r['saves_failed']} "
+                "save(s) during the outage (bar: zero)", errors,
+            )
+        if r["giveups"]:
+            fail(
+                f"{path.name}: {r['config']} recorded {r['giveups']} retry "
+                "giveups (the circuit must open first; bar: zero)", errors,
+            )
+        if not r["drained"]:
+            fail(
+                f"{path.name}: {r['config']} parked backlog did not drain "
+                "after heal", errors,
+            )
+        if not r["byte_identical"]:
+            fail(
+                f"{path.name}: {r['config']} post-drain restore is not "
+                "byte-identical", errors,
+            )
+        if r["violations"]:
+            fail(
+                f"{path.name}: {r['config']} recorded violations "
+                f"{r['violations']}", errors,
+            )
+    covered = {r["strategy"] for r in surv}
+    if not ALL_STRATEGIES <= covered:
+        fail(
+            f"{path.name}: outage_survival rows missing strategies "
+            f"{sorted(ALL_STRATEGIES - covered)}", errors,
+        )
+    if not hedge:
+        fail(f"{path.name}: no hedged_restore rows", errors)
+    for r in hedge:
+        if r["hedged_p99_s"] >= r["unhedged_p99_s"]:
+            fail(
+                f"{path.name}: {r['config']} hedged p99 {r['hedged_p99_s']}s "
+                f"did not beat unhedged p99 {r['unhedged_p99_s']}s", errors,
+            )
+        if not r["hedge_wins"]:
+            fail(
+                f"{path.name}: {r['config']} no hedge ever won the race",
+                errors,
+            )
+        if not r["byte_identical"]:
+            fail(
+                f"{path.name}: {r['config']} hedged restore is not "
+                "byte-identical", errors,
+            )
+    if s["n_violations"] or not s["all_byte_identical"]:
+        fail(f"{path.name}: summary records violations", errors)
 
 
 def main() -> int:
