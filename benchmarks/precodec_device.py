@@ -1,0 +1,319 @@
+"""Device pre-codec bench: blocking-window time with staging overlap,
+dirty-sweep stored-byte parity, and restore equivalence per strategy.
+
+The tentpole claim: with ``device_precodec=True`` the pre-codec work
+(int8 quantize, serialization into the logical stream, XOR delta vs the
+previous step, per-chunk dirty detection + digests) runs as ONE fused
+device pass during the *next train step*, and ``save()`` only consumes
+the staged host buffers.  The host path pays all of it inside the
+blocking window.  Rows:
+
+* ``precodec_save`` — host/device pairs per geometry (codec
+  ``zstd+delta``, precodec ``int8``, 5% of the state mutated per step).
+  ``save_s`` is the blocking window; device rows carry ``stage_s`` (the
+  off-path staging cost hidden behind compute), ``speedup`` =
+  host ``save_s`` / device ``save_s``, and ``overlap_frac`` = the
+  fraction of total checkpoint work (stage + save) off the blocking
+  path.  The acceptance bar is ``speedup >= 2`` at the largest
+  geometry (64x16 = 1024 ranks).
+* ``dirty_parity`` — stored bytes of the device delta path vs the host
+  ``zstd+delta`` path across a dirty-fraction sweep.  The device mask
+  comes from the fused kernel, the host mask from ``np.array_equal``
+  scans; both managers run with ``chunk_aligned_split`` so the chunk
+  grids match and the bar (parity within 1%) measures the masks, not
+  rank-boundary tail chunks.
+* ``restore_equivalence`` — one row per aggregation strategy: a device
+  checkpoint chain (anchor + delta) restores byte-identically
+  (post-dequantize exact) to its host-path twin.
+
+Timings run kernels in interpret mode on CPU; the staging cost is
+inflated (the fused pass interprets tile-by-tile), but it is off the
+blocking path by construction, so ``save_s`` — the measured claim —
+compares the same host-side codec work on both paths.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/precodec_device.py                # full
+    PYTHONPATH=src python benchmarks/precodec_device.py --quick        # CI smoke
+    PYTHONPATH=src python benchmarks/precodec_device.py --out BENCH_precodec.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import CheckpointConfig, CheckpointManager, theta_like
+
+MiB = 1 << 20
+
+# (nodes, ppn, state MiB, chunk bytes, repeats).  The last geometry is
+# the acceptance one: 64x16 = 1024 ranks.  Chunk sizes keep the fused
+# pass at <= 512 grid steps so interpret-mode staging stays bounded.
+FULL_CONFIGS: List[Tuple[int, int, int, int, int]] = [
+    (4, 2, 8, 16 * 1024, 3),
+    (8, 4, 16, 32 * 1024, 3),
+    (64, 16, 32, 64 * 1024, 3),
+]
+QUICK_CONFIGS: List[Tuple[int, int, int, int, int]] = [
+    (2, 2, 4, 16 * 1024, 2),
+]
+
+DIRTY_FRACS = [0.01, 0.05, 0.2, 0.5]
+STRATEGIES = ["file_per_process", "posix", "mpiio", "stripe_aligned", "gio_sync"]
+DIRTY_FRAC = 0.05  # per-step mutation for the save rows
+
+
+def make_state(total_bytes: int, n_leaves: int = 8) -> Dict[str, jax.Array]:
+    """float32 train-state mix: 3/4 dense weights, 1/4 sparse moments."""
+    rng = np.random.default_rng(0)
+    per = total_bytes // n_leaves // 4
+    out: Dict[str, jax.Array] = {}
+    for i in range(n_leaves):
+        a = rng.standard_normal(per).astype(np.float32)
+        if i >= (3 * n_leaves) // 4:
+            a *= rng.random(per) < 0.1
+            out[f"m_{i:02d}"] = jnp.asarray(a)
+        else:
+            out[f"w_{i:02d}"] = jnp.asarray(a)
+    return out
+
+
+def mutate(state: Dict[str, jax.Array], frac: float, seed: int) -> Dict[str, jax.Array]:
+    """Dirty a leading `frac` of the state, leaf by leaf."""
+    rng = np.random.default_rng(seed)
+    out = dict(state)
+    budget = int(sum(v.size for v in state.values()) * frac)
+    for k, v in state.items():
+        if budget <= 0:
+            break
+        n = min(v.size, budget)
+        a = np.asarray(v).reshape(-1).copy()
+        a[:n] += rng.standard_normal(n).astype(np.float32)
+        out[k] = jnp.asarray(a.reshape(v.shape))
+        budget -= n
+    return out
+
+
+def _mgr(root: str, nodes: int, ppn: int, chunk: int, *, device: bool,
+         strategy: str = "stripe_aligned",
+         aligned_split: bool = False) -> CheckpointManager:
+    return CheckpointManager(CheckpointConfig(
+        root=root, cluster=theta_like(nodes, ppn), strategy=strategy,
+        codec="zstd+delta", chunk_size=chunk, precodec="int8",
+        device_precodec=device, chunk_aligned_split=aligned_split,
+        delta_every=8, parallel_local=True, zero_copy=True,
+    ))
+
+
+def bench_save(nodes: int, ppn: int, mib: int, chunk: int, repeats: int,
+               *, verbose: bool) -> List[Dict[str, object]]:
+    state = make_state(mib * MiB)
+    timings: Dict[str, Dict[str, float]] = {}
+    for path in ("host", "device"):
+        device = path == "device"
+        with tempfile.TemporaryDirectory() as root:
+            mgr = _mgr(root, nodes, ppn, chunk, device=device)
+            try:
+                if device:
+                    # anchor stage runs during "step 0 compute"
+                    mgr.stage(1, state)
+                    mgr._staged.future.result()
+                mgr.save(1, state)
+                mgr.wait()
+                save_s: List[float] = []
+                for step in range(2, repeats + 2):
+                    s = mutate(state, DIRTY_FRAC, step)
+                    if device:
+                        # the overlap contract: staging kicked off at the
+                        # top of the train step, finished before save()
+                        mgr.stage(step, s)
+                        mgr._staged.future.result()
+                    t0 = time.perf_counter()
+                    st = mgr.save(step, s)
+                    save_s.append(time.perf_counter() - t0)
+                    mgr.wait()
+                    assert not mgr.flush_errors, mgr.flush_errors
+                timings[path] = {
+                    "save_s": round(min(save_s), 4),
+                    "stage_s": round(mgr.stats[-1].stage_s, 4),
+                    "stored_ratio": round(st.stored_bytes / st.raw_bytes, 4),
+                }
+            finally:
+                mgr.close()
+    rows: List[Dict[str, object]] = []
+    for path in ("host", "device"):
+        row: Dict[str, object] = {
+            "config": f"{nodes}x{ppn}/{mib}MiB/int8+zstd+delta",
+            "kind": "precodec_save",
+            "nodes": nodes,
+            "ppn": ppn,
+            "n_ranks": nodes * ppn,
+            "precodec": "int8",
+            "state_bytes": mib * MiB,
+            "chunk_bytes": chunk,
+            "dirty_frac": DIRTY_FRAC,
+            "path": path,
+            **timings[path],
+        }
+        if path == "device":
+            total = timings["device"]["stage_s"] + timings["device"]["save_s"]
+            row["speedup"] = round(
+                timings["host"]["save_s"] / timings["device"]["save_s"], 2
+            )
+            row["overlap_frac"] = round(timings["device"]["stage_s"] / total, 4)
+        rows.append(row)
+        if verbose:
+            extra = (
+                f"  speedup={row['speedup']:5.2f}x overlap={row['overlap_frac']:.1%}"
+                if path == "device" else ""
+            )
+            print(
+                f"{row['config']:>30} {path:>6}  save={row['save_s']:7.3f}s  "
+                f"stage={row['stage_s']:7.3f}s{extra}", flush=True,
+            )
+    return rows
+
+
+def bench_dirty_parity(nodes: int, ppn: int, mib: int, chunk: int,
+                       *, verbose: bool) -> List[Dict[str, object]]:
+    state = make_state(mib * MiB)
+    rows: List[Dict[str, object]] = []
+    for frac in DIRTY_FRACS:
+        stored: Dict[str, int] = {}
+        mutated = mutate(state, frac, 7)
+        for path in ("host", "device"):
+            with tempfile.TemporaryDirectory() as root:
+                # chunk-aligned host split: both paths see the same
+                # global chunk grid, so stored bytes compare like for like
+                mgr = _mgr(root, nodes, ppn, chunk, device=(path == "device"),
+                           aligned_split=True)
+                try:
+                    mgr.save(1, state)
+                    mgr.wait()
+                    st = mgr.save(2, mutated)
+                    mgr.wait()
+                    assert not mgr.flush_errors, mgr.flush_errors
+                    assert mgr._manifest_pfs(2).base_step == 1
+                    stored[path] = int(st.stored_bytes)
+                finally:
+                    mgr.close()
+        rel_err = abs(stored["device"] - stored["host"]) / max(1, stored["host"])
+        row = {
+            "config": f"{nodes}x{ppn}/{mib}MiB/int8+zstd+delta",
+            "kind": "dirty_parity",
+            "n_ranks": nodes * ppn,
+            "state_bytes": mib * MiB,
+            "dirty_frac": frac,
+            "host_stored": stored["host"],
+            "device_stored": stored["device"],
+            "rel_err": round(rel_err, 6),
+        }
+        rows.append(row)
+        if verbose:
+            print(
+                f"{row['config']:>30} dirty={frac:5.2f}  "
+                f"host={stored['host']/1e6:8.2f}MB  "
+                f"device={stored['device']/1e6:8.2f}MB  "
+                f"rel_err={rel_err:.4%}", flush=True,
+            )
+    return rows
+
+
+def bench_restore_equivalence(mib: int, chunk: int,
+                              *, verbose: bool) -> List[Dict[str, object]]:
+    state = make_state(mib * MiB, n_leaves=4)
+    s2 = mutate(state, 0.1, 3)
+    rows: List[Dict[str, object]] = []
+    for strategy in STRATEGIES:
+        restored: Dict[str, object] = {}
+        t_restore = 0.0
+        for path in ("host", "device"):
+            with tempfile.TemporaryDirectory() as root:
+                mgr = _mgr(root, 2, 2, chunk, device=(path == "device"),
+                           strategy=strategy)
+                try:
+                    mgr.save(1, state)
+                    mgr.save(2, s2)  # delta step
+                    mgr.wait()
+                    assert not mgr.flush_errors, mgr.flush_errors
+                    mgr._l0 = None  # force the decode path
+                    tgt = jax.tree_util.tree_map(
+                        lambda l: np.zeros(l.shape, l.dtype), state
+                    )
+                    t0 = time.perf_counter()
+                    _, out = mgr.restore(tgt, 2)
+                    t_restore = time.perf_counter() - t0
+                    restored[path] = out
+                finally:
+                    mgr.close()
+        identical = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(
+                jax.tree_util.tree_leaves(restored["host"]),
+                jax.tree_util.tree_leaves(restored["device"]),
+            )
+        )
+        row = {
+            "config": f"2x2/{mib}MiB/int8+zstd+delta",
+            "kind": "restore_equivalence",
+            "strategy": strategy,
+            "state_bytes": mib * MiB,
+            "restore_s": round(t_restore, 4),
+            "byte_identical": bool(identical),
+        }
+        rows.append(row)
+        if verbose:
+            print(
+                f"{row['config']:>30} {strategy:>17}  "
+                f"restore={t_restore:6.3f}s  identical={identical}", flush=True,
+            )
+    return rows
+
+
+def run(configs: List[Tuple[int, int, int, int, int]], *, quick: bool,
+        verbose: bool = True) -> List[Dict[str, object]]:
+    rows: List[Dict[str, object]] = []
+    for nodes, ppn, mib, chunk, repeats in configs:
+        rows.extend(bench_save(nodes, ppn, mib, chunk, repeats, verbose=verbose))
+    p_nodes, p_ppn, p_mib, p_chunk = (2, 2, 4, 16 * 1024) if quick \
+        else (8, 4, 16, 32 * 1024)
+    rows.extend(bench_dirty_parity(p_nodes, p_ppn, p_mib, p_chunk,
+                                   verbose=verbose))
+    rows.extend(bench_restore_equivalence(4 if quick else 8, 16 * 1024,
+                                          verbose=verbose))
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true", help="CI smoke configs")
+    p.add_argument("--out", help="write JSON rows to this path")
+    args = p.parse_args(argv)
+
+    configs = QUICK_CONFIGS if args.quick else FULL_CONFIGS
+    rows = run(configs, quick=args.quick)
+    doc = {
+        "benchmark": "precodec_device",
+        "quick": bool(args.quick),
+        "rows": rows,
+    }
+    text = json.dumps(doc, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}")
+    else:
+        json.dump(doc, sys.stdout, indent=2)
+        print()
+
+
+if __name__ == "__main__":
+    main()

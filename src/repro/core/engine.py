@@ -164,6 +164,22 @@ class CheckpointConfig:
     # legacy checkpoints on disk use).
     chunk_size: int = DEFAULT_CHUNK_SIZE
     precodec: str = "none"             # none | int8 (device-side, lossy)
+    # Device-resident pre-codec (requires codec zstd+delta and a
+    # chunk_size that is a multiple of 4096): the state is serialized,
+    # quantized (one grouped launch) and diffed against the previous
+    # step *on device* by the fused Pallas pass, and only dirty chunks
+    # are copied D2H.  ``stage(step, state)`` starts the pass
+    # asynchronously so it overlaps the next train step; ``save()``
+    # consumes the staged buffers (or stages synchronously when the
+    # caller never staged).  False = the host reference path
+    # (quantize_tree + serialize_tree + np.array_equal dirty scan),
+    # kept as the executable spec the staged path is byte-identical to.
+    device_precodec: bool = False
+    # Align host-path rank splits to the global chunk_size grid (the
+    # split encode_state_staged always uses).  Off, ranks balance by
+    # bytes and interior ranks get tail chunks; on, host and device
+    # encodings of the same state are chunk-for-chunk comparable.
+    chunk_aligned_split: bool = False
     delta_every: int = 4               # full ckpt cadence under zstd+delta
     partner_replication: bool = False  # L1 peer replica (node-failure cover)
     keep_n: Optional[int] = None       # GC: retain this many newest steps
@@ -265,6 +281,23 @@ class SaveStats:
     # True when the adaptive runtime superseded this step's flush (a
     # newer step replaced it before/while it drained); flush stays None.
     superseded: bool = False
+    # Device pre-codec telemetry: total device-side staging span (worker
+    # thread) and how much of it save() actually blocked on.  A staged
+    # step overlapped with training has stage_wait_s ~ 0;
+    # stage_s - stage_wait_s is the work hidden behind the train step.
+    stage_s: float = 0.0
+    stage_wait_s: float = 0.0
+
+
+class UnsupportedPrecodecError(IOError):
+    """Partial restore was planned against a precodec-transformed
+    manifest: the stored leaves are the transformed tree (``q``/``s``
+    blocks under ``int8``), not the caller's names.  Raised at *plan
+    time* — before any blob or extent read is issued — and never
+    swallowed by the candidate fallback, so a serving caller cannot
+    silently receive an older step's leaves instead.  Restore such
+    checkpoints with :meth:`CheckpointManager.restore` (which
+    dequantizes), or save the serving tier with ``precodec="none"``."""
 
 
 class L1CapacityError(RuntimeError):
@@ -370,6 +403,11 @@ class CheckpointManager:
         self._l0: Optional[EncodedState] = None
         self._last_full: Optional[EncodedState] = None
         self._saves_since_full = 0
+        # Device pre-codec runtime (lazy — only when device_precodec):
+        # the staging worker + device-held base words, and the handle of
+        # the step currently staged ahead of its save().
+        self._device_precodec = None
+        self._staged = None
         self.stats: List[SaveStats] = []
         # Flush results are delivered by step through this index (under
         # _lock) — the flush worker never scans the list save() appends to.
@@ -442,16 +480,17 @@ class CheckpointManager:
     def save(self, step: int, state: Any) -> SaveStats:
         cfg = self.cfg
         t0 = time.perf_counter()
-        if cfg.precodec == "int8":
-            from repro.core.precodec import quantize_tree
-
-            state = quantize_tree(state)
-        elif cfg.precodec != "none":
+        if cfg.precodec not in ("none", "int8"):
             raise ValueError(f"unknown precodec {cfg.precodec!r}")
         base = None
-        if cfg.codec == "zstd+delta" and self._last_full is not None:
-            if self._saves_since_full < cfg.delta_every - 1:
-                base = self._l0 or self._last_full
+        if cfg.device_precodec:
+            self._check_device_cfg()
+        else:
+            if cfg.precodec == "int8":
+                from repro.core.precodec import quantize_tree
+
+                state = quantize_tree(state)
+            base = self._delta_base()
         c = self.cluster
         pool = self._local_pool() if cfg.parallel_local else None
         replicate = cfg.partner_replication and c.n_nodes > 1
@@ -477,12 +516,18 @@ class CheckpointManager:
                 )
 
         fused = cfg.zero_copy and pool is not None
-        if cfg.zero_copy:
+        stage_s = stage_wait_s = 0.0
+        if cfg.device_precodec:
+            enc, stage_s, stage_wait_s = self._encode_device(
+                step, state, pool, drain_rank if fused else None
+            )
+        elif cfg.zero_copy:
             # fused parallel local phase: each pooled rank task encodes,
             # CRCs and writes its L1 blob (+ partner replica) in one go —
             # CRC of one rank overlaps the file write of another
             enc = encode_state(
                 step, state, self.cluster, codec=cfg.codec, base=base,
+                chunk_aligned=cfg.chunk_aligned_split,
                 pool=pool, rank_sink=drain_rank if fused else None,
                 chunk_size=cfg.chunk_size,
             )
@@ -523,6 +568,8 @@ class CheckpointManager:
             raw_bytes=enc.manifest.total_raw_bytes,
             stored_bytes=sum(r.stored_size for r in enc.manifest.ranks),
             encode_time=t_enc,
+            stage_s=stage_s,
+            stage_wait_s=stage_wait_s,
         )
         l1_cost = st.stored_bytes * (2 if replicate else 1)
         with self._lock:
@@ -575,6 +622,114 @@ class CheckpointManager:
         # raise — the bytes are already durable on L1) if it overshot
         self._enforce_l1_budget(step, 0, strict=False)
         return st
+
+    # ------------------------------------------------- device pre-codec path
+
+    def _delta_base(self) -> Optional[EncodedState]:
+        """The delta base for the next save, or ``None`` (anchor).
+
+        Re-anchors when ``cfg.precodec`` changed since the base was
+        encoded: XORing streams of different transforms would store a
+        "delta" that decodes into garbage under the new manifest's
+        precodec label, so the stale in-memory ``_l0``/``_last_full``
+        bases are invalidated and the next save is a full snapshot.
+        """
+        cfg = self.cfg
+        if cfg.codec != "zstd+delta" or self._last_full is None:
+            return None
+        if self._last_full.manifest.precodec != cfg.precodec or (
+            self._l0 is not None and self._l0.manifest.precodec != cfg.precodec
+        ):
+            with self._lock:
+                self._l0 = None
+                self._last_full = None
+                self._saves_since_full = 0
+            if self._device_precodec is not None:
+                self._device_precodec.invalidate_base()
+            return None
+        if self._saves_since_full < cfg.delta_every - 1:
+            return self._l0 or self._last_full
+        return None
+
+    def _check_device_cfg(self) -> None:
+        cfg = self.cfg
+        if cfg.codec != "zstd+delta":
+            raise ValueError("device_precodec requires codec 'zstd+delta'")
+        from repro.kernels.fused.ops import CHUNK_ALIGN
+
+        if cfg.chunk_size <= 0 or cfg.chunk_size % CHUNK_ALIGN:
+            raise ValueError(
+                f"device_precodec requires chunk_size to be a positive "
+                f"multiple of {CHUNK_ALIGN}, got {cfg.chunk_size}"
+            )
+
+    def _device_codec(self):
+        if self._device_precodec is None:
+            from repro.core.precodec import DevicePrecodec
+
+            self._device_precodec = DevicePrecodec(
+                chunk_size=self.cfg.chunk_size, precodec=self.cfg.precodec
+            )
+        return self._device_precodec
+
+    def stage(self, step: int, state: Any) -> bool:
+        """Start the device pre-codec pass for ``step`` ahead of its
+        ``save()``.
+
+        Returns immediately: the grouped quantize + fused
+        delta/dirty/checksum pass and the dirty-chunk D2H copy run on
+        the staging worker while the caller's next train step executes.
+        ``save(step, state)`` then consumes the staged buffers instead
+        of doing a fresh full-state device_get — the state must not be
+        mutated between the two calls (the staged bytes are the bytes
+        saved).  No-op returning ``False`` when ``device_precodec`` is
+        off.
+        """
+        if not self.cfg.device_precodec:
+            return False
+        self._check_device_cfg()
+        base = self._delta_base()
+        staged = self._device_codec().stage(
+            step, state, base_step=None if base is None else base.step
+        )
+        with self._lock:
+            self._staged = staged
+        return True
+
+    def _encode_device(self, step: int, state: Any, pool, rank_sink):
+        """Consume (or synchronously produce) the staged device buffers
+        and encode them — the device-path body of ``save()``'s encode
+        phase.  Returns ``(enc, stage_s, stage_wait_s)``."""
+        from repro.core.serialize import encode_state_staged
+
+        with self._lock:
+            staged, self._staged = self._staged, None
+        if staged is None or staged.step != step:
+            base = self._delta_base()
+            staged = self._device_codec().stage(
+                step, state, base_step=None if base is None else base.step
+            )
+        base_stream = None
+        if staged.base_step is not None:
+            with self._lock:
+                for cand in (self._l0, self._last_full):
+                    if cand is not None and cand.step == staged.base_step:
+                        base_stream = cand.stream
+                        break
+        bufs = self._device_codec().consume(staged, base_stream)
+        enc = encode_state_staged(
+            step, self.cluster,
+            stream=bufs.stream,
+            leaves=bufs.leaves,
+            chunk_size=self.cfg.chunk_size,
+            base_step=bufs.base_step,
+            dirty=bufs.mask,
+            deltas=bufs.deltas,
+            digests=bufs.digests,
+            pool=pool,
+            rank_sink=rank_sink,
+        )
+        return enc, bufs.stage_s, bufs.wait_s
 
     # ----------------------------------------------------------------- flush
 
@@ -1216,6 +1371,9 @@ class CheckpointManager:
         if self._local_exec is not None:
             self._local_exec.shutdown(wait=True)
             self._local_exec = None
+        if self._device_precodec is not None:
+            self._device_precodec.close()
+            self._device_precodec = None
         self.executor.close()
 
     @property
@@ -1624,8 +1782,30 @@ class CheckpointManager:
             )
         return {int(r): b for r, b in zip(sel.tolist(), bufs)}
 
+    def _check_delta_base(self, man: Manifest) -> None:
+        """Reject a delta whose base was encoded under a different
+        ``precodec``: the XOR would "decode" into bytes that are neither
+        transform's stream.  Checked against whichever level's base
+        manifest is readable; an unreadable base fails later in
+        ``_load_stream`` anyway."""
+        if man.base_step is None:
+            return
+        for getter in (self._manifest_local, self._manifest_pfs):
+            try:
+                bman = getter(man.base_step)
+            except Exception:
+                continue
+            if bman.precodec != man.precodec:
+                raise IOError(
+                    f"step {man.step}: delta base {man.base_step} was "
+                    f"encoded with precodec {bman.precodec!r}, not "
+                    f"{man.precodec!r} — chain is invalid"
+                )
+            return
+
     def _restore_from_pfs(self, step: int, target: Any) -> Any:
         man = self._manifest_pfs(step)
+        self._check_delta_base(man)
         verify = self.cfg.verify_on_restore
         by_rank = self._read_blobs_pfs(man, step, verify=verify)
         blobs = [by_rank[r] for r in range(man.world_size)]
@@ -1641,6 +1821,7 @@ class CheckpointManager:
 
     def _restore_from_local(self, step: int, target: Any) -> Any:
         man = self._manifest_local(step)
+        self._check_delta_base(man)
         blobs = self._local_blobs(man, step)
         base_stream = (
             self._load_stream(man.base_step) if man.base_step is not None else None
@@ -1704,6 +1885,7 @@ class CheckpointManager:
         ):
             try:
                 man = getter(step)
+                self._check_delta_base(man)
                 if pfs:
                     by_rank = self._read_blobs_pfs(man, step, verify=verify)
                     blobs: List[Any] = [by_rank[r] for r in range(man.world_size)]
@@ -1750,8 +1932,10 @@ class CheckpointManager:
         :meth:`validate` scrubs for cold-checkpoint assurance there.
 
         Falls back PFS -> L1 like :meth:`restore`.  Checkpoints saved
-        with a ``precodec`` are rejected (the stored leaves are the
-        transformed tree; restore them with :meth:`restore`).
+        with a ``precodec`` raise :class:`UnsupportedPrecodecError` at
+        plan time — before any blob or extent read is issued, and
+        *without* falling through to an older step (the stored leaves
+        are the transformed tree; restore them with :meth:`restore`).
         """
         candidates = (
             [step]
@@ -1767,6 +1951,10 @@ class CheckpointManager:
                 try:
                     man = getter(s)
                     return s, self._leaves_from(man, s, names, pfs=pfs)
+                except UnsupportedPrecodecError:
+                    # never falls through to an older step: silently
+                    # serving stale leaves is worse than failing loudly
+                    raise
                 except Exception as e:
                     errors.append(
                         f"step {s} via {'pfs' if pfs else 'local'}: {e!r}"
@@ -1803,9 +1991,11 @@ class CheckpointManager:
     def _leaves_from(
         self, man: Manifest, step: int, names: List[str], *, pfs: bool
     ) -> Dict[str, np.ndarray]:
+        # plan-time rejection: nothing has been read beyond the manifest
         if man.precodec != "none":
-            raise IOError(
-                f"partial restore unsupported with precodec {man.precodec!r}"
+            raise UnsupportedPrecodecError(
+                f"step {step}: partial restore unsupported with precodec "
+                f"{man.precodec!r} — restore() handles the inverse transform"
             )
         entries = {l.name: l for l in man.leaves}
         ranges = man.leaf_ranges(names)
@@ -2000,6 +2190,11 @@ class CheckpointManager:
                 base_segs.get(row),
                 impl,
                 verify=verify,
+                digest=(
+                    int(table.digest[row])
+                    if (verify and table.digest is not None)
+                    else None
+                ),
                 what=f"rank {int(rank_of[np.searchsorted(rows, row)])} chunk",
             )
 

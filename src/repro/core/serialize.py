@@ -68,6 +68,7 @@ import jax
 
 from repro.core.cluster import ClusterSpec
 from repro.core.integrity import crc32
+from repro.kernels.checksum.ref import digest_ref
 from repro.utils.treelib import flatten_with_names
 
 try:
@@ -458,6 +459,31 @@ def split_ranks(
     return out
 
 
+def chunk_aligned_sizes(total: int, world_size: int, chunk_size: int) -> List[int]:
+    """Per-rank sizes whose boundaries all fall on ``chunk_size``
+    multiples of the *global* stream (last rank ragged).
+
+    The device pre-codec chunks the whole stream in one fused launch;
+    aligning the rank split to the same grid makes every per-rank chunk
+    a global chunk, so the device dirty mask and digests index straight
+    into each rank's :func:`encode_rank_chunks` call.  Chunks are
+    spread across ranks as evenly as chunk granularity allows; ranks
+    may be empty when there are fewer chunks than ranks.
+    """
+    if chunk_size <= 0:
+        raise ValueError("chunk_aligned_sizes requires chunk_size > 0")
+    n_chunks = -(-total // chunk_size) if total else 0
+    per, rem = divmod(n_chunks, world_size)
+    sizes, off_c = [], 0
+    for r in range(world_size):
+        c = per + (1 if r < rem else 0)
+        a = min(off_c * chunk_size, total)
+        b = min((off_c + c) * chunk_size, total)
+        sizes.append(b - a)
+        off_c += c
+    return sizes
+
+
 # -- compression backends ---------------------------------------------------
 #
 # One compressor/decompressor object per worker thread: the chunked
@@ -621,6 +647,16 @@ class ChunkTable:
     * ``flags``      — ``CHUNK_COMP`` | ``CHUNK_RAW`` | ``CHUNK_BASE`` |
       ``CHUNK_DELTA``
 
+    ``digest`` is an optional uint64 column of per-chunk two-track
+    digests of the *raw* chunk bytes (``repro.kernels.checksum``
+    semantics, index track restarted per chunk) — present on manifests
+    encoded through the device pre-codec, where the fused pass computes
+    them for free during its delta sweep.  Unlike ``crc`` (which covers
+    the stored payload and is 0 for ``CHUNK_BASE`` rows), ``digest``
+    covers the decoded content of *every* row, so decode can verify
+    base-referenced chunks — i.e. that the resolved base stream really
+    is the one the delta was taken against.
+
     Invariants (asserted by :meth:`validate`): per rank, ``raw`` rows
     tile ``[0, raw_size)`` exactly and ``stored`` rows tile
     ``[0, stored_size)`` exactly (base-referencing rows contribute zero
@@ -638,6 +674,7 @@ class ChunkTable:
     stored_len: np.ndarray
     crc: np.ndarray
     flags: np.ndarray
+    digest: Optional[np.ndarray] = None
 
     _COLS = ("raw_off", "raw_len", "stored_off", "stored_len", "crc", "flags")
 
@@ -647,6 +684,10 @@ class ChunkTable:
             setattr(self, c, np.asarray(getattr(self, c), dtype=np.int64))
         if len({getattr(self, c).shape for c in self._COLS}) != 1:
             raise ValueError("ChunkTable columns must have identical length")
+        if self.digest is not None:
+            self.digest = np.asarray(self.digest, dtype=np.uint64)
+            if self.digest.shape != self.raw_off.shape:
+                raise ValueError("ChunkTable digest column length mismatch")
 
     def __len__(self) -> int:
         return len(self.raw_off)
@@ -654,6 +695,11 @@ class ChunkTable:
     def __eq__(self, other) -> bool:
         if not isinstance(other, ChunkTable):
             return NotImplemented
+        if (self.digest is None) != (other.digest is None) or (
+            self.digest is not None
+            and not np.array_equal(self.digest, other.digest)
+        ):
+            return False
         return np.array_equal(self.rank_starts, other.rank_starts) and all(
             np.array_equal(getattr(self, c), getattr(other, c))
             for c in self._COLS
@@ -750,10 +796,13 @@ class ChunkTable:
         return ChunkTable(starts, *cols)
 
     def to_json_obj(self) -> Dict[str, Any]:
-        return {
+        obj = {
             "rank_starts": self.rank_starts.tolist(),
             **{c: getattr(self, c).tolist() for c in self._COLS},
         }
+        if self.digest is not None:
+            obj["digest"] = [int(d) for d in self.digest]
+        return obj
 
     @staticmethod
     def from_json_obj(obj: Any) -> Optional["ChunkTable"]:
@@ -762,6 +811,7 @@ class ChunkTable:
         return ChunkTable(
             rank_starts=obj["rank_starts"],
             **{c: obj[c] for c in ChunkTable._COLS},
+            digest=obj.get("digest"),
         )
 
 
@@ -771,6 +821,9 @@ def encode_rank_chunks(
     codec: str,
     chunk_size: int,
     impl: str,
+    *,
+    dirty: Optional[Sequence[bool]] = None,
+    deltas: Optional[Sequence[Optional[np.ndarray]]] = None,
 ) -> Tuple[Buffer, Tuple[List[int], ...]]:
     """Chunk-frame one rank's raw segment into its stored blob.
 
@@ -783,6 +836,15 @@ def encode_rank_chunks(
     chunk's uint8 views; nothing here copies the raw stream beyond the
     one XOR scratch per dirty chunk.
 
+    Staged mode (device pre-codec): when ``dirty`` is given, the
+    per-chunk ``np.array_equal`` scan and the host XOR are skipped —
+    the fused device pass already decided cleanliness and produced the
+    XOR payloads.  ``dirty[i]`` is the within-rank chunk's dirtiness
+    and ``deltas[i]`` its precomputed XOR bytes (``None`` for clean
+    chunks); ``base`` is not consulted.  The probe/compress/flag logic
+    is byte-identical to the host path, so staged and host encodes of
+    the same rank segment produce the same stored blob.
+
     Returns the assembled stored blob plus the per-chunk column lists
     for :meth:`ChunkTable.from_rank_lists`.
     """
@@ -792,9 +854,15 @@ def encode_rank_chunks(
     if n == 0:
         return b"", cols
     rv = np.frombuffer(raw, np.uint8)
+    staged = dirty is not None
     bv = (
         np.frombuffer(base, np.uint8)
-        if (codec == "zstd+delta" and base is not None and len(base) == n)
+        if (
+            not staged
+            and codec == "zstd+delta"
+            and base is not None
+            and len(base) == n
+        )
         else None
     )
 
@@ -812,18 +880,24 @@ def encode_rank_chunks(
         return len(_zlib.compress(sample, 1)) >= PROBE_RATIO * len(sample)
 
     out = bytearray()
-    for off in range(0, n, chunk_size):
+    for ci, off in enumerate(range(0, n, chunk_size)):
         ln = min(chunk_size, n - off)
         rc = rv[off : off + ln]
         # CHUNK_RAW payloads append the chunk view directly (one copy,
         # hashed in place) — raw-heavy blobs must not pay a tobytes
         # round trip per chunk on top of the bytearray append.
         payload: Optional[bytes] = None
-        if bv is not None:
-            bc = bv[off : off + ln]
-            if np.array_equal(rc, bc):
+        if staged or bv is not None:
+            if staged:
+                clean = not dirty[ci]
+                x = None if clean else deltas[ci]
+            else:
+                bc = bv[off : off + ln]
+                clean = np.array_equal(rc, bc)
+                x = None if clean else np.bitwise_xor(rc, bc)
+            if clean:
                 payload, flag = b"", CHUNK_BASE
-            elif probably_incompressible(x := np.bitwise_xor(rc, bc)):
+            elif probably_incompressible(x):
                 flag = CHUNK_RAW
             else:
                 comp = compress_bytes(x, impl)
@@ -867,6 +941,7 @@ def decode_chunk_into(
     impl: str,
     *,
     verify: bool = True,
+    digest: Optional[int] = None,
     what: str = "chunk",
 ) -> None:
     """Decode one chunk directly into its slice of the output stream.
@@ -877,29 +952,51 @@ def decode_chunk_into(
     checks the chunk's stored-payload CRC first, so corruption is
     attributed to a single chunk even on sub-blob (partial-restore)
     reads where no whole-blob CRC exists.
+
+    ``digest``, when given (manifests with a :class:`ChunkTable`
+    ``digest`` column), is checked against the *decoded* raw bytes —
+    this also covers ``CHUNK_BASE``/``CHUNK_DELTA`` rows, whose
+    correctness otherwise depends on resolving the right base stream.
     """
     if flag & CHUNK_BASE:
         if base_seg is None or len(base_seg) != raw_len:
             raise IOError(f"{what}: base-referencing chunk without its base")
         np.copyto(dst, np.frombuffer(base_seg, np.uint8))
-        return
-    if verify and crc32(payload) != crc:
+    elif verify and crc32(payload) != crc:
         raise IOError(f"{what}: chunk checksum mismatch")
-    if flag & CHUNK_RAW:
+    elif flag & CHUNK_RAW:
         if len(payload) != raw_len:
             raise IOError(f"{what}: raw chunk length mismatch")
         np.copyto(dst, np.frombuffer(payload, np.uint8))
-        return
-    x = decompress_bytes(payload, raw_len, impl)
-    if len(x) != raw_len:
-        raise IOError(f"{what}: chunk decompressed to {len(x)} of {raw_len} bytes")
-    xv = np.frombuffer(x, np.uint8)
-    if flag & CHUNK_DELTA:
-        if base_seg is None or len(base_seg) != raw_len:
-            raise IOError(f"{what}: delta chunk without its base")
-        np.bitwise_xor(xv, np.frombuffer(base_seg, np.uint8), out=dst)
     else:
-        np.copyto(dst, xv)
+        x = decompress_bytes(payload, raw_len, impl)
+        if len(x) != raw_len:
+            raise IOError(
+                f"{what}: chunk decompressed to {len(x)} of {raw_len} bytes"
+            )
+        xv = np.frombuffer(x, np.uint8)
+        if flag & CHUNK_DELTA:
+            if base_seg is None or len(base_seg) != raw_len:
+                raise IOError(f"{what}: delta chunk without its base")
+            np.bitwise_xor(xv, np.frombuffer(base_seg, np.uint8), out=dst)
+        else:
+            np.copyto(dst, xv)
+    if digest is not None and _raw_chunk_digest(dst) != digest:
+        raise IOError(f"{what}: raw chunk digest mismatch")
+
+
+def _raw_chunk_digest(dst: np.ndarray) -> int:
+    """Two-track digest of a decoded chunk's raw bytes (zero-padded to
+    a word boundary) — the host oracle for the fused pass's per-chunk
+    checksum output."""
+    n = dst.size
+    rem = (-n) % 4
+    if rem:
+        w = np.zeros(n + rem, np.uint8)
+        w[:n] = dst
+    else:
+        w = dst
+    return digest_ref(w.view(np.uint32))
 
 
 @dataclass
@@ -948,11 +1045,18 @@ def encode_state(
     codec: str = "none",
     base: Optional[EncodedState] = None,
     rank_sizes: Optional[Sequence[int]] = None,
+    chunk_aligned: bool = False,
     pool: Optional[Executor] = None,
     rank_sink: Optional[Any] = None,
     chunk_size: int = DEFAULT_CHUNK_SIZE,
 ) -> EncodedState:
     """Serialize + split + encode one checkpoint.
+
+    ``chunk_aligned=True`` derives ``rank_sizes`` from
+    :func:`chunk_aligned_sizes`, so rank boundaries land on the global
+    ``chunk_size`` grid — the same split :func:`encode_state_staged`
+    uses, which makes host and device-staged encodings of the same
+    state byte-comparable (no per-rank tail chunks).
 
     Zero-copy contract: rank blobs are memoryview slices of the stream
     (codec ``none`` stores them as-is — zero extra copies between the
@@ -975,6 +1079,8 @@ def encode_state(
     """
     stream, leaves = serialize_tree(state, pool=pool)
     total = len(stream)
+    if chunk_aligned and rank_sizes is None and chunk_size > 0:
+        rank_sizes = chunk_aligned_sizes(total, cluster.world_size, chunk_size)
     parts = split_ranks(total, cluster.world_size, sizes=rank_sizes)
     base_ok = (
         base is not None
@@ -1025,6 +1131,96 @@ def encode_state(
         ),
     )
     return EncodedState(step=step, stream=stream, blobs=blobs, manifest=man)
+
+
+def encode_state_staged(
+    step: int,
+    cluster: ClusterSpec,
+    *,
+    stream: Buffer,
+    leaves: List[LeafEntry],
+    chunk_size: int,
+    base_step: Optional[int],
+    dirty: Optional[np.ndarray],
+    deltas: Optional[Dict[int, np.ndarray]],
+    digests: np.ndarray,
+    pool: Optional[Executor] = None,
+    rank_sink: Optional[Any] = None,
+) -> EncodedState:
+    """Encode a checkpoint from device pre-codec staging buffers.
+
+    The staged twin of :func:`encode_state` for ``zstd+delta``: the
+    pytree was already serialized on device (``stream`` is the staged
+    host copy, ``leaves`` its table) and the fused pass already chunked
+    it — ``dirty`` is the global per-chunk mask, ``deltas`` maps dirty
+    global chunk indices to their XOR payloads, and ``digests`` the
+    per-chunk raw digests that become the manifest's digest column.
+
+    The rank split is :func:`chunk_aligned_sizes`, so global chunk
+    ``i`` is exactly within-rank chunk ``i - off // chunk_size`` of its
+    owner and the mask/payloads slice straight into each rank's
+    :func:`encode_rank_chunks` call.  With ``base_step=None`` (anchor
+    saves, or a device base miss) each rank encodes through the plain
+    no-base host path — the stored blobs stay byte-identical to a host
+    ``encode_state`` of the same stream over the same split.
+    """
+    total = len(stream)
+    n_chunks = -(-total // chunk_size) if total else 0
+    digests = np.asarray(digests, np.uint64)
+    if len(digests) != n_chunks:
+        raise ValueError(
+            f"staged digests cover {len(digests)} chunks, stream has {n_chunks}"
+        )
+    delta_mode = base_step is not None
+    if delta_mode and (dirty is None or len(dirty) != n_chunks):
+        raise ValueError("staged delta encode requires a full dirty mask")
+    parts = split_ranks(
+        total, cluster.world_size,
+        sizes=chunk_aligned_sizes(total, cluster.world_size, chunk_size),
+    )
+    impl = default_codec_impl()
+
+    def encode_rank(job: Tuple[int, int, int]):
+        r, off, size = job
+        raw = stream[off : off + size]
+        if delta_mode and size:
+            c0 = off // chunk_size
+            nc = -(-size // chunk_size)
+            d = dirty[c0 : c0 + nc]
+            x = [deltas[c0 + i] if d[i] else None for i in range(nc)]
+            b, cols = encode_rank_chunks(
+                raw, None, "zstd+delta", chunk_size, impl, dirty=d, deltas=x
+            )
+        else:
+            b, cols = encode_rank_chunks(raw, None, "zstd+delta", chunk_size, impl)
+        entry = RankEntry(
+            rank=r, offset=off, raw_size=size, stored_size=len(b),
+            crc=crc32(b),
+        )
+        if rank_sink is not None:
+            rank_sink(r, b)
+        return b, entry, cols
+
+    jobs = [(r, off, size) for r, (off, size) in enumerate(parts)]
+    results = _run_grouped(pool, encode_rank, jobs)
+    table = ChunkTable.from_rank_lists([c for _, _, c in results])
+    table.digest = digests
+    man = Manifest(
+        step=step,
+        total_raw_bytes=total,
+        codec="zstd+delta",
+        base_step=base_step,
+        world_size=cluster.world_size,
+        procs_per_node=cluster.procs_per_node,
+        leaves=leaves,
+        ranks=[e for _, e, _ in results],
+        codec_impl=impl,
+        chunk_size=chunk_size,
+        chunks=table,
+    )
+    return EncodedState(
+        step=step, stream=stream, blobs=[b for b, _, _ in results], manifest=man
+    )
 
 
 def decode_stream(
@@ -1109,7 +1305,13 @@ def decode_stream(
             decode_chunk_into(
                 out[g : g + rl], views[r][so : so + sl], flag,
                 int(table.crc[row]), rl, base_seg, impl,
-                verify=verify, what=f"rank {r} chunk {row - int(table.rank_starts[r])}",
+                verify=verify,
+                digest=(
+                    int(table.digest[row])
+                    if (verify and table.digest is not None)
+                    else None
+                ),
+                what=f"rank {r} chunk {row - int(table.rank_starts[r])}",
             )
 
         run(decode_chunk, list(range(len(table))))

@@ -8,12 +8,20 @@ pure-numpy/jnp oracles in each ``ref.py``.
 """
 from repro.kernels.checksum import checksum_u32, digest_array, digest_bytes
 from repro.kernels.delta import xor_delta
+from repro.kernels.fused import (
+    digests_from_meta,
+    dirty_from_meta,
+    fused_precodec,
+)
 from repro.kernels.quantize import dequantize, quantize
 
 __all__ = [
     "checksum_u32",
     "digest_array",
     "digest_bytes",
+    "digests_from_meta",
+    "dirty_from_meta",
+    "fused_precodec",
     "xor_delta",
     "quantize",
     "dequantize",

@@ -1,0 +1,19 @@
+from repro.kernels.fused.fused import TILE, fused_chunk_tiles
+from repro.kernels.fused.ops import (
+    CHUNK_ALIGN,
+    digests_from_meta,
+    dirty_from_meta,
+    fused_precodec,
+)
+from repro.kernels.fused.ref import chunk_digests_ref, fused_ref
+
+__all__ = [
+    "CHUNK_ALIGN",
+    "TILE",
+    "chunk_digests_ref",
+    "digests_from_meta",
+    "dirty_from_meta",
+    "fused_chunk_tiles",
+    "fused_precodec",
+    "fused_ref",
+]

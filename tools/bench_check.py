@@ -36,7 +36,14 @@ Per-file schema (top level: ``benchmark`` string + non-empty ``rows``):
   saves, zero retry giveups, ``drained`` and ``byte_identical`` true,
   all five strategies covered; the ``hedged_restore`` row
   byte-identical with ``hedged_p99_s < unhedged_p99_s`` and at least
-  one hedge win; the ``outage_summary`` row with zero violations.
+  one hedge win; the ``outage_summary`` row with zero violations;
+* ``BENCH_kernel.json``  — kernel micro rows + fused-pass rows; every
+  ``fused`` row must record ``speedup >= 1`` over the per-kernel chain;
+* ``BENCH_precodec.json`` — device pre-codec rows (ISSUE 9): the
+  device ``precodec_save`` row of the largest geometry must record the
+  blocking-window bar ``speedup >= 2``; every ``dirty_parity`` row
+  stored bytes within 1% of the host delta path; ``restore_equivalence``
+  rows identical across all five aggregation strategies.
 
 Exit code 0 = all good; 1 = any file missing/malformed (messages on
 stderr).  Run as ``python tools/bench_check.py [root]``.
@@ -80,6 +87,14 @@ EXPECTED = {
     ),
     "BENCH_outage.json": (
         "outage",
+        set(),  # rows are heterogeneous; per-kind fields checked below
+    ),
+    "BENCH_kernel.json": (
+        "kernel_bench",
+        set(),  # rows are heterogeneous; per-kind fields checked below
+    ),
+    "BENCH_precodec.json": (
+        "precodec_device",
         set(),  # rows are heterogeneous; per-kind fields checked below
     ),
 }
@@ -144,6 +159,22 @@ SERVE_KIND_FIELDS = {
                  "swap_latency_s"},
 }
 
+KERNEL_KIND_FIELDS = {
+    "kernel": {"config", "name", "state_bytes", "time_us"},
+    "fused": {"config", "state_bytes", "chunk_bytes", "n_chunks", "fused_s",
+              "per_kernel_s", "oracle_s", "speedup"},
+}
+
+PRECODEC_KIND_FIELDS = {
+    "precodec_save": {"config", "n_ranks", "precodec", "state_bytes",
+                      "chunk_bytes", "dirty_frac", "path", "save_s",
+                      "stage_s", "stored_ratio"},
+    "dirty_parity": {"config", "n_ranks", "state_bytes", "dirty_frac",
+                     "host_stored", "device_stored", "rel_err"},
+    "restore_equivalence": {"config", "strategy", "state_bytes", "restore_s",
+                            "byte_identical"},
+}
+
 ALL_STRATEGIES = {
     "file_per_process", "posix", "mpiio", "stripe_aligned", "gio_sync"
 }
@@ -152,6 +183,9 @@ ALL_FAULT_KINDS = {
 }
 
 SAVE_SPEEDUP_BAR = 3.0
+KERNEL_FUSED_BAR = 1.0          # fused pass >= unfused chain (ISSUE 9b)
+PRECODEC_SPEEDUP_BAR = 2.0      # device blocking window vs host (ISSUE 9)
+PRECODEC_PARITY_BAR = 0.01      # dirty-sweep stored-byte rel_err < this
 SUPERSESSION_SKIP_BAR = 0.5     # skipped_frac >= this (ISSUE 5a)
 RESUME_REWRITE_BAR = 0.25       # rewrite_frac < this (ISSUE 5b)
 CHAOS_MIN_SCHEDULES = 100       # full-sweep size floor (ISSUE 6)
@@ -182,7 +216,8 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
     for i, row in enumerate(rows):
         need = set(fields)
         if benchmark in ("restore_scale", "codec_phase", "flush_runtime",
-                         "chaos", "serve_fleet", "outage"):
+                         "chaos", "serve_fleet", "outage", "kernel_bench",
+                         "precodec_device"):
             kinds = {
                 "restore_scale": RESTORE_KIND_FIELDS,
                 "codec_phase": CODEC_KIND_FIELDS,
@@ -190,6 +225,8 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
                 "chaos": CHAOS_KIND_FIELDS,
                 "serve_fleet": SERVE_KIND_FIELDS,
                 "outage": OUTAGE_KIND_FIELDS,
+                "kernel_bench": KERNEL_KIND_FIELDS,
+                "precodec_device": PRECODEC_KIND_FIELDS,
             }[benchmark]
             kind = row.get("kind")
             if kind not in kinds:
@@ -253,6 +290,12 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
                 f"{sorted(ALL_STRATEGIES - covered)}", errors,
             )
 
+    if benchmark == "kernel_bench" and not errors:
+        check_kernel(path, rows, errors)
+
+    if benchmark == "precodec_device" and not errors:
+        check_precodec(path, rows, errors)
+
     if benchmark == "serve_fleet" and not errors:
         check_serve(path, rows, errors)
 
@@ -310,6 +353,61 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
                 f"{sorted(ALL_STRATEGIES - set(s['strategies_covered']))}",
                 errors,
             )
+
+
+def check_kernel(path: Path, rows: list, errors: list) -> None:
+    fused = [r for r in rows if r.get("kind") == "fused"]
+    if not fused:
+        return fail(f"{path.name}: no fused rows", errors)
+    for r in fused:
+        if r["speedup"] < KERNEL_FUSED_BAR:
+            fail(
+                f"{path.name}: {r['config']} fused speedup {r['speedup']}x < "
+                f"{KERNEL_FUSED_BAR}x bar (one launch must beat the "
+                "per-kernel chain)", errors,
+            )
+
+
+def check_precodec(path: Path, rows: list, errors: list) -> None:
+    saves = [r for r in rows if r.get("kind") == "precodec_save"
+             and r.get("path") == "device"]
+    parity = [r for r in rows if r.get("kind") == "dirty_parity"]
+    equiv = [r for r in rows if r.get("kind") == "restore_equivalence"]
+    if not saves:
+        fail(f"{path.name}: no device precodec_save rows", errors)
+    if any("speedup" not in r or "overlap_frac" not in r for r in saves):
+        return fail(
+            f"{path.name}: device rows must carry 'speedup' + 'overlap_frac'",
+            errors,
+        )
+    if saves:
+        largest = max(saves, key=lambda r: (r["n_ranks"], r["state_bytes"]))
+        if largest["speedup"] < PRECODEC_SPEEDUP_BAR:
+            fail(
+                f"{path.name}: largest geometry {largest['config']} blocking-"
+                f"window speedup {largest['speedup']}x < "
+                f"{PRECODEC_SPEEDUP_BAR}x acceptance bar", errors,
+            )
+    if not parity:
+        fail(f"{path.name}: no dirty_parity rows", errors)
+    for r in parity:
+        if r["rel_err"] > PRECODEC_PARITY_BAR:
+            fail(
+                f"{path.name}: dirty={r['dirty_frac']} stored-byte rel_err "
+                f"{r['rel_err']} > {PRECODEC_PARITY_BAR} bar", errors,
+            )
+    for r in equiv:
+        if not r["byte_identical"]:
+            fail(
+                f"{path.name}: {r['strategy']} device restore is not "
+                "identical to the host path", errors,
+            )
+    covered = {r["strategy"] for r in equiv}
+    if not ALL_STRATEGIES <= covered:
+        fail(
+            f"{path.name}: restore_equivalence rows missing strategies "
+            f"{sorted(ALL_STRATEGIES - covered)}", errors,
+        )
 
 
 def check_serve(path: Path, rows: list, errors: list) -> None:

@@ -2,7 +2,7 @@
 """Docs↔code sync checker (CI gate; stdlib + the package itself).
 
 Every backtick-quoted dotted ``repro.*`` reference in README.md,
-EXPERIMENTS.md and docs/*.md must actually resolve: the longest
+EXPERIMENTS.md, ROADMAP.md and docs/*.md must actually resolve: the longest
 importable module prefix is imported and the remaining parts are
 resolved with ``getattr`` (classes, functions, methods, dataclass
 attributes).  Docs that name a module, class or function the code no
@@ -25,7 +25,7 @@ from pathlib import Path
 # tolerated and stripped.
 TOKEN_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)(?:\(\))?\.?`")
 
-DEFAULT_FILES = ["README.md", "EXPERIMENTS.md"]
+DEFAULT_FILES = ["README.md", "EXPERIMENTS.md", "ROADMAP.md"]
 DEFAULT_GLOBS = ["docs/*.md"]
 
 
