@@ -1,0 +1,497 @@
+"""Multi-tenant control-plane traffic replay (ISSUE 10 acceptance harness).
+
+Drives one :class:`~repro.control.ControlPlane` — one PFS root, one
+admission budget, one fair-share bandwidth cap — with a seeded,
+replayable traffic trace of >= 100 concurrent clients spread over
+>= 8 tenants, interleaving save / restore / GC, and records:
+
+* ``replay``      — zero failed saves, per-tenant byte-identical final
+  restores, p50/p99 *blocking* save latency (the training-loop stall,
+  not the async drain);
+* ``fairness``    — equal-weight tenants saturating one
+  ``flush_bw_cap``: per-tenant achieved flush throughput and the Jain
+  fairness index (gated >= 0.9), plus a weighted 2:1 split for the
+  priced-priority record;
+* ``utilization`` — aggregate PFS MB/s through the arbitrated plane vs
+  N independent unthrottled managers on private roots (gated >= 0.8x:
+  arbitration must not burn real bandwidth);
+* ``preemption``  — a high-priority tenant preempts a queued
+  low-priority flush; the cluster budget is never exceeded and the
+  parked flush still drains to ``flush_done`` byte-identically;
+* ``tenant_chaos`` — a PFS outage pinned to one tenant's flush: the
+  shared breaker opens, the other tenant's saves never fail, and the
+  post-heal drain publishes the higher-priority tenant first;
+* ``control_summary`` — the CI-gated aggregate
+  (``tools/bench_check.py``: Jain >= 0.9, zero failed saves,
+  utilization >= 0.8, >= 100 clients / >= 8 tenants on a full run).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/control_plane.py                 # full
+    PYTHONPATH=src python benchmarks/control_plane.py --quick         # CI smoke
+    PYTHONPATH=src python benchmarks/control_plane.py --out BENCH_control.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.control import ControlPlane  # noqa: E402
+from repro.core import (  # noqa: E402
+    CheckpointConfig,
+    CheckpointManager,
+    ClusterSpec,
+)
+from repro.core.faults import FaultPlan  # noqa: E402
+
+MiB = 1 << 20
+STRATEGIES = ["posix", "file_per_process", "mpiio", "stripe_aligned"]
+
+
+def cluster() -> ClusterSpec:
+    return ClusterSpec(n_nodes=2, procs_per_node=2)
+
+
+def tenant_state(name: str, step: int, kb: int = 32) -> Dict[str, np.ndarray]:
+    seed = (hash(name) & 0xFFFF) * 1000 + step
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((kb * 1024 // 8,)).astype(np.float64),
+        "s": np.full((16,), step, np.int32),
+    }
+
+
+def trees_equal(a: Dict, b: Dict) -> bool:
+    return set(a) == set(b) and all(
+        np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a
+    )
+
+
+def jain(xs: List[float]) -> float:
+    x = np.asarray(xs, float)
+    if not len(x) or not x.sum():
+        return 0.0
+    return float(x.sum() ** 2 / (len(x) * (x * x).sum()))
+
+
+# ---------------------------------------------------------------------------
+# traffic replay
+# ---------------------------------------------------------------------------
+
+
+def run_replay(
+    root: str, *, n_tenants: int, clients_per_tenant: int,
+    saves_per_client: int, seed: int,
+) -> Dict[str, Any]:
+    """Seeded trace: every client interleaves saves (serialized per
+    tenant — training steps are ordered), restores and GC-inducing
+    churn against ONE plane."""
+    cp = ControlPlane(root, max_pending_flushes=4 * n_tenants)
+    names = [f"tenant{i:02d}" for i in range(n_tenants)]
+    for i, n in enumerate(names):
+        cp.register_job(
+            n, cluster(), priority=1.0 + (i % 3), keep_n=4,
+            strategy=STRATEGIES[i % len(STRATEGIES)], codec="none",
+        )
+    step_alloc = {n: 0 for n in names}
+    save_lock = {n: threading.Lock() for n in names}
+    latencies: List[float] = []
+    lat_lock = threading.Lock()
+    failures: List[str] = []
+
+    def client(tenant: str, cid: int) -> None:
+        rng = np.random.default_rng(seed * 7919 + hash(tenant) % 1000 + cid)
+        m = cp.manager(tenant)
+        try:
+            for _ in range(saves_per_client):
+                with save_lock[tenant]:
+                    step_alloc[tenant] += 1
+                    s = step_alloc[tenant]
+                    t0 = time.perf_counter()
+                    m.save(s, tenant_state(tenant, s))
+                    dt = time.perf_counter() - t0
+                with lat_lock:
+                    latencies.append(dt)
+                op = rng.random()
+                if op < 0.3:  # interleaved restore under live flush traffic
+                    got_s, got = m.restore(tenant_state(tenant, 0))
+                    if not trees_equal(got, tenant_state(tenant, got_s)):
+                        failures.append(f"{tenant}: restore mismatch @ {got_s}")
+                elif op < 0.5:
+                    cp.list_steps(tenant)
+        except BaseException as e:
+            failures.append(f"{tenant}/c{cid}: {type(e).__name__}: {e}")
+
+    threads = [
+        threading.Thread(target=client, args=(n, c))
+        for n in names
+        for c in range(clients_per_tenant)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for n in names:
+        cp.manager(n).wait()
+    elapsed = time.perf_counter() - t0
+    byte_identical = True
+    for n in names:
+        if cp.manager(n).flush_errors:
+            failures.append(f"{n}: flush_errors")
+        got_s, got = cp.manager(n).restore(tenant_state(n, 0))
+        if not trees_equal(got, tenant_state(n, got_s)):
+            byte_identical = False
+            failures.append(f"{n}: final restore mismatch @ {got_s}")
+        steps = cp.list_steps(n)
+        if len(steps) > 4:  # keep_n=4 GC ran under churn
+            failures.append(f"{n}: GC left {len(steps)} steps")
+    cp.close()
+    lat = np.asarray(latencies)
+    return {
+        "kind": "replay",
+        "n_tenants": n_tenants,
+        "n_clients": n_tenants * clients_per_tenant,
+        "n_saves": int(len(lat)),
+        "failed_saves": len(failures),
+        "failures": failures[:8],
+        "byte_identical": byte_identical,
+        "p50_blocking_save_s": round(float(np.percentile(lat, 50)), 6),
+        "p99_blocking_save_s": round(float(np.percentile(lat, 99)), 6),
+        "elapsed_s": round(elapsed, 4),
+    }
+
+
+# ---------------------------------------------------------------------------
+# fairness under one saturated cap
+# ---------------------------------------------------------------------------
+
+
+def run_fairness(
+    root: str, *, n_tenants: int, weights: List[float], cap: float,
+    per_tenant_bytes: int,
+) -> Dict[str, Any]:
+    cp = ControlPlane(root, flush_bw_cap=cap,
+                      max_pending_flushes=2 * n_tenants)
+    mgrs = [
+        cp.register_job(f"fair{i}", cluster(), priority=weights[i],
+                        strategy="posix", codec="none")
+        for i in range(n_tenants)
+    ]
+    state = {"w": np.ones(per_tenant_bytes // 8, np.float64)}
+    barrier = threading.Barrier(n_tenants)
+
+    def run(m: CheckpointManager) -> None:
+        barrier.wait()  # all tenants saturate the cap together
+        m.save(1, state)
+        m.wait()
+
+    threads = [threading.Thread(target=run, args=(m,)) for m in mgrs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    mbps = []
+    for m in mgrs:
+        fl = m.stats[0].flush
+        mbps.append(per_tenant_bytes / max(1e-9, fl.duration) / MiB)
+    cp.close()
+    return {
+        "kind": "fairness",
+        "n_tenants": n_tenants,
+        "weights": weights,
+        "flush_bw_cap_mbps": round(cap / MiB, 3),
+        "per_tenant_bytes": per_tenant_bytes,
+        "per_tenant_mbps": [round(x, 3) for x in mbps],
+        "jain_index": round(jain(mbps), 4),
+    }
+
+
+# ---------------------------------------------------------------------------
+# aggregate utilization: arbitrated plane vs independent managers
+# ---------------------------------------------------------------------------
+
+
+def run_utilization(
+    workdir: str, *, n_tenants: int, saves: int, per_save_bytes: int,
+) -> Dict[str, Any]:
+    def drive(make_mgr) -> float:
+        mgrs = [make_mgr(i) for i in range(n_tenants)]
+        barrier = threading.Barrier(n_tenants)
+
+        def run(m):
+            barrier.wait()
+            for s in range(1, saves + 1):
+                m.save(s, {"w": np.full(per_save_bytes // 8, s, np.float64)})
+            m.wait()
+
+        threads = [threading.Thread(target=run, args=(m,)) for m in mgrs]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        elapsed = time.perf_counter() - t0
+        for m in mgrs:
+            assert m.flush_errors == []
+            m.close()
+        return elapsed
+
+    # baseline: N unthrottled managers, private roots, private budgets
+    base_elapsed = drive(lambda i: CheckpointManager(CheckpointConfig(
+        root=f"{workdir}/solo{i}", cluster=cluster(), strategy="posix",
+        codec="none", max_pending_flushes=2,
+    )))
+    # control plane: same traffic through one arbitrated runtime (no bw
+    # cap — the question is whether arbitration itself costs bandwidth)
+    cp = ControlPlane(f"{workdir}/plane", max_pending_flushes=2 * n_tenants)
+    regs = [
+        cp.register_job(f"util{i}", cluster(), strategy="posix", codec="none")
+        for i in range(n_tenants)
+    ]
+    ctrl_elapsed = drive(lambda i: regs[i])
+    cp.close()
+    total = n_tenants * saves * per_save_bytes
+    base_mbps = total / base_elapsed / MiB
+    ctrl_mbps = total / ctrl_elapsed / MiB
+    return {
+        "kind": "utilization",
+        "n_tenants": n_tenants,
+        "total_bytes": total,
+        "baseline_mbps": round(base_mbps, 2),
+        "control_mbps": round(ctrl_mbps, 2),
+        "utilization_frac": round(ctrl_mbps / base_mbps, 4),
+    }
+
+
+# ---------------------------------------------------------------------------
+# preemption + chaos scenarios
+# ---------------------------------------------------------------------------
+
+
+def run_preemption(root: str) -> Dict[str, Any]:
+    cp = ControlPlane(root, flush_bw_cap=4 * MiB, max_pending_flushes=2)
+    lo = cp.register_job("lo", cluster(), priority=1.0, strategy="posix",
+                         codec="none", health_tick=0.05)
+    hi = cp.register_job("hi", cluster(), priority=10.0, strategy="posix",
+                         codec="none", health_tick=0.05)
+    max_held = [0]
+    stop = threading.Event()
+
+    def watch():
+        while not stop.is_set():
+            max_held[0] = max(max_held[0], cp.admission.held())
+            time.sleep(0.002)
+
+    w = threading.Thread(target=watch)
+    w.start()
+    lo.save(1, tenant_state("lo", 1, kb=2048))   # mid-flight under the cap
+    lo.save(2, tenant_state("lo", 2, kb=64))     # queued: the victim
+    t0 = time.perf_counter()
+    hi.save(1, tenant_state("hi", 1, kb=64))
+    hi_blocked_s = time.perf_counter() - t0
+    deadline = time.monotonic() + 60
+    while lo.step_status(2) != "flush_done" and time.monotonic() < deadline:
+        time.sleep(0.05)
+    lo.wait(), hi.wait()
+    stop.set()
+    w.join()
+    got_s, got = lo.restore(tenant_state("lo", 0, kb=64))
+    row = {
+        "kind": "preemption",
+        "budget": 2,
+        "max_held": max_held[0],
+        "budget_exceeded": max_held[0] > 2,
+        "preemptions": cp.admission.preemptions,
+        "hi_blocked_s": round(hi_blocked_s, 4),
+        "victim_final_status": lo.step_status(2),
+        "byte_identical": (
+            got_s == 2 and trees_equal(got, tenant_state("lo", 2, kb=64))
+        ),
+    }
+    cp.close()
+    return row
+
+
+def run_tenant_chaos(root: str) -> Dict[str, Any]:
+    plans = FaultPlan.generate_fleet(11, 2, victim=0, outage_ops=10**9,
+                                     max_index=1)
+    cp = ControlPlane(root, max_pending_flushes=8,
+                      health_min_ops=2, health_cooldown=0.05)
+    common = dict(strategy="posix", codec="none",
+                  retry_base_delay=0.001, retry_max_delay=0.002,
+                  health_min_ops=2, health_cooldown=0.05, health_tick=10.0)
+    vic = cp.register_job("victim", cluster(), priority=1.0,
+                          faults=plans[0], **common)
+    oth = cp.register_job("other", cluster(), priority=5.0,
+                          faults=plans[1], **common)
+    vic.faults.arm("save")
+    done_order: List[str] = []
+    cp.subscribe("victim", lambda s: done_order.append("victim"))
+    cp.subscribe("other", lambda s: done_order.append("other"))
+    other_failed = 0
+    vic.save(1, tenant_state("victim", 1))
+    deadline = time.monotonic() + 30
+    while cp.health_state() == "closed" and time.monotonic() < deadline:
+        time.sleep(0.01)
+    try:
+        oth.save(1, tenant_state("other", 1))
+    except Exception:
+        other_failed += 1
+    deadline = time.monotonic() + 30
+    while (not (vic.health().parked_steps and oth.health().parked_steps)
+           and time.monotonic() < deadline):
+        time.sleep(0.01)
+    plans[0].heal()
+    plans[0].disarm()
+    order: List[str] = []
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline:
+        order = cp.drain()
+        if (vic.step_status(1) == "flush_done"
+                and oth.step_status(1) == "flush_done"):
+            break
+        time.sleep(0.05)
+    got_s, got = oth.restore(tenant_state("other", 0))
+    row = {
+        "kind": "tenant_chaos",
+        "victim": "victim",
+        "breaker_shared": True,
+        "other_failed_saves": other_failed,
+        "other_flush_errors": len(oth.flush_errors),
+        "other_giveups": oth.retry.giveups,
+        "drained": (vic.step_status(1) == "flush_done"
+                    and oth.step_status(1) == "flush_done"),
+        "drain_priority_ok": (
+            order == ["other", "victim"]
+            and bool(done_order) and done_order[0] == "other"
+        ),
+        "byte_identical": (
+            got_s == 1 and trees_equal(got, tenant_state("other", 1))
+        ),
+    }
+    cp.close()
+    return row
+
+
+# ---------------------------------------------------------------------------
+# sweep + summary
+# ---------------------------------------------------------------------------
+
+
+def summarize(rows: List[Dict[str, Any]], quick: bool) -> Dict[str, Any]:
+    replay = next(r for r in rows if r["kind"] == "replay")
+    fair = [r for r in rows if r["kind"] == "fairness"]
+    equal = next(r for r in fair if len(set(r["weights"])) == 1)
+    util = next(r for r in rows if r["kind"] == "utilization")
+    pre = next(r for r in rows if r["kind"] == "preemption")
+    chaos = next(r for r in rows if r["kind"] == "tenant_chaos")
+    return {
+        "kind": "control_summary",
+        "n_tenants": replay["n_tenants"],
+        "n_clients": replay["n_clients"],
+        "failed_saves": replay["failed_saves"],
+        "byte_identical": (
+            replay["byte_identical"] and pre["byte_identical"]
+            and chaos["byte_identical"]
+        ),
+        "p99_blocking_save_s": replay["p99_blocking_save_s"],
+        "jain_index": equal["jain_index"],
+        "utilization_frac": util["utilization_frac"],
+        "preemptions": pre["preemptions"],
+        "budget_exceeded": pre["budget_exceeded"],
+        "chaos_isolated": (
+            chaos["other_failed_saves"] == 0
+            and chaos["other_flush_errors"] == 0
+            and chaos["drained"]
+        ),
+        "quick": quick,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke (small trace)")
+    ap.add_argument("--out", type=str, default=None, help="write BENCH json here")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    n_tenants = 8
+    clients = 4 if args.quick else 13           # 32 quick / 104 full clients
+    saves = 2 if args.quick else 3
+    rows: List[Dict[str, Any]] = []
+    with tempfile.TemporaryDirectory(prefix="ctl_") as workdir:
+        rows.append(run_replay(
+            f"{workdir}/replay", n_tenants=n_tenants,
+            clients_per_tenant=clients, saves_per_client=saves,
+            seed=args.seed,
+        ))
+        nf = 2 if args.quick else 4
+        rows.append(run_fairness(
+            f"{workdir}/fair_eq", n_tenants=nf, weights=[1.0] * nf,
+            cap=4.0 * nf * MiB, per_tenant_bytes=4 * MiB,
+        ))
+        rows.append(run_fairness(
+            f"{workdir}/fair_w", n_tenants=2, weights=[2.0, 1.0],
+            cap=6 * MiB, per_tenant_bytes=4 * MiB,
+        ))
+        rows.append(run_utilization(
+            workdir, n_tenants=4, saves=1 if args.quick else 3,
+            per_save_bytes=2 * MiB,
+        ))
+        rows.append(run_preemption(f"{workdir}/preempt"))
+        rows.append(run_tenant_chaos(f"{workdir}/chaos"))
+    summary = summarize(rows, args.quick)
+    rows.append(summary)
+    print(json.dumps(summary, indent=1))
+
+    ok = (
+        summary["failed_saves"] == 0
+        and summary["byte_identical"]
+        and not summary["budget_exceeded"]
+        and summary["preemptions"] >= 1
+        and summary["chaos_isolated"]
+    )
+    if not args.quick:
+        # full-run acceptance bars (quick traces are too small/noisy)
+        if summary["n_clients"] < 100 or summary["n_tenants"] < 8:
+            print("control: trace below 100 clients / 8 tenants",
+                  file=sys.stderr)
+            ok = False
+        if summary["jain_index"] < 0.9:
+            print(f"control: jain {summary['jain_index']} < 0.9",
+                  file=sys.stderr)
+            ok = False
+        if summary["utilization_frac"] < 0.8:
+            print(
+                f"control: utilization {summary['utilization_frac']} < 0.8x "
+                "the unarbitrated baseline", file=sys.stderr,
+            )
+            ok = False
+    if args.out:
+        doc = {"benchmark": "control_plane", "quick": args.quick, "rows": rows}
+        Path(args.out).write_text(json.dumps(doc, indent=1) + "\n")
+        print(f"wrote {args.out}")
+    if not ok:
+        for r in rows:
+            for f in r.get("failures", []):
+                print(f"control: {f}", file=sys.stderr)
+        return 1
+    print(
+        f"control: OK ({summary['n_clients']} clients / "
+        f"{summary['n_tenants']} tenants, zero failed saves)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

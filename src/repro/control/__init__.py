@@ -1,0 +1,30 @@
+"""Multi-tenant checkpoint control plane.
+
+Public surface:
+
+* :class:`~repro.control.plane.ControlPlane` — register/attach jobs,
+  list/pin steps, per-tenant GC policy, cross-geometry restore, and the
+  shared arbitration runtime (bandwidth quotas, admission, breaker).
+* :class:`~repro.core.admission.AdmissionController` — the cluster-wide
+  pending-flush budget with priority preemption (re-exported; it lives
+  in ``core`` so the engine can default to a private instance).
+* :class:`~repro.core.storage.FairShareLimiter` /
+  :func:`~repro.core.storage.fair_share_rates` — the hierarchical
+  token-bucket quota layer (re-exported from ``core.storage``).
+"""
+from repro.control.plane import ControlPlane, JobRecord
+from repro.core.admission import AdmissionController
+from repro.core.storage import (
+    FairShareLimiter,
+    TenantLimiter,
+    fair_share_rates,
+)
+
+__all__ = [
+    "ControlPlane",
+    "JobRecord",
+    "AdmissionController",
+    "FairShareLimiter",
+    "TenantLimiter",
+    "fair_share_rates",
+]

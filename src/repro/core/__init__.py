@@ -10,6 +10,7 @@ Public API:
 * :func:`~repro.core.sim.simulate_flush` — price a plan on the modeled
   Theta-like machine (benchmark harness).
 """
+from repro.core.admission import AdmissionController
 from repro.core.cluster import ClusterSpec, NodeSpec, PFSSpec, theta_like
 from repro.core.engine import (
     CheckpointConfig,
@@ -57,11 +58,17 @@ from repro.core.serialize import (
     encode_state,
     serialize_tree,
 )
-from repro.core.sim import FlushSimulator, SimReport, simulate_flush
+from repro.core.sim import (
+    FlushSimulator,
+    SimReport,
+    simulate_flush,
+    simulate_flush_shared,
+)
 from repro.core.storage import (
     CancelToken,
     CircuitOpenError,
     DomainHealth,
+    FairShareLimiter,
     FlushCancelled,
     FlushJournal,
     FlushResult,
@@ -72,12 +79,15 @@ from repro.core.storage import (
     RetryPolicy,
     StorageError,
     StorageHealth,
+    TenantLimiter,
     TokenBucket,
     classify_error,
+    fair_share_rates,
 )
 from repro.core.strategies import STRATEGIES, make_plan
 
 __all__ = [
+    "AdmissionController",
     "ClusterSpec",
     "NodeSpec",
     "PFSSpec",
@@ -121,9 +131,11 @@ __all__ = [
     "FlushSimulator",
     "SimReport",
     "simulate_flush",
+    "simulate_flush_shared",
     "CancelToken",
     "CircuitOpenError",
     "DomainHealth",
+    "FairShareLimiter",
     "FlushCancelled",
     "FlushJournal",
     "FlushResult",
@@ -134,8 +146,10 @@ __all__ = [
     "RetryPolicy",
     "StorageError",
     "StorageHealth",
+    "TenantLimiter",
     "TokenBucket",
     "classify_error",
+    "fair_share_rates",
     "FaultPlan",
     "FaultSpec",
     "RepairReport",

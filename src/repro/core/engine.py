@@ -127,6 +127,7 @@ from repro.core.serialize import (
     encode_state,
     _run_grouped,
 )
+from repro.core.admission import AdmissionController
 from repro.core.faults import FaultPlan
 from repro.core.storage import (
     CancelToken,
@@ -342,6 +343,8 @@ class _FlushJob:
     token: CancelToken
     protected: bool          # delta-base anchor / keep_n-pinned
     superseded: bool = False  # set (under the manager lock) by newer saves
+    started: bool = False    # scheduler picked it up: no longer preemptible
+    preempted: bool = False  # yielded its admission slot (parked, resumable)
 
 
 # Scheduler-queue sentinel: run resume_flushes() on the flush worker
@@ -357,10 +360,20 @@ class CheckpointManager:
         *,
         fault_hook: Optional[Callable] = None,
         faults: Optional["FaultPlan"] = None,
+        limiter: Optional[Any] = None,
+        admission: Optional[AdmissionController] = None,
+        storage_health: Optional[StorageHealth] = None,
+        tenant: Optional[str] = None,
+        priority: float = 1.0,
     ):
         self.cfg = config
         self.cluster = config.cluster
         self.root = Path(config.root)
+        # Multi-tenant identity (control-plane managed runs): the
+        # tenant name labels admission snapshots/logs, the priority
+        # orders preemption and drain against co-located managers.
+        self.name = tenant if tenant is not None else str(self.root)
+        self.priority = float(priority)
         # transient-retry layer shared by L1 blob I/O and PFS extent I/O
         self.retry: Optional[RetryPolicy] = (
             RetryPolicy(
@@ -376,10 +389,17 @@ class CheckpointManager:
         # PFS circuit breaker and the degraded-mode scheduler below.
         self.storage_health: Optional[StorageHealth] = None
         if config.health_enabled and self.retry is not None:
-            self.storage_health = StorageHealth(
-                min_ops=config.health_min_ops,
-                error_threshold=config.health_error_threshold,
-                cooldown=config.health_cooldown,
+            # An injected registry (control plane) is SHARED: tenants on
+            # one PFS see one breaker — tenant A's giveups open the
+            # circuit tenant B's flushes must also respect.
+            self.storage_health = (
+                storage_health
+                if storage_health is not None
+                else StorageHealth(
+                    min_ops=config.health_min_ops,
+                    error_threshold=config.health_error_threshold,
+                    cooldown=config.health_cooldown,
+                )
             )
             self.retry.health = self.storage_health
         self.faults = faults  # deterministic chaos schedule (core/faults.py)
@@ -418,7 +438,17 @@ class CheckpointManager:
         self._man_cache: Dict[str, Tuple[Tuple[int, int, int], Manifest]] = {}
         self._MAN_CACHE_CAP = 128  # bounds RAM when keep_n is None
         self._q: "queue.Queue[Optional[_FlushJob]]" = queue.Queue()
-        self._slots = threading.BoundedSemaphore(max(1, config.max_pending_flushes))
+        # Flush admission: the seed's per-manager BoundedSemaphore let
+        # two managers on one node hold 2x the intended pending-flush
+        # budget; the controller is shared across managers when the
+        # control plane injects one (max_pending_flushes then reads as
+        # a cluster-wide budget), private otherwise (same semantics as
+        # the old semaphore, preemption never fires with one tenant).
+        self._admission: AdmissionController = (
+            admission
+            if admission is not None
+            else AdmissionController(max(1, config.max_pending_flushes))
+        )
         self._worker: Optional[threading.Thread] = None
         self._local_exec: Optional[ThreadPoolExecutor] = None
         self._flush_errors: List[Tuple[int, str]] = []
@@ -433,10 +463,19 @@ class CheckpointManager:
         self._interrupted: Deque[int] = deque(maxlen=4096)
         self._resuming: set = set()  # steps mid-resume, shielded from _gc
         self._saved_steps: List[int] = []  # trimmed in save(); keep_n pins
-        cap = self._flush_bw_policy()
-        self._limiter: Optional[TokenBucket] = (
-            TokenBucket(cap) if cap > 0 else None
-        )
+        # Operator pins (control-plane `pin`): steps GC, supersession,
+        # preemption and L1 eviction must all leave alone.
+        self._pins: set = set()
+        # Steps parked by admission preemption (not by a PFS outage):
+        # their drain additionally waits for budget headroom.
+        self._preempt_parked: set = set()
+        if limiter is not None:
+            # Injected fair-share leaf (TenantLimiter): the control
+            # plane's global cap replaces the per-manager policy.
+            self._limiter: Optional[TokenBucket] = limiter
+        else:
+            cap = self._flush_bw_policy()
+            self._limiter = TokenBucket(cap) if cap > 0 else None
         # Stats of the most recent aggregated PFS read (restore telemetry).
         self.last_read_result: Optional[ReadResult] = None
         # New-step notification: callbacks fired (with the step number)
@@ -604,10 +643,18 @@ class CheckpointManager:
                 # skipped jobs release their slots, so a fast save
                 # cadence drains the queue instead of stalling on it
                 self._supersede_stale(step)
-            self._slots.acquire()  # backpressure: bounded flush pipeline
+            # backpressure: bounded flush pipeline.  Under a shared
+            # controller this blocks on the CLUSTER budget; offering
+            # _yield_queued_flush makes this manager's queued (never
+            # mid-flight) jobs preemptible by higher-priority tenants.
+            self._admission.acquire(
+                self, priority=self.priority,
+                yield_fn=self._yield_queued_flush,
+            )
             with self._lock:
                 self._pending[step] = job
             self._q.put(job)
+            self._add_demand(plan.total_bytes)
         else:
             try:
                 st.flush = self._do_flush(job)
@@ -791,6 +838,77 @@ class CheckpointManager:
         L1 durability alone."""
         return self.cfg.codec == "zstd+delta" and man.base_step is None
 
+    # ------------------------------------------- multi-tenant control surface
+
+    def _add_demand(self, n: int) -> None:
+        """Offered-load signal for a fair-share limiter (duck-typed:
+        plain TokenBuckets have no demand and ignore rebalancing)."""
+        f = getattr(self._limiter, "add_demand", None)
+        if f is not None:
+            f(n)
+
+    def _sub_demand(self, n: int) -> None:
+        f = getattr(self._limiter, "sub_demand", None)
+        if f is not None:
+            f(n)
+
+    def pin_step(self, step: int) -> None:
+        """Pin ``step`` against GC, supersession, L1 eviction and
+        admission preemption (the control plane's ``pin`` verb)."""
+        with self._lock:
+            self._pins.add(int(step))
+
+    def unpin_step(self, step: int) -> None:
+        with self._lock:
+            self._pins.discard(int(step))
+
+    def pinned_steps(self) -> List[int]:
+        with self._lock:
+            return sorted(self._pins)
+
+    def _yield_queued_flush(self) -> bool:
+        """Admission-preemption callback: park this manager's oldest
+        queued-but-not-started flush as a journaled ``flush_partial``
+        and give its slot back to the controller.
+
+        Only *queued* jobs yield — a mid-flight flush already paid for
+        its bytes and cancelling it would waste more PFS bandwidth than
+        it frees.  The parked step keeps its placement + journal (the
+        resumable-flush machinery), so it drains through
+        :meth:`resume_flushes` once the budget has headroom again;
+        without ``resumable_flushes`` there is nothing to park *with*,
+        so this manager is simply not preemptible.  Returns True when a
+        slot was released.
+        """
+        if not self.cfg.resumable_flushes:
+            return False
+        with self._lock:
+            victim: Optional[_FlushJob] = None
+            for s in sorted(self._pending):
+                job = self._pending[s]
+                if (
+                    job.started or job.preempted or job.superseded
+                    or job.protected or s in self._pins
+                ):
+                    continue
+                victim = job
+                break
+            if victim is None:
+                return False
+            victim.preempted = True
+            self._preempt_parked.add(victim.enc.step)
+        self._park_job(
+            victim,
+            RuntimeError("admission slot preempted by a higher-priority job"),
+        )
+        self._admission.release(self)
+        log.info(
+            "flush for step %d preempted: slot yielded to a "
+            "higher-priority tenant; journaled state drains when the "
+            "budget has headroom", victim.enc.step,
+        )
+        return True
+
     def _supersede_stale(self, new_step: int) -> None:
         """Mark every stale pending flush superseded and fire its token.
 
@@ -822,18 +940,22 @@ class CheckpointManager:
             for s, job in self._pending.items():
                 if s >= new_step or job.superseded or job.protected:
                     continue
-                if s in pinned:
+                if s in pinned or s in self._pins or job.preempted:
                     continue
                 if window_floor is not None and s >= window_floor:
                     continue  # live delta window: s is a base of new_step
                 job.superseded = True
                 job.token.cancel()
             for s in list(self._parked):
-                if s >= new_step or s in pinned or s in self._l1_anchors:
+                if (
+                    s >= new_step or s in pinned or s in self._l1_anchors
+                    or s in self._pins
+                ):
                     continue
                 if window_floor is not None and s >= window_floor:
                     continue
                 self._parked.pop(s, None)
+                self._preempt_parked.discard(s)
                 parked_stale.append(s)
         for s in parked_stale:
             try:
@@ -879,7 +1001,16 @@ class CheckpointManager:
             try:
                 with self._lock:
                     skip = job.superseded
-                if skip:
+                    preempted = job.preempted
+                    if not skip and not preempted:
+                        # past this point the job is mid-flight: the
+                        # admission yield path must never park it
+                        job.started = True
+                if preempted:
+                    # already parked + slot released by the yield path;
+                    # nothing to run — the drain owns it now
+                    pass
+                elif skip:
                     self._note_superseded(step, "queued")
                 else:
                     if self._pfs_degraded():
@@ -938,7 +1069,12 @@ class CheckpointManager:
             finally:
                 with self._lock:
                     self._pending.pop(step, None)
-                self._slots.release()
+                    was_preempted = job.preempted
+                self._sub_demand(job.plan.total_bytes)
+                if not was_preempted:
+                    # a preempted job's slot was already returned by
+                    # _yield_queued_flush on the preemptor's thread
+                    self._admission.release(self)
                 self._q.task_done()
 
     def _note_superseded(self, step: int, phase: str) -> None:
@@ -1002,9 +1138,17 @@ class CheckpointManager:
         if state == "closed":
             with self._lock:
                 parked = bool(self._parked)
+                only_preempted = (
+                    parked and set(self._parked) <= self._preempt_parked
+                )
                 if not parked:
                     self._degraded_since = None
-            if parked:
+            # Preemption-parked steps additionally wait for budget
+            # headroom: draining them the instant they parked would
+            # hand the yielded bandwidth straight back to the victim.
+            if parked and not (
+                only_preempted and self._admission.available() <= 0
+            ):
                 self._drain_parked()
             return
         if state == "half_open":
@@ -1060,6 +1204,7 @@ class CheckpointManager:
                     with self._lock:
                         self._parked.pop(s, None)
             with self._lock:
+                self._preempt_parked &= set(self._parked)
                 if not self._parked:
                     self._degraded_since = None
         finally:
@@ -1179,6 +1324,8 @@ class CheckpointManager:
             window_floor = self._last_full.step
         for s in sorted(self._l1_bytes):
             if s == new_step or s in pinned or s in self._l1_anchors:
+                continue
+            if s in self._pins:
                 continue
             if s in self._pending or s in self._resuming:
                 continue
@@ -2399,7 +2546,12 @@ class CheckpointManager:
         # leavings still need reaping below the newest kept checkpoint.
         if keep is None or not pfs_steps:
             return
-        kept = set(pfs_steps[-keep:])
+        with self._lock:
+            pins = set(self._pins)
+        # Operator pins widen retention beyond the keep_n window: a
+        # pinned step (and, via the chain walk below, its delta bases)
+        # survives GC until unpinned, whatever its age.
+        kept = set(pfs_steps[-keep:]) | pins
         # Retain delta bases of kept steps.  The chain must traverse
         # *any* surviving manifest, not just flush_done ones: under
         # supersession a base step's PFS manifest may be superseded (or

@@ -423,6 +423,67 @@ class FaultPlan:
             )
         return FaultPlan(specs, seed=seed)
 
+    @staticmethod
+    def generate_fleet(
+        seed: int,
+        n_tenants: int,
+        *,
+        victim: Optional[int] = None,
+        outage_duration: float = 0.0,
+        outage_ops: int = 24,
+        transient_rate: float = 0.25,
+        max_index: int = 40,
+    ) -> List["FaultPlan"]:
+        """Per-tenant schedules for the multi-tenant (control-plane)
+        path, derived from ONE seed.
+
+        One tenant — ``victim``, or a seeded pick — gets a windowed PFS
+        ``outage`` (wall-clock ``outage_duration`` seconds, or
+        ``outage_ops`` write ops when the duration is 0) opening at a
+        seeded op index of its *own* flush stream.  Because tenants
+        share one PFS, the harness is expected to wire all tenants'
+        managers to one :class:`~repro.core.storage.StorageHealth`
+        (the control plane does): the victim's giveups open the shared
+        circuit, and the invariant under test is isolation — other
+        tenants' **L1 saves** keep succeeding (their flushes may park,
+        that is the breaker doing its job) and the post-heal drain
+        order honors tenant priority.  Non-victim tenants get either a
+        clean plan or (with probability ``transient_rate`` each) one
+        survivable L1-side transient, so the multi-tenant path also
+        sees the retry machinery without a second breaker trip.
+        """
+        if n_tenants <= 0:
+            raise ValueError("n_tenants must be positive")
+        rng = random.Random(seed)
+        v = rng.randrange(n_tenants) if victim is None else int(victim)
+        plans: List[FaultPlan] = []
+        for t in range(n_tenants):
+            if t == v:
+                specs = [
+                    FaultSpec(
+                        kind="outage",
+                        domain="pfs",
+                        op="write",
+                        index=rng.randrange(0, max(1, max_index // 2)),
+                        count=max(1, int(outage_ops)),
+                        duration=float(outage_duration),
+                    )
+                ]
+            elif rng.random() < transient_rate:
+                specs = [
+                    FaultSpec(
+                        kind="transient_eio",
+                        domain="l1",
+                        op="write",
+                        index=rng.randrange(0, max(1, max_index)),
+                        count=rng.randint(1, 2),
+                    )
+                ]
+            else:
+                specs = []
+            plans.append(FaultPlan(specs, seed=seed * 1009 + t))
+        return plans
+
 
 def inject_write(
     faults: Optional[FaultPlan],

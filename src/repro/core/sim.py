@@ -647,3 +647,60 @@ def simulate_flush(
         plan, io_threads=io_threads, rpc_size=rpc_size,
         flush_bw_cap=flush_bw_cap,
     ).run()
+
+
+def simulate_flush_shared(
+    plans: List[FlushPlan],
+    *,
+    flush_bw_cap: float,
+    weights: Optional[List[float]] = None,
+    io_threads: int = 2,
+    rpc_size: Optional[int] = None,
+) -> List[SimReport]:
+    """Multi-tenant pricing of one shared ``flush_bw_cap``.
+
+    ``plans[i]`` is tenant *i*'s concurrent flush.  The global cap is
+    split by :func:`repro.core.storage.fair_share_rates` — each
+    tenant's *demand* is the bandwidth its flush would sustain
+    unthrottled (its uncapped sim), its *weight* the operator
+    priority — and tenant *i* is then priced exactly like a single-job
+    ``flush_bw_cap`` equal to its granted share.  This is the fluid
+    twin of the runtime's hierarchical token buckets
+    (:class:`repro.core.storage.FairShareLimiter`): both layers reduce
+    a tenant's view of the shared PFS to "one private cap of my
+    granted rate", so the single-job sim-vs-real throttle equivalence
+    carries over tenant by tenant.
+
+    A zero/negative cap means unthrottled: every plan is simulated
+    independently (no shared resource to split).
+    """
+    from repro.core.storage import fair_share_rates
+
+    if not plans:
+        return []
+    w = list(weights) if weights is not None else [1.0] * len(plans)
+    if len(w) != len(plans):
+        raise ValueError("weights must match plans")
+    base = [
+        simulate_flush(p, io_threads=io_threads, rpc_size=rpc_size)
+        for p in plans
+    ]
+    if flush_bw_cap <= 0:
+        return base
+    demands = [
+        min(b.flush_bw, 1e30) if p.total_bytes > 0 else 0.0
+        for p, b in zip(plans, base)
+    ]
+    rates = fair_share_rates(w, demands, flush_bw_cap)
+    out: List[SimReport] = []
+    for i, (p, b, r) in enumerate(zip(plans, base, rates)):
+        if p.total_bytes <= 0 or r >= demands[i] - 1e-9:
+            out.append(b)  # its own demand binds before the quota does
+        else:
+            out.append(
+                simulate_flush(
+                    p, io_threads=io_threads, rpc_size=rpc_size,
+                    flush_bw_cap=float(r),
+                )
+            )
+    return out

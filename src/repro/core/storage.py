@@ -618,6 +618,175 @@ class TokenBucket:
                 time.sleep(delay)
             waited += delay
 
+    def set_rate(self, rate: float) -> None:
+        """Retarget the refill rate in place (fair-share rebalances).
+
+        Accrued tokens/debt are settled at the *old* rate first, so a
+        tenant cannot bank the pre-rebalance rate into a burst, and the
+        burst ceiling follows the constructor's sizing rule.
+        """
+        rate = max(1e-6, float(rate))
+        with self._lock:
+            now = time.monotonic()
+            self._tokens = min(
+                self.burst, self._tokens + (now - self._last) * self.rate
+            )
+            self._last = now
+            self.rate = rate
+            self.burst = max(1 << 20, rate / 8)
+            self._tokens = min(self._tokens, self.burst)
+
+
+def fair_share_rates(weights, demands, cap: float):
+    """Weighted max-min (water-filling) split of one byte-rate cap.
+
+    ``weights[i]`` is tenant *i*'s priority weight, ``demands[i]`` its
+    offered rate (bytes/s it could use right now; 0 = idle).  Returns
+    the granted rates: repeatedly hand every unsatisfied tenant its
+    weighted share of the leftover cap, cap each grant at the tenant's
+    remaining demand, and redistribute what saturated tenants returned.
+    Invariants (the property-tested contract of the control plane's
+    quota layer):
+
+    - ``sum(granted) <= cap`` and ``granted[i] <= demands[i]``;
+    - every backlogged tenant is granted ``> 0`` (no starvation) and
+      at least its weighted share of ``cap`` unless its own demand is
+      smaller;
+    - idle tenants are granted exactly 0 — their share is fully
+      redistributed, so ``sum(granted) == min(cap, sum(demands))``.
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    d = np.asarray(demands, dtype=np.float64)
+    if w.shape != d.shape:
+        raise ValueError("weights and demands must have the same length")
+    r = np.zeros_like(d)
+    if cap <= 0 or not len(d):
+        return r
+    active = (d > 0) & (w > 0)
+    remaining = float(cap)
+    # Each pass saturates >= 1 tenant or exhausts the cap: <= n passes.
+    while remaining > 1e-12 * max(1.0, cap) and active.any():
+        share = remaining * w[active] / w[active].sum()
+        grant = np.minimum(share, d[active] - r[active])
+        r[active] += grant
+        remaining -= float(grant.sum())
+        still = active & (r < d - 1e-9)
+        if still.sum() == active.sum():
+            break  # nobody saturated: every share was granted in full
+        active = still
+    return r
+
+
+class TenantLimiter:
+    """One tenant's leaf of a :class:`FairShareLimiter` hierarchy.
+
+    Drop-in for :class:`TokenBucket` at the executor boundary — only
+    ``acquire(n, cancel=)`` and ``wait_total`` are consumed there.  A
+    charge pays two buckets in order: the tenant bucket (rate = the
+    fair share the parent last granted) and the parent's root bucket
+    (rate = the global cap), which bounds the aggregate during the
+    window between a demand change and the next rebalance.
+    """
+
+    def __init__(self, parent: "FairShareLimiter", name: str, weight: float):
+        self.parent = parent
+        self.name = name
+        self.weight = float(weight)
+        self.backlog = 0  # offered-load signal, maintained by add/sub_demand
+        self.bucket = TokenBucket(max(1e-6, parent.cap))
+        self.wait_total = 0.0
+
+    @property
+    def rate(self) -> float:
+        return self.bucket.rate
+
+    def add_demand(self, n: int) -> None:
+        self.parent._adjust_demand(self, int(n))
+
+    def sub_demand(self, n: int) -> None:
+        self.parent._adjust_demand(self, -int(n))
+
+    def acquire(self, n: int, cancel: Optional[CancelToken] = None) -> float:
+        if n <= 0:
+            return 0.0
+        # An acquire IS demand: a tenant that charges without having
+        # declared a backlog (sync flushes, resumes) must not starve on
+        # a stale zero-rate grant.
+        if self.backlog <= 0:
+            self.parent._adjust_demand(self, int(n))
+        waited = self.bucket.acquire(n, cancel)
+        waited += self.parent.root.acquire(n, cancel)
+        self.wait_total += waited
+        return waited
+
+
+class FairShareLimiter:
+    """Hierarchical token buckets: one global ``flush_bw_cap`` shared
+    by N tenants, split by weighted fair share of the *backlogged*
+    tenants (:func:`fair_share_rates` with demand = "wants the full
+    cap" while a tenant has queued flush bytes, 0 when idle).
+
+    Every demand transition rebalances the per-tenant bucket rates, so
+    an idle tenant's share is redistributed immediately and returns to
+    it on its next save.  The root bucket enforces the aggregate cap
+    even mid-transition.  This is the real-runtime twin of
+    ``sim.simulate_flush_shared``: both price tenant *i* exactly like a
+    single-job ``flush_bw_cap`` equal to its granted share.
+    """
+
+    def __init__(self, cap: float):
+        if cap <= 0:
+            raise ValueError("FairShareLimiter cap must be positive")
+        self.cap = float(cap)
+        self.root = TokenBucket(self.cap)
+        self._lock = threading.Lock()
+        self._tenants: Dict[str, TenantLimiter] = {}
+
+    def register(self, name: str, weight: float = 1.0) -> TenantLimiter:
+        if weight <= 0:
+            raise ValueError("tenant weight must be positive")
+        with self._lock:
+            if name in self._tenants:
+                raise ValueError(f"tenant {name!r} already registered")
+            t = TenantLimiter(self, name, weight)
+            self._tenants[name] = t
+            self._rebalance_locked()
+        return t
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            self._tenants.pop(name, None)
+            self._rebalance_locked()
+
+    def rate_of(self, name: str) -> float:
+        return self._tenants[name].rate
+
+    def tenants(self) -> List[str]:
+        with self._lock:
+            return list(self._tenants)
+
+    def _adjust_demand(self, t: TenantLimiter, delta: int) -> None:
+        with self._lock:
+            was = t.backlog > 0
+            t.backlog = max(0, t.backlog + delta)
+            if (t.backlog > 0) != was:
+                self._rebalance_locked()
+
+    def _rebalance_locked(self) -> None:
+        ts = list(self._tenants.values())
+        if not ts:
+            return
+        weights = [t.weight for t in ts]
+        demands = [self.cap if t.backlog > 0 else 0.0 for t in ts]
+        rates = fair_share_rates(weights, demands, self.cap)
+        total_w = sum(weights)
+        for t, r in zip(ts, rates):
+            if r <= 0:
+                # Idle standby trickle: first post-idle bytes flow at a
+                # token share until the implicit-demand bump rebalances.
+                r = self.cap * (t.weight / total_w) * 1e-3
+            t.bucket.set_rate(r)
+
 
 class FlushJournal:
     """Append-only columnar progress cursor for one step's flush.

@@ -93,6 +93,44 @@ class ServeFleet:
         self._stop = threading.Event()
         self._wake = threading.Event()
         self._subscribed: Optional[Callable[[int], None]] = None
+        # Control-plane attachment (multi-tenant runs): set by
+        # via_control_plane(); the follower then subscribes through the
+        # plane's per-tenant event surface instead of the raw manager.
+        self._plane: Optional[Any] = None
+        self._job: Optional[str] = None
+
+    @classmethod
+    def via_control_plane(
+        cls,
+        model: Any,
+        plane: Any,
+        job: str,
+        params_template: Any,
+        *,
+        prefix: str = "['params']",
+        cfg: FleetConfig = FleetConfig(),
+        sharding_fn: Optional[Callable[[str, Any], Any]] = None,
+    ) -> "ServeFleet":
+        """Build a fleet that serves one *tenant* of a
+        :class:`~repro.control.ControlPlane`.
+
+        The manager handle is resolved through the plane's registry
+        (``plane.manager(job)``) and the hot-swap follower subscribes
+        via ``plane.subscribe(job, ...)`` — the fleet never owns a
+        private manager, so the tenant's quotas, shared breaker state
+        and admission budget all apply to the serving path's reads and
+        the training path's flushes alike."""
+        fleet = cls(
+            model,
+            plane.manager(job),
+            params_template,
+            prefix=prefix,
+            cfg=cfg,
+            sharding_fn=sharding_fn,
+        )
+        fleet._plane = plane
+        fleet._job = job
+        return fleet
 
     # ------------------------------------------------------------ cold start
 
@@ -226,7 +264,9 @@ class ServeFleet:
             self._wake.set()
 
         self._subscribed = on_flush_done
-        if hasattr(self.manager, "subscribe"):
+        if self._plane is not None:
+            self._plane.subscribe(self._job, on_flush_done)
+        elif hasattr(self.manager, "subscribe"):
             self.manager.subscribe(on_flush_done)
 
         deferred = False  # degraded-mode notice logged once per outage
@@ -310,7 +350,9 @@ class ServeFleet:
             self._follower = None
         finally:
             if self._subscribed is not None:
-                if hasattr(self.manager, "unsubscribe"):
+                if self._plane is not None:
+                    self._plane.unsubscribe(self._job, self._subscribed)
+                elif hasattr(self.manager, "unsubscribe"):
                     self.manager.unsubscribe(self._subscribed)
                 self._subscribed = None
 

@@ -43,7 +43,15 @@ Per-file schema (top level: ``benchmark`` string + non-empty ``rows``):
   device ``precodec_save`` row of the largest geometry must record the
   blocking-window bar ``speedup >= 2``; every ``dirty_parity`` row
   stored bytes within 1% of the host delta path; ``restore_equivalence``
-  rows identical across all five aggregation strategies.
+  rows identical across all five aggregation strategies;
+* ``BENCH_control.json`` — the multi-tenant control-plane replay
+  (ISSUE 10): a full (non-quick) trace of >= 100 clients across >= 8
+  tenants with zero failed saves and byte-identical restores; the
+  equal-weight ``fairness`` row's Jain index >= 0.9; the
+  ``utilization`` row >= 0.8x the unarbitrated baseline; the
+  ``preemption`` row with >= 1 preemption, the budget never exceeded
+  and the victim's parked flush drained; the ``tenant_chaos`` row with
+  the non-victim tenant unharmed.
 
 Exit code 0 = all good; 1 = any file missing/malformed (messages on
 stderr).  Run as ``python tools/bench_check.py [root]``.
@@ -95,6 +103,10 @@ EXPECTED = {
     ),
     "BENCH_precodec.json": (
         "precodec_device",
+        set(),  # rows are heterogeneous; per-kind fields checked below
+    ),
+    "BENCH_control.json": (
+        "control_plane",
         set(),  # rows are heterogeneous; per-kind fields checked below
     ),
 }
@@ -175,6 +187,25 @@ PRECODEC_KIND_FIELDS = {
                             "byte_identical"},
 }
 
+CONTROL_KIND_FIELDS = {
+    "replay": {"n_tenants", "n_clients", "n_saves", "failed_saves",
+               "byte_identical", "p50_blocking_save_s",
+               "p99_blocking_save_s", "elapsed_s"},
+    "fairness": {"n_tenants", "weights", "flush_bw_cap_mbps",
+                 "per_tenant_bytes", "per_tenant_mbps", "jain_index"},
+    "utilization": {"n_tenants", "total_bytes", "baseline_mbps",
+                    "control_mbps", "utilization_frac"},
+    "preemption": {"budget", "max_held", "budget_exceeded", "preemptions",
+                   "victim_final_status", "byte_identical"},
+    "tenant_chaos": {"victim", "other_failed_saves", "other_flush_errors",
+                     "other_giveups", "drained", "drain_priority_ok",
+                     "byte_identical"},
+    "control_summary": {"n_tenants", "n_clients", "failed_saves",
+                        "byte_identical", "p99_blocking_save_s",
+                        "jain_index", "utilization_frac", "preemptions",
+                        "budget_exceeded", "chaos_isolated", "quick"},
+}
+
 ALL_STRATEGIES = {
     "file_per_process", "posix", "mpiio", "stripe_aligned", "gio_sync"
 }
@@ -191,6 +222,10 @@ RESUME_REWRITE_BAR = 0.25       # rewrite_frac < this (ISSUE 5b)
 CHAOS_MIN_SCHEDULES = 100       # full-sweep size floor (ISSUE 6)
 CHAOS_REPAIR_BAR = 0.95         # repair_success_frac >= this (ISSUE 6)
 SERVE_MIN_RANKS = 1024          # largest ttft geometry floor (ISSUE 7)
+CONTROL_MIN_CLIENTS = 100       # replay trace size floor (ISSUE 10)
+CONTROL_MIN_TENANTS = 8         # replay tenant floor (ISSUE 10)
+CONTROL_JAIN_BAR = 0.9          # equal-weight fairness floor (ISSUE 10)
+CONTROL_UTILIZATION_BAR = 0.8   # arbitrated vs unarbitrated MB/s (ISSUE 10)
 
 
 def fail(msg: str, errors: list) -> None:
@@ -217,7 +252,7 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
         need = set(fields)
         if benchmark in ("restore_scale", "codec_phase", "flush_runtime",
                          "chaos", "serve_fleet", "outage", "kernel_bench",
-                         "precodec_device"):
+                         "precodec_device", "control_plane"):
             kinds = {
                 "restore_scale": RESTORE_KIND_FIELDS,
                 "codec_phase": CODEC_KIND_FIELDS,
@@ -227,6 +262,7 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
                 "outage": OUTAGE_KIND_FIELDS,
                 "kernel_bench": KERNEL_KIND_FIELDS,
                 "precodec_device": PRECODEC_KIND_FIELDS,
+                "control_plane": CONTROL_KIND_FIELDS,
             }[benchmark]
             kind = row.get("kind")
             if kind not in kinds:
@@ -301,6 +337,9 @@ def check_file(path: Path, benchmark: str, fields: set, errors: list) -> None:
 
     if benchmark == "outage" and not errors:
         check_outage(path, rows, errors)
+
+    if benchmark == "control_plane" and not errors:
+        check_control(path, rows, errors)
 
     if benchmark == "chaos" and not errors:
         sched = [r for r in rows if r.get("kind") == "schedule"]
@@ -519,6 +558,64 @@ def check_outage(path: Path, rows: list, errors: list) -> None:
             )
     if s["n_violations"] or not s["all_byte_identical"]:
         fail(f"{path.name}: summary records violations", errors)
+
+
+def check_control(path: Path, rows: list, errors: list) -> None:
+    summaries = [r for r in rows if r.get("kind") == "control_summary"]
+    if len(summaries) != 1:
+        return fail(
+            f"{path.name}: want exactly one control_summary row, "
+            f"got {len(summaries)}", errors,
+        )
+    s = summaries[0]
+    if s["quick"]:
+        fail(f"{path.name}: committed replay must be a full run, not --quick",
+             errors)
+    if (s["n_clients"] < CONTROL_MIN_CLIENTS
+            or s["n_tenants"] < CONTROL_MIN_TENANTS):
+        fail(
+            f"{path.name}: trace {s['n_clients']} clients / "
+            f"{s['n_tenants']} tenants below the "
+            f"{CONTROL_MIN_CLIENTS}/{CONTROL_MIN_TENANTS} floor", errors,
+        )
+    if s["failed_saves"]:
+        fail(f"{path.name}: {s['failed_saves']} failed save(s) (bar: zero)",
+             errors)
+    if not s["byte_identical"]:
+        fail(f"{path.name}: replay restores are not byte-identical", errors)
+    if s["jain_index"] < CONTROL_JAIN_BAR:
+        fail(
+            f"{path.name}: equal-weight Jain index {s['jain_index']} < "
+            f"{CONTROL_JAIN_BAR} bar", errors,
+        )
+    if s["utilization_frac"] < CONTROL_UTILIZATION_BAR:
+        fail(
+            f"{path.name}: aggregate utilization {s['utilization_frac']} < "
+            f"{CONTROL_UTILIZATION_BAR}x the unarbitrated baseline", errors,
+        )
+    if s["budget_exceeded"]:
+        fail(f"{path.name}: cluster admission budget was exceeded", errors)
+    if s["preemptions"] < 1:
+        fail(f"{path.name}: no preemption was ever exercised", errors)
+    if not s["chaos_isolated"]:
+        fail(
+            f"{path.name}: the tenant_chaos scenario harmed the non-victim "
+            "tenant", errors,
+        )
+    for r in rows:
+        if r.get("kind") == "preemption":
+            if r["victim_final_status"] != "flush_done":
+                fail(
+                    f"{path.name}: preempted flush ended "
+                    f"{r['victim_final_status']!r}, want 'flush_done'", errors,
+                )
+            if not r["byte_identical"]:
+                fail(f"{path.name}: preempted step restore mismatch", errors)
+        if r.get("kind") == "tenant_chaos" and not r["drain_priority_ok"]:
+            fail(
+                f"{path.name}: post-heal drain did not honor priority order",
+                errors,
+            )
 
 
 def main() -> int:
